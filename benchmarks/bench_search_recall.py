@@ -1,0 +1,48 @@
+"""Fig. 14b — performance across recall targets at top-10.
+
+Sweeps nprobe to trace the recall/QPS frontier for the batched clustered
+scan (Helmsman path) and the fixed-eps baseline; graph baseline evaluated at
+matched beams.  Compute measured; I/O modeled (common.IO_MODEL).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distance import recall_at_k
+from repro.core.search import SearchConfig, serve_step
+
+from .common import (
+    emit, get_bench_index, io_time_clustered, save_result, time_fn,
+)
+
+
+def run() -> dict:
+    bi = get_bench_index()
+    qj = jnp.asarray(bi.q)
+    tj = jnp.full((bi.q.shape[0],), 10, jnp.int32)
+    b = bi.q.shape[0]
+    frontier = []
+    for nprobe in (2, 4, 8, 16, 32, 64):
+        cfg = SearchConfig(k=10, nprobe_max=nprobe, pruning="none",
+                           use_kernel=False)
+        fn = jax.jit(lambda q, t: serve_step(bi.index, None, q, t, cfg))
+        out = fn(qj, tj)
+        secs = time_fn(fn, qj, tj)
+        r = recall_at_k(np.asarray(out["ids"]), bi.true10)
+        t_io = io_time_clustered(nprobe, "spdk")
+        frontier.append(dict(nprobe=nprobe, recall=r,
+                             compute_us=secs / b * 1e6, io_us=t_io * 1e6,
+                             qps_per_core=1 / (secs / b + t_io)))
+    payload = {"frontier": frontier}
+    save_result("search_recall", payload)
+    for row in frontier:
+        emit(f"recall_frontier.np{row['nprobe']}",
+             row["compute_us"] + row["io_us"],
+             f"recall={row['recall']:.3f};qps/core={row['qps_per_core']:.0f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

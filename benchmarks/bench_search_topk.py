@@ -1,0 +1,136 @@
+"""Fig. 14a / 15 / 16 — throughput + mean/P99.9 latency across top-k, at a
+90% recall target, for Helmsman vs SPANN(fixed-eps) vs the graph baseline.
+
+Compute latencies are measured on this container; the SSD term is modeled
+per benchmarks/common.IO_MODEL and reported separately so the measured and
+modeled parts are never conflated.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.search import SearchConfig, serve_step
+
+from .common import (
+    emit, get_bench_index, io_time_clustered, io_time_graph, recall10,
+    save_result, time_fn,
+)
+
+TOPKS = (10, 50, 100)
+RECALL_TARGET = 0.9
+
+
+def _clustered(bi, k, pruning, llsp, nprobe_max, eps=0.12, use_kernel=False):
+    cfg = SearchConfig(k=k, nprobe_max=nprobe_max, pruning=pruning, eps=eps,
+                       n_ratio=16, use_kernel=use_kernel)
+    qj = jnp.asarray(bi.q)
+    tj = jnp.full((bi.q.shape[0],), k, jnp.int32)
+    fn = jax.jit(lambda q, t: serve_step(bi.index, llsp, q, t, cfg))
+    out = fn(qj, tj)
+    secs = time_fn(fn, qj, tj)
+    return out, secs
+
+
+def run() -> dict:
+    bi = get_bench_index()
+    xj = jnp.asarray(bi.x)
+    qj = jnp.asarray(bi.q)
+    b = bi.q.shape[0]
+    rows = []
+    # graph baseline built once
+    from repro.core.graph_baseline import batch_search, build_nsw_graph
+    g = build_nsw_graph(bi.x[:10_000], degree=24)   # graph build is O(N^2/chunk)
+    _, tg_small = brute_force_topk(jnp.asarray(bi.x[:10_000]), qj, 100)
+    tg_small = np.asarray(tg_small)
+
+    from repro.core.search import serve_leveled
+    for k in TOPKS:
+        _, true_k = brute_force_topk(xj, qj, k)
+        true_k = np.asarray(true_k)
+
+        # ---- Helmsman: LLSP (leveled engine) + SPDK stack -----------------
+        scfg = SearchConfig(k=k, nprobe_max=64, pruning="llsp", n_ratio=16,
+                            use_kernel=False)
+        tj = np.full((b,), k, np.int32)
+        fn = lambda _=None: serve_leveled(bi.index, bi.llsp, bi.q, tj, scfg)
+        out = fn()
+        secs = time_fn(fn, None)
+        r_helms = recall_at_k(np.asarray(out["ids"]), true_k)
+        probes = float(np.asarray(out["nprobe"]).mean())
+        t_io = io_time_clustered(probes, "spdk")
+        rows.append(dict(system="helmsman", topk=k, recall=r_helms,
+                         compute_us=secs / b * 1e6, probes=probes,
+                         io_us=t_io * 1e6,
+                         qps_io_bound=170e3 / probes,
+                         qps_per_core=1.0 / (secs / b + t_io)))
+
+        # ---- SPANN: fixed-eps + libaio stack (matched recall) -------------
+        best = None
+        for eps in (0.05, 0.1, 0.2, 0.4, 0.8):
+            out, secs = _clustered(bi, k, "fixed", None, 64, eps=eps)
+            r = recall_at_k(np.asarray(out["ids"]), true_k)
+            probes = float(np.asarray(out["nprobe"]).mean())
+            t_io = io_time_clustered(probes, "libaio")
+            best = dict(system="spann", topk=k, recall=r,
+                        compute_us=secs / b * 1e6, probes=probes,
+                        io_us=t_io * 1e6,
+                        qps_io_bound=35e3 / probes,
+                        qps_per_core=1.0 / (secs / b + t_io))
+            if r >= min(RECALL_TARGET, r_helms):  # match Helmsman's quality
+                break
+        rows.append(best)
+
+        # ---- graph baseline (DiskANN-style beam; 10k subset) --------------
+        # beam swept until the recall target (greedy walks lengthen with
+        # top-k — the paper's Fig. 14a observation)
+        import time as _t
+        kq = min(k, 100)
+        n_eval = 64
+        for beam in (max(2 * kq, 32), max(4 * kq, 64), max(8 * kq, 128)):
+            lat, hops_all, hits = [], [], 0
+            for i in range(n_eval):
+                t0 = _t.perf_counter()
+                ids, st = batch_search(g, bi.q[i:i + 1], kq, beam=beam)
+                lat.append(_t.perf_counter() - t0)
+                hops_all.append(st.hops)
+                hits += len(set(ids[0].tolist()) & set(tg_small[i, :kq].tolist()))
+            if hits / (n_eval * kq) >= RECALL_TARGET:
+                break
+        lat = np.asarray(lat)
+        hops = float(np.mean(hops_all))
+        t_io = io_time_graph(int(hops), 0)
+        rows.append(dict(system="graph", topk=k, recall=hits / (n_eval * kq),
+                         compute_us=float(lat.mean() * 1e6), probes=hops,
+                         io_us=t_io * 1e6,
+                         compute_p999_us=float(np.quantile(lat, 0.999) * 1e6),
+                         qps_io_bound=1.0 / t_io,   # latency-chained reads
+                         qps_per_core=1.0 / (float(lat.mean()) + t_io)))
+
+    # headline ratios (paper: 2-16x over DRAM-SSD baselines); the io_bound
+    # ratio is the SSD-saturated regime of the paper's 96-core/12-SSD node
+    by = {(r["system"], r["topk"]): r for r in rows if r}
+    ratios = {}
+    for k in TOPKS:
+        h, s, gq = (by[("helmsman", k)], by[("spann", k)], by[("graph", k)])
+        ratios[k] = {
+            "vs_spann": h["qps_per_core"] / s["qps_per_core"],
+            "vs_graph": h["qps_per_core"] / gq["qps_per_core"],
+            "io_bound_vs_spann": h["qps_io_bound"] / s["qps_io_bound"],
+            "io_bound_vs_graph": h["qps_io_bound"] / gq["qps_io_bound"],
+        }
+    payload = {"rows": rows, "ratios": ratios, "recall_target": RECALL_TARGET}
+    save_result("search_topk", payload)
+    for r in rows:
+        if r:
+            emit(f"search.{r['system']}.top{r['topk']}",
+                 r["compute_us"] + r["io_us"],
+                 f"recall={r['recall']:.3f};qps/core={r['qps_per_core']:.0f}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

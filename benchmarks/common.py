@@ -1,0 +1,129 @@
+"""Shared benchmark infrastructure.
+
+Scale note: the container is one CPU core, so the corpus is scaled to
+30k x 32-d (SIFT100M-shaped: clustered, same cluster_len/replication as the
+paper's setup) and ALL compute-side numbers are real measurements.  The SSD
+term cannot be measured here; it is modeled with the PAPER'S OWN measured
+service rates (Fig. 9b) and device specs (Table 1), clearly split out in
+every result row:
+
+  I/O model (per search thread / core):
+    libaio   ~35 KIOPS   (SPANN's stack, Fig. 9a/9b)
+    io_uring ~60 KIOPS
+    spdk    ~170 KIOPS   (Helmsman's stack; meets the 120-170 KIOPS need)
+    read latency (Gen5, 12 KB) ~ 100 us  — multiplies the HOP count of
+    graph traversal (dependency-chained reads, §3.2); clustering reads are
+    dependency-free so they are throughput- not latency-bound.
+
+Every bench writes JSON under results/bench/ and prints a CSV row
+``name,us_per_call,derived`` (benchmarks/run.py aggregates them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results", "bench")
+CACHE = os.path.join(ROOT, "results", "bench_cache")
+
+IO_MODEL = {
+    "libaio_kiops": 35e3,
+    "io_uring_kiops": 60e3,
+    "spdk_kiops": 170e3,
+    "read_latency_s": 100e-6,      # dependency-chained read (graph hop)
+    "cluster_pages": 3,            # 12 KB cluster list = 3 x 4 KB LBAs
+    "gen4_over_gen5_bw": 6.5 / 12.0,
+}
+
+
+@dataclasses.dataclass
+class BenchIndex:
+    index: object
+    llsp: object
+    x: np.ndarray
+    q: np.ndarray
+    topk: np.ndarray
+    true10: np.ndarray
+    true100: np.ndarray
+
+
+_CACHED: Optional[BenchIndex] = None
+
+
+def get_bench_index(n: int = 30_000, dim: int = 32, n_queries: int = 512) -> BenchIndex:
+    """Build (or resume from results/bench_cache) the benchmark index."""
+    global _CACHED
+    if _CACHED is not None:
+        return _CACHED
+    import dataclasses as dc
+    from repro.build.pipeline import BuildConfig, build_index
+    from repro.core.ivf import brute_force_topk
+    from repro.core.llsp import LLSPConfig
+    from repro.data import PAPER_DATASETS, make_queries, make_vectors
+
+    os.makedirs(CACHE, exist_ok=True)
+    spec = dc.replace(PAPER_DATASETS["sift"], n=n, dim=dim, n_modes=48)
+    x = make_vectors(spec)
+    q, topk = make_queries(spec, n_queries)
+    topk = np.minimum(topk, 100).astype(np.int32)
+    cfg = BuildConfig(
+        max_cluster_size=96, cluster_len=128, coarse_per_task=6000,
+        n_workers=2, closure_eps=0.2,
+        llsp=LLSPConfig(levels=(8, 16, 32, 64), recall_target=0.9,
+                        n_ratio_features=16, n_trees=50, max_depth=5),
+    )
+    idx, llsp, _ = build_index(x, cfg, os.path.join(CACHE, "bench_index"),
+                               queries=q, query_topk=topk)
+    _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+    _, t100 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 100)
+    _CACHED = BenchIndex(idx, llsp, x, q, topk,
+                         np.asarray(t10), np.asarray(t100))
+    return _CACHED
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds of fn(*args) (jax results block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def recall10(ids: np.ndarray, true10: np.ndarray) -> float:
+    from repro.core.distance import recall_at_k
+    return recall_at_k(ids[:, :10], true10)
+
+
+def io_time_clustered(n_probes: float, stack: str) -> float:
+    """Batched dependency-free reads: service-rate bound (per core)."""
+    return n_probes / IO_MODEL[f"{stack}_kiops"]
+
+
+def io_time_graph(hops: int, beam_reads: int) -> float:
+    """Dependency-chained rounds x read latency (beam reads within a round
+    are parallel, so rounds dominate)."""
+    return hops * IO_MODEL["read_latency_s"]

@@ -1,0 +1,94 @@
+"""§Roofline — build the per-(arch x shape x mesh) roofline table from the
+dry-run JSON records (results/dryrun/*.json).
+
+Terms (per spec, TPU v5e):
+  compute    = HLO_FLOPs(per-chip, trip-corrected) / 197e12
+  memory     = HLO_bytes(per-chip)                 / 819e9
+  collective = collective_bytes(per-chip)          / 50e9
+plus MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+Emits markdown (for EXPERIMENTS.md) and a machine-readable summary.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import ROOT, save_result, emit
+
+DRYRUN = os.path.join(ROOT, "results", "dryrun")
+
+
+def load_records():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(recs, mesh="single") -> str:
+    lines = [
+        "| arch | shape | variant | compute | memory | collective | dominant | "
+        "useful% | MODEL_FLOPS | status |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        var = r.get("variant", "base")
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                f"SKIP: {r['skipped'][:60]}… |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {var} | — | — | — "
+                         f"| — | — | — | FAIL |")
+            continue
+        rt = r["roofline"]
+        useful = r.get("useful_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {var} | {fmt_s(rt['compute_s'])} | "
+            f"{fmt_s(rt['memory_s'])} | {fmt_s(rt['collective_s'])} | "
+            f"{rt['dominant']} | "
+            f"{'' if useful is None else f'{min(useful,9.99)*100:.0f}%'} | "
+            f"{r['model_flops']:.2e} | ok |")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    md = "## Single-pod (16x16)\n\n" + table(recs, "single") + \
+         "\n\n## Multi-pod (2x16x16)\n\n" + table(recs, "multi")
+    out_md = os.path.join(ROOT, "results", "roofline_table.md")
+    with open(out_md, "w") as f:
+        f.write(md)
+    payload = {
+        "n_cells": len(recs), "n_ok": len(ok),
+        "n_skip": sum(1 for r in recs if r.get("skipped")),
+        "n_fail": sum(1 for r in recs if r.get("ok") is False),
+        "dominant_counts": doms,
+        "table_md": out_md,
+    }
+    save_result("roofline", payload)
+    emit("roofline.cells", 0.0,
+         f"ok={payload['n_ok']};skip={payload['n_skip']};"
+         f"fail={payload['n_fail']};dom={doms}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

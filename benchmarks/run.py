@@ -1,0 +1,59 @@
+"""Benchmark driver — one harness per paper table/figure.
+
+  bench_search_topk     Fig 14a / 15 / 16
+  bench_search_recall   Fig 14b
+  bench_bandwidth       Fig 18
+  bench_pruning         Fig 19 / 20 / Tab 3
+  bench_construction    Fig 13 / 21
+  bench_cost            Tab 4 / 5 / 6
+  roofline              §Roofline table from results/dryrun
+
+Prints ``name,us_per_call,derived`` CSV rows; JSON under results/bench/.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_bandwidth,
+        bench_construction,
+        bench_cost,
+        bench_pruning,
+        bench_search_recall,
+        bench_search_topk,
+        roofline,
+    )
+
+    benches = [
+        ("search_topk", bench_search_topk.run),
+        ("search_recall", bench_search_recall.run),
+        ("bandwidth", bench_bandwidth.run),
+        ("pruning", bench_pruning.run),
+        ("construction", bench_construction.run),
+        ("cost", bench_cost.run),
+        ("roofline", roofline.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in benches:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+            print(f"# {name} done in {time.perf_counter()-t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        raise SystemExit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

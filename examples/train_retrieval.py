@@ -1,0 +1,119 @@
+"""Retrieval-model + Helmsman integration (paper §2.1 Rec/Ads pipeline).
+
+Trains a reduced MIND multi-interest retrieval model for a few hundred steps
+on synthetic click logs, exports the learned item-embedding table, builds a
+Helmsman index OVER THE LEARNED EMBEDDINGS (this is exactly the paper's
+"embedding models are updated in batches ... up to ten thousand index
+rebuilds per day" flow), and serves multi-interest retrieval through the IVF
+engine, comparing recall and probe cost against exhaustive scoring.
+
+    PYTHONPATH=src python examples/train_retrieval.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.build.pipeline import BuildConfig, build_index
+from repro.core.distance import recall_at_k
+from repro.core.search import SearchConfig, serve_step
+from repro.data import recsys_batch
+from repro.models.recsys import RecSysConfig, init_params, make_train_step
+from repro.models.recsys.models import capsule_routing, retrieval_scores
+from repro.optim import adamw
+
+
+def make_structured_batch(b, n_items, seq_len, n_groups=32, seed=0):
+    """Synthetic logs with latent interest groups: each user draws history
+    from a few groups; the label is 1 iff the target item belongs to one of
+    the user's groups — so MIND must learn the group structure."""
+    rng = np.random.default_rng(seed)
+    group_of = np.arange(n_items) % n_groups
+    user_groups = rng.integers(0, n_groups, size=(b, 3))
+    hist = np.empty((b, seq_len), np.int32)
+    for i in range(b):
+        gs = user_groups[i][rng.integers(0, 3, seq_len)]
+        hist[i] = gs + n_groups * rng.integers(0, n_items // n_groups, seq_len)
+    pos = rng.random(b) < 0.5
+    target = np.where(
+        pos,
+        user_groups[np.arange(b), rng.integers(0, 3, b)]
+        + n_groups * rng.integers(0, n_items // n_groups, b),
+        rng.integers(0, n_items, b),
+    ).astype(np.int32)
+    labels = (group_of[target][:, None] == user_groups).any(1).astype(np.float32)
+    return {"sparse_ids": target[:, None], "hist_ids": hist,
+            "hist_len": np.full(b, seq_len, np.int32), "labels": labels}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--items", type=int, default=8192)
+    args = ap.parse_args()
+
+    cfg = RecSysConfig("mind", "mind", n_sparse=1, embed_dim=32,
+                       table_rows=args.items, seq_len=20, n_interests=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # retrieval towers need O(1)-norm embeddings: the capsule squash kills
+    # gradients at tiny norms (default table init is 1/sqrt(rows))
+    params["table"] = params["table"] * (0.5 * np.sqrt(args.items) / np.sqrt(cfg.embed_dim))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, weight_decay=0.0)
+    step = jax.jit(make_train_step(cfg, opt_cfg=opt_cfg))
+    opt = adamw.init(params)
+
+    t0 = time.perf_counter()
+    for s in range(args.steps):
+        batch = make_structured_batch(256, args.items, cfg.seq_len, seed=s)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step(params, opt, batch)
+        if s % 50 == 0:
+            print(f"[train] step {s:4d} loss={float(m['loss']):.4f} "
+                  f"({time.perf_counter()-t0:.1f}s)")
+    print(f"[train] {args.steps} steps in {time.perf_counter()-t0:.1f}s "
+          f"(final loss {float(m['loss']):.3f})")
+
+    # ---- daily-rebuild flow: index the LEARNED item embeddings ------------
+    items = np.asarray(params["table"], dtype=np.float32)
+    bcfg = BuildConfig(max_cluster_size=64, cluster_len=96,
+                       coarse_per_task=2048, n_workers=2)
+    # training queries for LLSP: user interest vectors from real batches
+    qs = []
+    for s in range(4):
+        b = make_structured_batch(64, args.items, cfg.seq_len, seed=999 + s)
+        hist = jnp.asarray(params["table"])[jnp.asarray(b["hist_ids"])]
+        hmask = jnp.arange(cfg.seq_len)[None, :] < jnp.asarray(b["hist_len"])[:, None]
+        interests = capsule_routing(hist, hmask, params["bilinear"], cfg)
+        qs.append(np.asarray(interests).reshape(-1, cfg.embed_dim))
+    queries = np.concatenate(qs)
+    with tempfile.TemporaryDirectory() as wd:
+        t0 = time.perf_counter()
+        index, _, report = build_index(items, bcfg, wd)
+        print(f"[rebuild] {report.n_clusters} clusters over learned "
+              f"embeddings in {time.perf_counter()-t0:.1f}s")
+
+        # ---- serve: each interest vector is a Helmsman query --------------
+        k = 50
+        qj = jnp.asarray(queries[:256])
+        out = serve_step(index, None, qj,
+                         jnp.full((256,), k, jnp.int32),
+                         SearchConfig(k=k, nprobe_max=32, pruning="fixed",
+                                      eps=0.2, use_kernel=False))
+        # exhaustive oracle over all items
+        _, oracle_ids = retrieval_scores(qj, jnp.asarray(items), k=k)
+        # retrieval_scores ranks by dot; Helmsman by L2 — compare on L2 truth
+        from repro.core.ivf import brute_force_topk
+        _, true_ids = brute_force_topk(jnp.asarray(items), qj, k)
+        r = recall_at_k(np.asarray(out["ids"]), np.asarray(true_ids))
+        scanned = float(np.asarray(out["nprobe"]).mean()) * index.cluster_len
+        print(f"[serve] interest-query recall@{k} = {r:.3f} scanning "
+              f"{scanned:.0f}/{args.items} items "
+              f"({scanned/args.items:.1%} of an exhaustive scan)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .ivf import IVFIndex, brute_force_topk, build_postings, search_flat
+from .search import (
+    SearchConfig,
+    make_sharded_serve,
+    make_sharded_serve_quantized,
+    serve_leveled,
+    serve_step,
+)
+from .llsp import LLSPConfig, LLSPParams, train_llsp
+from .gbdt import GBDTParams, GBDTRegressor
+from .quantize import QuantizedPostings, quantize_postings

@@ -1,0 +1,96 @@
+"""Distance utilities shared by the ANNS core.
+
+All distances are squared L2 (the paper's similarity metric is L2; squared L2
+is order-preserving and cheaper — one fused matmul on the MXU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def squared_l2(a: Array, b: Array) -> Array:
+    """Pairwise squared L2 distances.
+
+    a: (N, D), b: (M, D) -> (N, M).  Uses the ||a||^2 - 2ab + ||b||^2 expansion
+    so the inner term is a single MXU matmul.
+    """
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)          # (N, 1)
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T        # (1, M)
+    ab = a @ b.T                                         # (N, M) — MXU
+    d = a2 - 2.0 * ab + b2
+    return jnp.maximum(d, 0.0)
+
+
+def squared_l2_chunked(a: Array, b: Array, chunk: int = 4096) -> Array:
+    """Memory-bounded pairwise distances for large M (scan over b-chunks)."""
+    m = b.shape[0]
+    if m <= chunk:
+        return squared_l2(a, b)
+    pad = (-m) % chunk
+    bp = jnp.pad(b, ((0, pad), (0, 0)), constant_values=0.0)
+    nb = bp.shape[0] // chunk
+    bc = bp.reshape(nb, chunk, b.shape[1])
+
+    def body(_, bi):
+        return None, squared_l2(a, bi)
+
+    _, out = jax.lax.scan(body, None, bc)                # (nb, N, chunk)
+    out = jnp.moveaxis(out, 0, 1).reshape(a.shape[0], nb * chunk)
+    return out[:, :m]
+
+
+def topk_smallest(d: Array, k: int) -> tuple[Array, Array]:
+    """Top-k smallest along the last axis -> (values, indices)."""
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx
+
+
+def dedup_topk(dists: Array, ids: Array, k: int) -> tuple[Array, Array]:
+    """Top-k smallest with duplicate-id suppression (closure assignment
+    duplicates vectors across clusters; the frontend merge must dedupe).
+
+    dists, ids: (..., n).  Sort by distance, then mask any id that already
+    appeared at a smaller distance.  Fully jittable (fixed shapes).
+    """
+    order = jnp.argsort(dists, axis=-1)
+    sd = jnp.take_along_axis(dists, order, axis=-1)
+    si = jnp.take_along_axis(ids, order, axis=-1)
+    # Mark duplicates: an element is a dup if the same id occurs earlier in the
+    # sorted order.  Sort (id, rank) pairs: stable-sort by id, then any element
+    # whose predecessor (in id order) shares its id AND has smaller rank is dup.
+    id_order = jnp.argsort(si, axis=-1, stable=True)     # ranks grouped by id
+    gid = jnp.take_along_axis(si, id_order, axis=-1)
+    prev_same = jnp.concatenate(
+        [jnp.zeros_like(gid[..., :1], dtype=bool), gid[..., 1:] == gid[..., :-1]],
+        axis=-1,
+    )
+    dup_sorted = prev_same  # stable sort keeps distance order within equal ids
+    dup = jnp.zeros_like(dup_sorted)
+    dup = jnp.put_along_axis(dup, id_order, dup_sorted, axis=-1, inplace=False)
+    sd = jnp.where(dup | (si < 0), jnp.inf, sd)
+    k_eff = min(k, sd.shape[-1])
+    vals, pos = topk_smallest(sd, k_eff)
+    out_ids = jnp.take_along_axis(si, pos, axis=-1)
+    out_ids = jnp.where(jnp.isinf(vals), -1, out_ids)
+    if k_eff < k:  # fewer candidates than requested: pad (inf, -1)
+        pad = k - k_eff
+        vals = jnp.pad(vals, [(0, 0)] * (vals.ndim - 1) + [(0, pad)],
+                       constant_values=jnp.inf)
+        out_ids = jnp.pad(out_ids, [(0, 0)] * (out_ids.ndim - 1) + [(0, pad)],
+                          constant_values=-1)
+    return vals, out_ids
+
+
+def recall_at_k(pred_ids, true_ids) -> float:
+    """Mean recall@k between (B, k) predicted ids and (B, k) ground truth."""
+    import numpy as np
+
+    pred_ids = np.asarray(pred_ids)
+    true_ids = np.asarray(true_ids)
+    hits = 0
+    for p, t in zip(pred_ids, true_ids):
+        hits += len(set(p.tolist()) & set(t.tolist()))
+    return hits / true_ids.size

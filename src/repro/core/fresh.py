@@ -1,0 +1,115 @@
+"""Freshness layer — the paper's §6.2 deployment design for updates.
+
+The paper rejects in-place updates (SPFresh/OdinANN-class systems cannot
+sustain 25-30 KOPS of updates concurrent with search) and instead deploys:
+
+  * the main SSD-resident clustered index, periodically REBUILT;
+  * recent insertions in an auxiliary in-memory index;
+  * deletions tracked by a tombstone bitmap;
+  * queries search both, merge candidates, filter tombstones;
+  * the rebuild folds the delta + drops tombstones, then swaps atomically.
+
+``FreshIndex`` implements exactly that contract.  The auxiliary index here
+is a brute-force buffer (at production delta sizes — minutes of inserts —
+brute force on-device IS the right auxiliary structure for a TPU: one
+matmul; the paper's HNSW/IVF choice is a CPU-ism).  All search paths are
+jit-compatible at fixed buffer capacity; host-side state (fill counters)
+lives outside jit like any serving system's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .distance import dedup_topk, squared_l2, topk_smallest
+from .ivf import IVFIndex, search_flat
+
+
+@dataclasses.dataclass
+class FreshIndex:
+    main: IVFIndex
+    capacity: int                    # delta-buffer slots
+    n_total: int                     # id space size of the main index
+    delta_vecs: jax.Array = None     # (capacity, D) f32
+    delta_ids: jax.Array = None      # (capacity,) int32, -1 = empty
+    tombstone: jax.Array = None      # (n_total + capacity,) bool
+    fill: int = 0
+    next_id: int = 0
+
+    def __post_init__(self):
+        d = self.main.dim
+        if self.delta_vecs is None:
+            self.delta_vecs = jnp.zeros((self.capacity, d), jnp.float32)
+        if self.delta_ids is None:
+            self.delta_ids = jnp.full((self.capacity,), -1, jnp.int32)
+        if self.tombstone is None:
+            self.tombstone = jnp.zeros((self.n_total + self.capacity,), bool)
+        self.next_id = max(self.next_id, self.n_total)
+
+    # -- updates (host-side bookkeeping + functional array updates) ----------
+    def insert(self, vecs: np.ndarray) -> np.ndarray:
+        """Append vectors to the delta buffer; returns their new ids.
+        Raises when the buffer is full — the signal to trigger a rebuild
+        (the paper's hourly/daily cadence)."""
+        n = vecs.shape[0]
+        if self.fill + n > self.capacity:
+            raise BufferError(
+                f"delta buffer full ({self.fill}+{n}>{self.capacity}): rebuild due")
+        ids = np.arange(self.next_id, self.next_id + n, dtype=np.int32)
+        self.delta_vecs = jax.lax.dynamic_update_slice(
+            self.delta_vecs, jnp.asarray(vecs, jnp.float32), (self.fill, 0))
+        self.delta_ids = jax.lax.dynamic_update_slice(
+            self.delta_ids, jnp.asarray(ids), (self.fill,))
+        self.fill += n
+        self.next_id += n
+        return ids
+
+    def delete(self, ids: np.ndarray) -> None:
+        self.tombstone = self.tombstone.at[jnp.asarray(ids)].set(True)
+
+    # -- search ---------------------------------------------------------------
+    def search(self, queries: jax.Array, k: int, nprobe: int):
+        """Merged search: main IVF + delta brute force, tombstones filtered.
+
+        Returns (dists (B,k), ids (B,k)).  Over-fetches k from each side so
+        tombstoned results cannot starve the merge."""
+        d_main, i_main = search_flat(self.main, queries, k, nprobe)
+        d_delta = squared_l2(queries, self.delta_vecs)          # (B, cap)
+        live_slot = self.delta_ids >= 0
+        d_delta = jnp.where(live_slot[None, :], d_delta, jnp.inf)
+        dd, pos = topk_smallest(d_delta, min(k, self.capacity))
+        di = self.delta_ids[pos]
+        alld = jnp.concatenate([d_main, dd], axis=1)
+        alli = jnp.concatenate([i_main, di], axis=1)
+        dead = self.tombstone[jnp.maximum(alli, 0)] | (alli < 0)
+        alld = jnp.where(dead, jnp.inf, alld)
+        return dedup_topk(alld, alli, k)
+
+    # -- rebuild (fold delta + drop tombstones, atomically swap) -------------
+    def fold_corpus(self, x_main: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize the rebuild corpus: live main vectors + live delta.
+        Returns (vectors, their ids in the old id space)."""
+        tomb = np.asarray(self.tombstone)
+        live_main = np.nonzero(~tomb[: self.n_total])[0]
+        dv = np.asarray(self.delta_vecs)[: self.fill]
+        di = np.asarray(self.delta_ids)[: self.fill]
+        live_delta = ~tomb[di]
+        vecs = np.concatenate([x_main[live_main], dv[live_delta]])
+        ids = np.concatenate([live_main, di[live_delta]])
+        return vecs.astype(np.float32), ids.astype(np.int32)
+
+
+def rebuild(fresh: FreshIndex, x_main: np.ndarray, build_cfg, workdir: str):
+    """Daily-rebuild flow: fold, rebuild with the 3-stage pipeline, swap.
+
+    Returns (new FreshIndex over a compacted id space, id_map old->new)."""
+    from repro.build.pipeline import build_index
+
+    vecs, old_ids = fresh.fold_corpus(x_main)
+    index, _, _ = build_index(vecs, build_cfg, workdir)
+    new = FreshIndex(main=index, capacity=fresh.capacity, n_total=vecs.shape[0])
+    return new, old_ids, vecs

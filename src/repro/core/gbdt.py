@@ -1,0 +1,235 @@
+"""Histogram gradient-boosted decision trees (the paper's LLSP model class).
+
+The paper trains LightGBM-style GBDTs offline (minute-level training, ~10-30us
+inference, hundreds of KB per model) for the router and per-level pruning
+models.  We implement the same model class from scratch:
+
+* ``GBDTRegressor.fit`` — numpy histogram gradient boosting (squared loss,
+  depth-wise greedy growth, quantile feature binning).  Offline/CPU, matching
+  the paper's offline training stage.
+* ``GBDTParams`` / ``predict_jax`` — flat-array tree ensemble whose inference
+  is pure JAX (gather-based descent, no control flow), so the router + pruning
+  models run *inside* the jitted serve_step.  Ensembles of identical shape can
+  be stacked (one ensemble per LLSP level) and indexed per query.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GBDTParams:
+    """Flat array encoding of a boosted ensemble.
+
+    Trees are stored as full implicit binary trees of depth ``max_depth``:
+    node i has children 2i+1 / 2i+2; leaves carry values.  ``feature`` < 0
+    marks a node that is already a leaf (its ``value`` is the prediction and
+    descent parks there).
+    """
+
+    feature: jax.Array    # (T, n_nodes) int32, -1 => leaf
+    threshold: jax.Array  # (T, n_nodes) f32
+    value: jax.Array      # (T, n_nodes) f32 (valid at leaves / early stops)
+    base: jax.Array       # () f32
+    lr: jax.Array         # () f32
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def max_depth(self) -> int:
+        n = self.feature.shape[1]
+        return int(np.log2(n + 1)) - 1
+
+
+def predict_jax(params: GBDTParams, x: jax.Array) -> jax.Array:
+    """Vectorized ensemble inference.  x: (B, F) -> (B,)."""
+    B = x.shape[0]
+    T, n_nodes = params.feature.shape
+    depth = int(np.log2(n_nodes + 1)) - 1
+    node = jnp.zeros((B, T), dtype=jnp.int32)
+    for _ in range(depth):
+        feat = params.feature[jnp.arange(T)[None, :], node]      # (B, T)
+        thr = params.threshold[jnp.arange(T)[None, :], node]
+        is_leaf = feat < 0
+        fv = jnp.take_along_axis(x, jnp.maximum(feat, 0), axis=1)  # (B, T)
+        go_left = fv <= thr
+        child = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
+        node = jnp.where(is_leaf, node, child)
+    val = params.value[jnp.arange(T)[None, :], node]             # (B, T)
+    return params.base + params.lr * jnp.sum(val, axis=1)
+
+
+def predict_stacked_jax(stacked: GBDTParams, level: jax.Array, x: jax.Array) -> jax.Array:
+    """Inference through a *stack* of ensembles (one per LLSP level).
+
+    stacked arrays have a leading level dim: feature (L, T, n_nodes)...
+    ``level``: (B,) int32 selects the ensemble per row.  Used so the per-level
+    pruning models run as one fused gather program instead of lax.switch.
+    """
+    B = x.shape[0]
+    L, T, n_nodes = stacked.feature.shape
+    depth = int(np.log2(n_nodes + 1)) - 1
+    t_idx = jnp.arange(T)[None, :]
+    node = jnp.zeros((B, T), dtype=jnp.int32)
+    lvl = level[:, None]                                         # (B, 1)
+    for _ in range(depth):
+        feat = stacked.feature[lvl, t_idx, node]                 # (B, T)
+        thr = stacked.threshold[lvl, t_idx, node]
+        is_leaf = feat < 0
+        fv = jnp.take_along_axis(x, jnp.maximum(feat, 0), axis=1)
+        go_left = fv <= thr
+        child = jnp.where(go_left, 2 * node + 1, 2 * node + 2)
+        node = jnp.where(is_leaf, node, child)
+    val = stacked.value[lvl, t_idx, node]
+    return stacked.base[level] + stacked.lr[level] * jnp.sum(val, axis=1)
+
+
+def stack_params(models: list[GBDTParams]) -> GBDTParams:
+    """Stack same-shaped ensembles along a new leading (level) axis."""
+    return GBDTParams(
+        feature=jnp.stack([m.feature for m in models]),
+        threshold=jnp.stack([m.threshold for m in models]),
+        value=jnp.stack([m.value for m in models]),
+        base=jnp.stack([m.base for m in models]),
+        lr=jnp.stack([m.lr for m in models]),
+    )
+
+
+class GBDTRegressor:
+    """Histogram GBDT with squared loss (LightGBM-flavored, numpy)."""
+
+    def __init__(
+        self,
+        n_trees: int = 100,
+        max_depth: int = 5,
+        lr: float = 0.2,
+        n_bins: int = 64,
+        min_samples_leaf: int = 8,
+        lambda_l2: float = 1.0,
+        seed: int = 0,
+    ):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.lr = lr
+        self.n_bins = n_bins
+        self.min_samples_leaf = min_samples_leaf
+        self.lambda_l2 = lambda_l2
+        self.seed = seed
+        self.params: Optional[GBDTParams] = None
+
+    # ---- binning -----------------------------------------------------------
+    def _make_bins(self, X: np.ndarray) -> np.ndarray:
+        qs = np.linspace(0, 1, self.n_bins + 1)[1:-1]
+        edges = np.quantile(X, qs, axis=0)                        # (B-1, F)
+        return np.ascontiguousarray(edges.T)                      # (F, B-1)
+
+    def _bin(self, X: np.ndarray) -> np.ndarray:
+        F = X.shape[1]
+        out = np.empty(X.shape, dtype=np.int32)
+        for f in range(F):
+            out[:, f] = np.searchsorted(self.bin_edges_[f], X[:, f], side="left")
+        return out
+
+    # ---- tree growth -------------------------------------------------------
+    def _fit_tree(self, binned: np.ndarray, g: np.ndarray):
+        """Depth-wise greedy growth on gradients g. Returns flat node arrays."""
+        n, F = binned.shape
+        B = self.n_bins
+        n_nodes = 2 ** (self.max_depth + 1) - 1
+        feature = np.full(n_nodes, -1, dtype=np.int32)
+        threshold = np.zeros(n_nodes, dtype=np.float32)
+        value = np.zeros(n_nodes, dtype=np.float32)
+
+        node_of = np.zeros(n, dtype=np.int64)                     # sample -> node
+        lam = self.lambda_l2
+        value[0] = g.sum() / (n + lam)
+
+        level_nodes = [0]
+        for depth in range(self.max_depth):
+            if not level_nodes:
+                break
+            # histograms for every active node x feature x bin in one pass
+            # flat key = node_slot * F * B + f * B + bin
+            slot = {nd: i for i, nd in enumerate(level_nodes)}
+            slots = np.array([slot.get(nd, -1) for nd in range(n_nodes)])
+            s = slots[node_of]                                    # (n,)
+            act = s >= 0
+            sa, ba, ga = s[act], binned[act], g[act]
+            S = len(level_nodes)
+            keys = (sa[:, None] * F + np.arange(F)[None, :]) * B + ba
+            hist_g = np.bincount(keys.ravel(), weights=np.repeat(ga, F),
+                                 minlength=S * F * B).reshape(S, F, B)
+            hist_n = np.bincount(keys.ravel(), minlength=S * F * B).reshape(S, F, B)
+
+            next_level: list[int] = []
+            csum_g = np.cumsum(hist_g, axis=2)
+            csum_n = np.cumsum(hist_n, axis=2)
+            for nd in level_nodes:
+                si = slot[nd]
+                tot_g = csum_g[si, 0, -1]
+                tot_n = csum_n[si, 0, -1]
+                if tot_n < 2 * self.min_samples_leaf:
+                    value[nd] = tot_g / (tot_n + lam) if tot_n else 0.0
+                    continue
+                gl = csum_g[si, :, :-1]                           # (F, B-1)
+                nl = csum_n[si, :, :-1]
+                gr = tot_g - gl
+                nr = tot_n - nl
+                valid = (nl >= self.min_samples_leaf) & (nr >= self.min_samples_leaf)
+                gain = gl * gl / (nl + lam) + gr * gr / (nr + lam) - tot_g * tot_g / (tot_n + lam)
+                gain = np.where(valid, gain, -np.inf)
+                fi, bi = np.unravel_index(np.argmax(gain), gain.shape)
+                if not np.isfinite(gain[fi, bi]) or gain[fi, bi] <= 1e-12:
+                    value[nd] = tot_g / (tot_n + lam)
+                    continue
+                feature[nd] = fi
+                edges = self.bin_edges_[fi]
+                threshold[nd] = edges[min(bi, len(edges) - 1)]
+                lc, rc = 2 * nd + 1, 2 * nd + 2
+                mask = (node_of == nd)
+                go_left = binned[mask, fi] <= bi
+                idx = np.where(mask)[0]
+                node_of[idx[go_left]] = lc
+                node_of[idx[~go_left]] = rc
+                value[lc] = gl[fi, bi] / (nl[fi, bi] + lam)
+                value[rc] = gr[fi, bi] / (nr[fi, bi] + lam)
+                next_level += [lc, rc]
+            level_nodes = next_level
+        return feature, threshold, value, node_of
+
+    # ---- boosting ----------------------------------------------------------
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GBDTRegressor":
+        X = np.asarray(X, dtype=np.float32)
+        y = np.asarray(y, dtype=np.float64)
+        self.bin_edges_ = self._make_bins(X)
+        binned = self._bin(X)
+        base = float(y.mean())
+        F_pred = np.full(y.shape, base)
+        feats, thrs, vals = [], [], []
+        for _ in range(self.n_trees):
+            g = y - F_pred
+            f, t, v, node_of = self._fit_tree(binned, g)
+            feats.append(f)
+            thrs.append(t)
+            vals.append(v)
+            F_pred = F_pred + self.lr * v[node_of]
+        self.params = GBDTParams(
+            feature=jnp.asarray(np.stack(feats)),
+            threshold=jnp.asarray(np.stack(thrs)),
+            value=jnp.asarray(np.stack(vals), dtype=jnp.float32),
+            base=jnp.float32(base),
+            lr=jnp.float32(self.lr),
+        )
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        assert self.params is not None, "fit first"
+        return np.asarray(predict_jax(self.params, jnp.asarray(X, dtype=jnp.float32)))

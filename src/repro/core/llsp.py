@@ -1,0 +1,226 @@
+"""Leveling-Learned Search Pruning (LLSP) — paper §4.3.
+
+Router GBDT: (query, top-k) -> level (a coarse max nprobe).
+Per-level pruning GBDT: (query, top-k, centroid-distance distribution) ->
+refined nprobe.  Only *pre-search* features are used so posting reads remain
+one dependency-free batch (the paper's key compatibility constraint with
+batched SSD/HBM I/O — no probe-compute-decide loop).
+
+Offline training (paper's workflow, §4.3):
+* labels approximated from a non-pruned large-nprobe search (not brute force),
+* router label = smallest level whose range reaches target recall,
+* pruning label = minimal nprobe within that level reaching target recall,
+  derived by *decreasing* nprobe until recall drops — we compute it in closed
+  form from the rank of the first cluster containing each true neighbor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .gbdt import (
+    GBDTParams,
+    GBDTRegressor,
+    predict_jax,
+    predict_stacked_jax,
+    stack_params,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LLSPConfig:
+    levels: tuple[int, ...] = (16, 32, 64, 128, 256)  # nprobe upper bounds
+    recall_target: float = 0.9
+    n_ratio_features: int = 32       # centroid-distance ratios fed to pruner
+    label_nprobe: int = 0            # 0 => use max level for label generation
+    n_trees: int = 80
+    max_depth: int = 5
+    lr: float = 0.2
+
+    @property
+    def nmax(self) -> int:
+        return self.levels[-1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LLSPParams:
+    router: GBDTParams
+    pruners: GBDTParams              # stacked, leading dim = n_levels
+    levels: jax.Array                # (n_levels,) int32
+
+
+# --------------------------------------------------------------------------
+# feature builders (shared online/offline; jit-safe)
+# --------------------------------------------------------------------------
+def router_features(queries: jax.Array, topk: jax.Array) -> jax.Array:
+    """(B, D) + (B,) -> (B, D+1)."""
+    return jnp.concatenate([queries, jnp.log1p(topk.astype(jnp.float32))[:, None]], axis=1)
+
+
+def pruner_features(
+    queries: jax.Array, topk: jax.Array, cdists: jax.Array, n_ratio: int
+) -> jax.Array:
+    """(B, D), (B,), (B, nmax sorted centroid dists) -> (B, D+2+n_ratio).
+
+    Features: query coords, log top-k, d1, ratios d_i/d1 for i=1..n_ratio
+    (paper: "the nearest centroid-query distance and relative ratios of the
+    following centroids' to the 1st centroid's").
+    """
+    d1 = jnp.maximum(cdists[:, :1], 1e-12)
+    ratios = cdists[:, 1 : n_ratio + 1] / d1
+    return jnp.concatenate(
+        [
+            queries,
+            jnp.log1p(topk.astype(jnp.float32))[:, None],
+            jnp.sqrt(d1),
+            ratios,
+        ],
+        axis=1,
+    )
+
+
+# --------------------------------------------------------------------------
+# online inference
+# --------------------------------------------------------------------------
+def route(params: LLSPParams, queries: jax.Array, topk: jax.Array) -> jax.Array:
+    """Predict per-query level index (B,) int32."""
+    n_levels = params.levels.shape[0]
+    raw = predict_jax(params.router, router_features(queries, topk))
+    return jnp.clip(jnp.round(raw), 0, n_levels - 1).astype(jnp.int32)
+
+
+def prune(
+    params: LLSPParams,
+    level: jax.Array,
+    queries: jax.Array,
+    topk: jax.Array,
+    cdists: jax.Array,
+    n_ratio: int,
+) -> jax.Array:
+    """Predict per-query nprobe (B,) int32 within [1, level_max]."""
+    feats = pruner_features(queries, topk, cdists, n_ratio)
+    raw = predict_stacked_jax(params.pruners, level, feats)
+    level_max = params.levels[level].astype(jnp.float32)
+    # never probe fewer clusters than could hold top-k results
+    return jnp.clip(jnp.ceil(raw), 1.0, level_max).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# offline label generation + training
+# --------------------------------------------------------------------------
+def min_nprobe_labels(
+    centroid_rank_of_hit: np.ndarray,   # (B, kmax) rank of first cluster holding
+    recall_target: float,               #        each true neighbor (nmax = miss)
+    nmax: int,
+    topk: np.ndarray | None = None,     # (B,) per-query k (pad cols = nmax rank)
+) -> np.ndarray:
+    """Closed-form minimal nprobe reaching target recall per query.
+
+    recall(nprobe) = fraction of the query's true top-k whose first-containing-
+    cluster rank < nprobe, so the minimal nprobe is 1 + the ceil(target*k)-th
+    smallest rank.  Equivalent to (and far cheaper than) the paper's
+    "decrease nprobe until recall drops" sweep.  ``topk`` supports per-query k
+    (padded columns must carry rank nmax and are sorted past the needed index).
+    """
+    b, kmax = centroid_rank_of_hit.shape
+    if topk is None:
+        topk = np.full(b, kmax)
+    need = np.ceil(recall_target * np.asarray(topk)).astype(np.int64)
+    need = np.clip(need, 1, kmax)
+    ranks_sorted = np.sort(centroid_rank_of_hit, axis=1)
+    min_np = ranks_sorted[np.arange(b), need - 1] + 1
+    return np.clip(min_np, 1, nmax).astype(np.int32)
+
+
+def first_hit_ranks(
+    true_ids: np.ndarray,      # (B, k)
+    cid_order: np.ndarray,     # (B, nmax) centroid ids sorted by distance
+    posting_ids: np.ndarray,   # (C, L)
+    n_vectors: int,
+    nmax: int,
+) -> np.ndarray:
+    """Rank (position in the query's centroid ordering) of the first cluster
+    containing each true neighbor; nmax if not reachable within nmax."""
+    C, L = posting_ids.shape
+    # vector id -> clusters containing it (closure => several)
+    flat = posting_ids.ravel()
+    valid = flat >= 0
+    vec = flat[valid]
+    clu = np.repeat(np.arange(C, dtype=np.int64), L)[valid]
+    order = np.argsort(vec, kind="stable")
+    vec_s, clu_s = vec[order], clu[order]
+    starts = np.searchsorted(vec_s, np.arange(n_vectors))
+    ends = np.searchsorted(vec_s, np.arange(n_vectors) + 1)
+
+    B, k = true_ids.shape
+    out = np.full((B, k), nmax, dtype=np.int32)
+    for b in range(B):
+        rank_of = {int(c): r for r, c in enumerate(cid_order[b])}
+        for j in range(k):
+            v = int(true_ids[b, j])
+            if v < 0:
+                continue
+            best = nmax
+            for c in clu_s[starts[v]:ends[v]]:
+                r = rank_of.get(int(c), nmax)
+                if r < best:
+                    best = r
+            out[b, j] = best
+    return out
+
+
+def train_llsp(
+    cfg: LLSPConfig,
+    queries: np.ndarray,        # (B, D) training queries (sampled log window)
+    topk: np.ndarray,           # (B,) business top-k per query
+    cid_order: np.ndarray,      # (B, nmax) centroid ids by distance
+    cdists: np.ndarray,         # (B, nmax) sorted centroid distances
+    true_ids: np.ndarray,       # (B, k) approx ground truth (large-nprobe run)
+    posting_ids: np.ndarray,    # (C, L)
+    n_vectors: int,
+    seed: int = 0,
+) -> LLSPParams:
+    levels = np.asarray(cfg.levels, dtype=np.int32)
+    nmax = int(levels[-1])
+    ranks = first_hit_ranks(true_ids, cid_order, posting_ids, n_vectors, nmax)
+    # padded (-1) truth columns must not count against recall
+    ranks = np.where(true_ids < 0, nmax, ranks)
+    min_np = min_nprobe_labels(ranks, cfg.recall_target, nmax, topk=topk)
+
+    # router: label = smallest level index whose bound >= min_nprobe
+    lvl_label = np.searchsorted(levels, min_np, side="left")
+    lvl_label = np.clip(lvl_label, 0, len(levels) - 1)
+    rf = np.asarray(router_features(jnp.asarray(queries), jnp.asarray(topk)))
+    router = GBDTRegressor(
+        n_trees=cfg.n_trees, max_depth=cfg.max_depth, lr=cfg.lr, seed=seed
+    ).fit(rf, lvl_label.astype(np.float64))
+
+    # per-level pruners on the queries routed to each level
+    pf = np.asarray(
+        pruner_features(
+            jnp.asarray(queries), jnp.asarray(topk), jnp.asarray(cdists),
+            cfg.n_ratio_features,
+        )
+    )
+    pruners = []
+    for li in range(len(levels)):
+        sel = lvl_label == li
+        if sel.sum() < 32:  # too few samples: fall back to all data clipped
+            Xl, yl = pf, np.minimum(min_np, levels[li]).astype(np.float64)
+        else:
+            Xl, yl = pf[sel], min_np[sel].astype(np.float64)
+        m = GBDTRegressor(
+            n_trees=cfg.n_trees, max_depth=cfg.max_depth, lr=cfg.lr,
+            seed=seed + 101 * li,
+        ).fit(Xl, yl)
+        pruners.append(m.params)
+    return LLSPParams(
+        router=router.params,
+        pruners=stack_params(pruners),
+        levels=jnp.asarray(levels),
+    )

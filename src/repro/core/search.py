@@ -1,0 +1,354 @@
+"""Helmsman online search engine (paper Fig. 8 left / Fig. 11).
+
+Per query batch:
+  1. router GBDT picks the level (max nprobe)           [LLSP]
+  2. centroid scan returns the nmax nearest centroids   [MXU brute force or
+     two-level group quantizer — TPU stand-in for the centroid graph]
+  3. level pruning GBDT refines nprobe                  [LLSP]
+  4. one fused batched posting scan                     [ivf_scan Pallas kernel
+     — the "single doorbell per batch" path]
+  5. dedup + global top-k merge                         [closure duplicates]
+
+Pruning modes: "llsp" (paper's contribution), "fixed" (SPANN Eq. 1 baseline),
+"none" (scan all nmax).  The sharded engine stripes clusters over the
+``model`` mesh axis and merges per-shard top-k via all_gather — the multi-SSD
+array + frontend merge of Fig. 2a/10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import llsp as llsp_mod
+from .distance import dedup_topk, squared_l2, topk_smallest
+from .ivf import IVFIndex
+from .spann_rules import fixed_eps_nprobe
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int = 10
+    nprobe_max: int = 64          # == LLSP nmax when pruning == "llsp"
+    pruning: str = "none"         # "llsp" | "fixed" | "none"
+    eps: float = 0.12             # fixed-eps baseline knob (Eq. 1)
+    n_ratio: int = 32
+    use_kernel: bool = True       # fused Pallas scan vs jnp gather
+    two_level: bool = False       # group quantizer for the centroid scan
+    n_groups_probe: int = 8
+    shard_centroids: bool = False # perf: centroid scan sharded over `model`
+                                  # (each shard scans C/TP centroids, then one
+                                  # tiny (B, nmax) all-gather + re-rank) —
+                                  # removes the TP-fold redundant scan
+
+
+def centroid_scan(
+    index: IVFIndex, queries: jax.Array, nmax: int, cfg: SearchConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Top-nmax centroids: (cdists (B, nmax) ascending, cids (B, nmax))."""
+    if cfg.two_level and index.group_centroids is not None:
+        gd = squared_l2(queries, index.group_centroids)            # (B, G)
+        _, gsel = topk_smallest(gd, cfg.n_groups_probe)            # (B, g)
+        cand = index.group_members[gsel]                           # (B, g, Cg)
+        b = queries.shape[0]
+        cand = cand.reshape(b, -1)                                 # (B, g*Cg)
+        cvecs = index.centroids[jnp.maximum(cand, 0)]              # (B, M, D)
+        d = jnp.sum((cvecs - queries[:, None, :]) ** 2, axis=-1)
+        d = jnp.where(cand < 0, jnp.inf, d)
+        vals, pos = topk_smallest(d, min(nmax, d.shape[1]))
+        cids = jnp.take_along_axis(cand, pos, axis=1)
+        if cids.shape[1] < nmax:  # pad (tiny-group configs)
+            padn = nmax - cids.shape[1]
+            cids = jnp.pad(cids, ((0, 0), (0, padn)), constant_values=-1)
+            vals = jnp.pad(vals, ((0, 0), (0, padn)), constant_values=jnp.inf)
+        return vals, cids
+    d = squared_l2(queries, index.centroids)
+    vals, cids = topk_smallest(d, nmax)
+    return vals, cids
+
+
+def decide_nprobe(
+    cfg: SearchConfig,
+    llsp_params: Optional[llsp_mod.LLSPParams],
+    queries: jax.Array,
+    topk_req: jax.Array,
+    cdists: jax.Array,
+) -> jax.Array:
+    """Per-query nprobe (B,) int32 according to the pruning mode."""
+    b = queries.shape[0]
+    nmax = cdists.shape[1]
+    if cfg.pruning == "none":
+        return jnp.full((b,), nmax, dtype=jnp.int32)
+    if cfg.pruning == "fixed":
+        return fixed_eps_nprobe(cdists, cfg.eps, nmax)
+    assert cfg.pruning == "llsp" and llsp_params is not None
+    level = llsp_mod.route(llsp_params, queries, topk_req)
+    return llsp_mod.prune(
+        llsp_params, level, queries, topk_req, cdists, cfg.n_ratio
+    )
+
+
+def _scan_and_rank(
+    index: IVFIndex,
+    queries: jax.Array,
+    cids: jax.Array,
+    probe_mask: jax.Array,
+    k: int,
+    use_kernel: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused posting scan + dedup top-k. Returns (dists (B,k), ids (B,k))."""
+    b = queries.shape[0]
+    if use_kernel:
+        dists = kops.ivf_scan(index.postings, cids, probe_mask, queries)
+    else:
+        from repro.kernels.ref import ivf_scan_ref
+
+        dists = ivf_scan_ref(index.postings, cids, probe_mask, queries)
+    ids = index.posting_ids[jnp.maximum(cids, 0)]                  # (B, P, L)
+    dists = jnp.where(ids < 0, jnp.inf, dists)
+    return dedup_topk(dists.reshape(b, -1), ids.reshape(b, -1), k)
+
+
+def serve_step(
+    index: IVFIndex,
+    llsp_params: Optional[llsp_mod.LLSPParams],
+    queries: jax.Array,
+    topk_req: jax.Array,
+    cfg: SearchConfig,
+) -> dict:
+    """Single-device search. Returns dict with ids, dists, nprobe."""
+    nmax = cfg.nprobe_max
+    cdists, cids = centroid_scan(index, queries, nmax, cfg)
+    nprobe = decide_nprobe(cfg, llsp_params, queries, topk_req, cdists)
+    probe_mask = (jnp.arange(nmax)[None, :] < nprobe[:, None]) & (cids >= 0)
+    dists, ids = _scan_and_rank(index, queries, cids, probe_mask, cfg.k, cfg.use_kernel)
+    return {"ids": ids, "dists": dists, "nprobe": nprobe}
+
+
+# --------------------------------------------------------------------------
+# leveled serving — the TPU-native payoff of the paper's LEVELING design
+# --------------------------------------------------------------------------
+# On CPUs the paper's per-query nprobe directly saves I/O; on TPUs shapes are
+# static, so a masked scan still pays full compute for pruned probes.  The
+# LLSP *levels* fix exactly this: each level is one compiled program with
+# nprobe_max = that level's bound, the tiny GBDT router runs first, queries
+# are bucketed by level (padded to `pad`), and each bucket runs its level's
+# program.  Compute now scales with the routed level — leveling is not just
+# a model-granularity choice, it is the static-shape mechanism.
+_LEVEL_CACHE: dict = {}
+
+
+def _serve_at_level(index, llsp_params, queries, topk_req, level_idx, bound, cfg):
+    nmax_feat = max(bound, cfg.n_ratio + 1)   # pruner features need n_ratio+1
+    cdists, cids = centroid_scan(index, queries, nmax_feat, cfg)
+    level = jnp.full((queries.shape[0],), level_idx, jnp.int32)
+    nprobe = llsp_mod.prune(
+        llsp_params, level, queries, topk_req, cdists, cfg.n_ratio)
+    nprobe = jnp.minimum(nprobe, bound)
+    cids = cids[:, :bound]
+    probe_mask = (jnp.arange(bound)[None, :] < nprobe[:, None]) & (cids >= 0)
+    dists, ids = _scan_and_rank(index, queries, cids, probe_mask, cfg.k,
+                                cfg.use_kernel)
+    return {"ids": ids, "dists": dists, "nprobe": nprobe}
+
+
+def serve_leveled(
+    index: IVFIndex,
+    llsp_params: llsp_mod.LLSPParams,
+    queries,
+    topk_req,
+    cfg: SearchConfig,
+    pad: int = 64,
+) -> dict:
+    """Route on host, then run one level-specific compiled scan per bucket.
+
+    Returns the same dict as serve_step; ``nprobe`` reflects the per-query
+    pruner output.  Buckets are padded to multiples of ``pad`` so the jit
+    cache stays small (one entry per (level, padded-size))."""
+    import numpy as np
+
+    q = np.asarray(queries, dtype=np.float32)
+    tk = np.asarray(topk_req, dtype=np.int32)
+    b = q.shape[0]
+    lv = np.asarray(llsp_mod.route(llsp_params, jnp.asarray(q), jnp.asarray(tk)))
+    bounds = np.asarray(llsp_params.levels)
+    out_d = np.full((b, cfg.k), np.inf, np.float32)
+    out_i = np.full((b, cfg.k), -1, np.int32)
+    out_np = np.zeros((b,), np.int32)
+    n_levels = int(bounds.shape[0])
+    for li in range(n_levels):
+        sel = np.nonzero(lv == li)[0]
+        if sel.size == 0:
+            continue
+        padded = -(-sel.size // pad) * pad
+        rows = np.concatenate([sel, np.full(padded - sel.size, sel[0])])
+        key = (id(index), li, padded, cfg)
+        fn = _LEVEL_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                _serve_at_level, level_idx=li, bound=int(bounds[li]), cfg=cfg))
+            _LEVEL_CACHE[key] = fn
+        res = fn(index, llsp_params, jnp.asarray(q[rows]), jnp.asarray(tk[rows]))
+        out_d[sel] = np.asarray(res["dists"])[: sel.size]
+        out_i[sel] = np.asarray(res["ids"])[: sel.size]
+        out_np[sel] = np.asarray(res["nprobe"])[: sel.size]
+    return {"ids": out_i, "dists": out_d, "nprobe": out_np, "levels": lv}
+
+
+# --------------------------------------------------------------------------
+# sharded engine — clusters striped over `model`, queries over data axes
+# --------------------------------------------------------------------------
+def make_sharded_serve(
+    mesh,
+    cfg: SearchConfig,
+    *,
+    batch_axes: tuple[str, ...] = ("data",),
+    shard_axis: str = "model",
+):
+    """Build the shard_map'd serve function for the production mesh.
+
+    Posting arrays are sharded on the cluster dim over ``shard_axis`` (each
+    cluster fully resident on one shard = one contiguous SSD extent in the
+    paper's layout); queries are sharded over ``batch_axes``; centroids and
+    GBDT weights are replicated (the in-DRAM tier).  Per-shard top-k results
+    are merged with one all_gather of k candidates — the Fig. 2a frontend.
+    """
+    n_shards = mesh.shape[shard_axis]
+    bspec = P(batch_axes)
+
+    def local_search(centroids, postings, posting_ids, llsp_params, queries, topk_req):
+        shard = jax.lax.axis_index(shard_axis)
+        c_local = postings.shape[0]
+        lo = shard * c_local
+        nmax = cfg.nprobe_max
+        local_index = IVFIndex(centroids, postings, posting_ids)
+
+        if cfg.shard_centroids:
+            # each shard scans its own C/TP centroid slice (no redundancy);
+            # merge with one tiny (B, nmax) all-gather + re-rank
+            c_slice = centroids.shape[0]          # already the local slice
+            d_loc = squared_l2(queries, centroids)
+            k_loc = min(nmax, c_slice)
+            dv, di = topk_smallest(d_loc, k_loc)
+            di = di + shard * c_slice             # global centroid ids
+            dv_all = jax.lax.all_gather(dv, shard_axis)   # (S, B, k_loc)
+            di_all = jax.lax.all_gather(di, shard_axis)
+            bq = queries.shape[0]
+            dv_all = jnp.moveaxis(dv_all, 0, 1).reshape(bq, -1)
+            di_all = jnp.moveaxis(di_all, 0, 1).reshape(bq, -1)
+            cdists, pos = topk_smallest(dv_all, nmax)
+            cids = jnp.take_along_axis(di_all, pos, axis=1)
+        else:
+            d = squared_l2(queries, centroids)
+            cdists, cids = topk_smallest(d, nmax)
+        nprobe = decide_nprobe(cfg, llsp_params, queries, topk_req, cdists)
+        probe_mask = jnp.arange(nmax)[None, :] < nprobe[:, None]
+        # restrict to clusters striped on this shard
+        local_cids = cids - lo
+        on_shard = (local_cids >= 0) & (local_cids < c_local)
+        probe_mask = probe_mask & on_shard
+        local_cids = jnp.clip(local_cids, 0, c_local - 1)
+        dists_k, ids_k = _scan_and_rank(
+            local_index, queries, local_cids, probe_mask, cfg.k, cfg.use_kernel
+        )
+        # merge across shards: gather each shard's k candidates, re-rank
+        all_d = jax.lax.all_gather(dists_k, shard_axis)            # (S, B, k)
+        all_i = jax.lax.all_gather(ids_k, shard_axis)
+        b = queries.shape[0]
+        all_d = jnp.moveaxis(all_d, 0, 1).reshape(b, n_shards * cfg.k)
+        all_i = jnp.moveaxis(all_i, 0, 1).reshape(b, n_shards * cfg.k)
+        fd, fi = dedup_topk(all_d, all_i, cfg.k)
+        return fd, fi, nprobe
+
+    cent_spec = P(shard_axis) if cfg.shard_centroids else P()
+    return jax.shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(
+            cent_spec,                 # centroids: sharded scan or replicated
+            P(shard_axis),             # postings striped on cluster dim
+            P(shard_axis),             # posting ids striped
+            P(),                       # LLSP weights replicated
+            bspec,                     # queries over data axes
+            bspec,                     # requested top-k
+        ),
+        out_specs=(bspec, bspec, bspec),
+        check_vma=False,
+    )
+
+
+def make_sharded_serve_quantized(
+    mesh,
+    cfg: SearchConfig,
+    *,
+    batch_axes: tuple[str, ...] = ("data",),
+    shard_axis: str = "model",
+):
+    """Sharded engine over int8 RESIDUAL postings (core/quantize.py) —
+    hillclimb it.3 for the serving cell: posting-scan HBM bytes drop 4x at
+    <1% recall cost (tests/test_quantize.py).  Signature takes the
+    quantized payload arrays explicitly (q8, scale, norm2); the centroid
+    scan is sharded as in the `shard_centroids` path."""
+    from .quantize import QuantizedPostings, ivf_scan_quantized
+
+    n_shards = mesh.shape[shard_axis]
+    bspec = P(batch_axes)
+
+    def local_search(centroids_l, q8, scale, norm2, posting_ids,
+                     llsp_params, queries, topk_req):
+        shard = jax.lax.axis_index(shard_axis)
+        c_local = q8.shape[0]
+        lo = shard * c_local
+        nmax = cfg.nprobe_max
+        # sharded centroid scan + tiny all-gather merge
+        d_loc = squared_l2(queries, centroids_l)
+        k_loc = min(nmax, centroids_l.shape[0])
+        dv, di = topk_smallest(d_loc, k_loc)
+        di = di + shard * centroids_l.shape[0]
+        dv_all = jax.lax.all_gather(dv, shard_axis)
+        di_all = jax.lax.all_gather(di, shard_axis)
+        bq = queries.shape[0]
+        dv_all = jnp.moveaxis(dv_all, 0, 1).reshape(bq, -1)
+        di_all = jnp.moveaxis(di_all, 0, 1).reshape(bq, -1)
+        cdists, pos = topk_smallest(dv_all, nmax)
+        cids = jnp.take_along_axis(di_all, pos, axis=1)
+
+        nprobe = decide_nprobe(cfg, llsp_params, queries, topk_req, cdists)
+        probe_mask = jnp.arange(nmax)[None, :] < nprobe[:, None]
+        local_cids = cids - lo
+        on_shard = (local_cids >= 0) & (local_cids < c_local)
+        probe_mask = probe_mask & on_shard
+        local_cids = jnp.clip(local_cids, 0, c_local - 1)
+        qp = QuantizedPostings(q8=q8, scale=scale, norm2=norm2)
+        dists = ivf_scan_quantized(qp, centroids_l, local_cids, probe_mask, queries)
+        ids = posting_ids[jnp.maximum(local_cids, 0)]
+        dists = jnp.where(ids < 0, jnp.inf, dists)
+        dists_k, ids_k = dedup_topk(
+            dists.reshape(bq, -1), ids.reshape(bq, -1), cfg.k)
+        all_d = jax.lax.all_gather(dists_k, shard_axis)
+        all_i = jax.lax.all_gather(ids_k, shard_axis)
+        all_d = jnp.moveaxis(all_d, 0, 1).reshape(bq, n_shards * cfg.k)
+        all_i = jnp.moveaxis(all_i, 0, 1).reshape(bq, n_shards * cfg.k)
+        fd, fi = dedup_topk(all_d, all_i, cfg.k)
+        return fd, fi, nprobe
+
+    return jax.shard_map(
+        local_search,
+        mesh=mesh,
+        in_specs=(
+            P(shard_axis),             # centroid slice (scan + residuals)
+            P(shard_axis),             # q8 striped on cluster dim
+            P(shard_axis),             # scales striped
+            P(shard_axis),             # norms striped
+            P(shard_axis),             # posting ids striped
+            P(),                       # LLSP replicated
+            bspec, bspec,
+        ),
+        out_specs=(bspec, bspec, bspec),
+        check_vma=False,
+    )

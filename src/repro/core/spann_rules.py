@@ -1,0 +1,83 @@
+"""SPANN-inherited rules: fixed-epsilon pruning (Eq. 1) and closure
+multi-cluster assignment with the RNG rule (§4.4 "closure multi-cluster
+assignment that duplicates boundary vectors, using RNG rules").
+
+These are the paper's *baselines / building blocks*: the fixed-eps rule is the
+pruning baseline Helmsman improves on with LLSP; closure assignment is reused
+verbatim in Helmsman's construction stage 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fixed_eps_nprobe(cdists: jax.Array, eps: float, nmax: int) -> jax.Array:
+    """Eq. 1: search cluster ij iff Dist(q, c_ij) <= (1+eps) * Dist(q, c_i1).
+
+    cdists: (B, nmax) centroid distances sorted ascending (squared L2 — the
+    (1+eps) factor is applied in the L2 domain, so squared threshold is
+    (1+eps)^2).  Returns per-query nprobe counts (B,) int32.
+    """
+    d1 = cdists[:, :1]
+    thr = (1.0 + eps) ** 2 * d1
+    keep = cdists <= thr
+    return jnp.minimum(jnp.sum(keep, axis=1), nmax).astype(jnp.int32)
+
+
+def closure_assign(
+    x: jax.Array,
+    centroids: jax.Array,
+    *,
+    eps: float = 0.1,
+    max_replicas: int = 4,
+    rng_rule: bool = True,
+    chunk: int = 8192,
+) -> jax.Array:
+    """Closure multi-cluster assignment.
+
+    Each vector is assigned to up to ``max_replicas`` nearest clusters whose
+    centroid distance is within (1+eps) of the nearest, filtered by the RNG
+    (relative neighborhood graph) rule: candidate c_j is kept only if for
+    every already-kept c_m,  Dist(x, c_j) <= Dist(c_m, c_j)  (otherwise c_m
+    "occludes" c_j and the replica would be redundant).
+
+    Returns assignment ids (N, max_replicas) int32 with -1 padding; column 0
+    is always the nearest cluster.
+    """
+    from .distance import squared_l2
+
+    R = max_replicas
+    n = x.shape[0]
+
+    def assign_chunk(xc):
+        d = squared_l2(xc, centroids)                       # (n, C)
+        negd, cand = jax.lax.top_k(-d, R)                   # nearest R
+        cd = -negd                                          # (n, R) ascending
+        thr = (1.0 + eps) ** 2 * cd[:, :1]
+        in_window = cd <= thr                               # (n, R)
+        if not rng_rule:
+            keep = in_window
+        else:
+            cc = centroids[cand]                            # (n, R, D)
+            # pairwise centroid distances among candidates
+            ccd = jnp.sum((cc[:, :, None, :] - cc[:, None, :, :]) ** 2, axis=-1)
+            keep = jnp.zeros(cd.shape, dtype=bool).at[:, 0].set(True)
+
+            def body(j, keep):
+                # c_j kept iff in window and for all kept m<j: d(x,c_j) <= d(c_m,c_j)
+                cd_j = jax.lax.dynamic_index_in_dim(cd, j, axis=1)  # (n, 1)
+                ccd_j = jax.lax.dynamic_index_in_dim(ccd, j, axis=2)[..., 0]
+                occluded = jnp.any(keep & (ccd_j < cd_j), axis=1)
+                kj = in_window[:, j] & ~occluded
+                return keep.at[:, j].set(kj)
+
+            keep = jax.lax.fori_loop(1, R, body, keep)
+        return jnp.where(keep, cand, -1)
+
+    if n <= chunk:
+        return assign_chunk(x)
+    outs = []
+    for s in range(0, n, chunk):
+        outs.append(assign_chunk(x[s:s + chunk]))
+    return jnp.concatenate(outs, axis=0)

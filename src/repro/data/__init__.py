@@ -1,0 +1,10 @@
+from .synthetic import (
+    PAPER_DATASETS,
+    VectorDatasetSpec,
+    make_queries,
+    make_vectors,
+    neighbor_sample,
+    random_graph,
+    recsys_batch,
+    token_batch,
+)

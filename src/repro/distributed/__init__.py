@@ -1,0 +1,3 @@
+from .collectives import bucketed_psum, compressed_psum, compressed_psum_tree
+from .fault import FailoverPlan, HeartbeatMonitor, ownership_mask, plan_failover
+from . import sharding

@@ -1,0 +1,82 @@
+"""Fault-tolerance runtime: heartbeats, straggler policy, serving failover.
+
+At 1000+-node scale the failure model is: (a) a serving shard stops answering
+(host/die failure), (b) a shard answers slowly (straggler), (c) a training
+worker dies mid-step (handled by checkpoint/restart in launch/train.py).
+
+* ``HeartbeatMonitor`` — logical-clock heartbeat table; a shard missing
+  ``miss_threshold`` consecutive beats is marked failed, one marked slow for
+  ``slow_factor``x median latency is a straggler.
+* ``FailoverPlan`` — given failed shards and the ReplicaMap, compute the probe
+  re-routing (clusters whose primary died scan a replica) and the irrecoverable
+  set.  The sharded search engine consumes the resulting per-shard ownership
+  mask; no resharding of the posting tensor is needed for R-1 failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.storage.layout import ReplicaMap
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    n_nodes: int
+    miss_threshold: int = 3
+    slow_factor: float = 3.0
+
+    def __post_init__(self):
+        self.last_beat = np.zeros(self.n_nodes, dtype=np.int64)
+        self.latency_ema = np.ones(self.n_nodes, dtype=np.float64)
+        self.clock = 0
+
+    def beat(self, node: int, latency: float = 1.0) -> None:
+        self.last_beat[node] = self.clock
+        self.latency_ema[node] = 0.8 * self.latency_ema[node] + 0.2 * latency
+
+    def tick(self) -> None:
+        self.clock += 1
+
+    def failed(self) -> np.ndarray:
+        return np.nonzero(self.clock - self.last_beat >= self.miss_threshold)[0]
+
+    def stragglers(self) -> np.ndarray:
+        alive = np.setdiff1d(np.arange(self.n_nodes), self.failed())
+        if alive.size == 0:
+            return alive
+        med = np.median(self.latency_ema[alive])
+        return alive[self.latency_ema[alive] > self.slow_factor * med]
+
+
+@dataclasses.dataclass
+class FailoverPlan:
+    owner: np.ndarray          # (C,) serving shard per cluster after failover
+    lost: np.ndarray           # clusters with no live replica
+    moved: np.ndarray          # clusters whose owner changed
+
+    @property
+    def n_lost(self) -> int:
+        return int(self.lost.size)
+
+
+def plan_failover(
+    replica_map: ReplicaMap, failed_shards: Sequence[int]
+) -> FailoverPlan:
+    primary = replica_map.replicas[:, 0].copy()
+    fm = replica_map.failover(failed_shards)
+    owner = fm.replicas[:, 0]
+    lost = fm.lost_clusters()
+    moved = np.nonzero((owner != primary) & (owner >= 0))[0]
+    return FailoverPlan(owner=owner, lost=lost, moved=moved)
+
+
+def ownership_mask(owner: np.ndarray, n_shards: int) -> np.ndarray:
+    """(S, C) bool — shard s scans cluster c.  Consumed by the sharded search
+    engine in place of the static striping when a failover plan is active."""
+    mask = np.zeros((n_shards, owner.shape[0]), dtype=bool)
+    valid = owner >= 0
+    mask[owner[valid], np.nonzero(valid)[0]] = True
+    return mask

@@ -1,0 +1,121 @@
+"""Sharding rules per architecture family.
+
+Single source of truth for how every model family maps onto the production
+mesh — consumed by launch/dryrun.py, launch/train.py, launch/serve.py.
+
+Mesh axes (launch/mesh.py): single pod ``(data=16, model=16)``; multi-pod
+``(pod=2, data=16, model=16)``.  ``pod`` composes with ``data`` as an outer
+batch axis everywhere (gradient reduction crosses pods once per step).
+
+Conventions (PartitionSpec leaves name mesh axes):
+* LM train:  batch over (pod, data); Megatron TP over ``model`` — attention
+  heads and d_ff columns sharded, row-parallel second matmuls, vocab sharded
+  on the embedding/unembedding.  MoE experts sharded over ``model`` (EP).
+* LM decode: batch over (pod, data); KV heads over ``model`` when divisible,
+  else split-KV (sequence) decode.
+* GNN:       edges/nodes over (pod, data) [graph partition], hidden dim of the
+  big MLPs over ``model``.
+* RecSys:    embedding tables row-sharded over ``model`` (the paper-adjacent
+  hot path: lookup = all-to-all-ish gather); batch over (pod, data).
+* ANNS:      queries over (pod, data); posting clusters over ``model``;
+  centroids + LLSP replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_spec(mesh: Mesh, *trailing) -> P:
+    """Batch-sharded leading dim, e.g. tokens (B, S) -> P(('pod','data'), None)."""
+    return P(batch_axes(mesh), *trailing)
+
+
+def replicated() -> P:
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# LM transformer parameter/activation specs
+# ---------------------------------------------------------------------------
+def lm_param_specs(params_tree, mesh: Mesh):
+    """Megatron-style TP rules applied by leaf path name.
+
+    * ``wq/wk/wv``  (D, H, Dh)    -> shard head dim over model
+    * ``wo``        (H, Dh, D)    -> shard head dim over model (row-parallel)
+    * ``w_gate/w_up`` (D, F)      -> shard F over model (col-parallel)
+    * ``w_down``    (F, D)        -> shard F over model (row-parallel)
+    * MoE expert variants carry a leading E dim -> experts over model (EP)
+    * ``embed``     (V, D)        -> shard V over model
+    * norms/scalars               -> replicated
+    """
+
+    def spec_for(path: str, x) -> P:
+        nd = x.ndim
+        if "moe" in path and nd >= 3:
+            return P("model", *([None] * (nd - 1)))          # EP
+        if any(k in path for k in ("wq", "wk", "wv")):
+            return P(None, "model", None)
+        if "wo" in path:
+            return P("model", None, None)
+        if any(k in path for k in ("w_gate", "w_up")):
+            return P(None, "model")
+        if "w_down" in path:
+            return P("model", None)
+        if "embed" in path:
+            return P("model", None)
+        if "router" in path:
+            return P()                                        # tiny
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(p) for p in path).lower()
+        specs.append(spec_for(name, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def lm_kv_cache_spec(mesh: Mesh, kv_heads: int, *, seq_split: bool = False) -> P:
+    """KV cache (B, S, Hkv, Dh): heads over model if divisible, else sequence
+    split (the split-KV decode path for long_500k / small-kv archs)."""
+    tp = mesh.shape["model"]
+    if not seq_split and kv_heads % tp == 0:
+        return P(batch_axes(mesh), None, "model", None)
+    return P(batch_axes(mesh), "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# ANNS / recsys / gnn specs
+# ---------------------------------------------------------------------------
+def anns_specs(mesh: Mesh) -> dict:
+    return {
+        "centroids": P(),
+        "postings": P("model", None, None),
+        "posting_ids": P("model", None),
+        "llsp": P(),
+        "queries": data_spec(mesh, None),
+        "topk": data_spec(mesh),
+    }
+
+
+def recsys_table_spec() -> P:
+    return P("model", None)          # rows over model — EmbeddingBag hot path
+
+
+def gnn_specs(mesh: Mesh) -> dict:
+    return {
+        "edges": data_spec(mesh, None),
+        "node_feats": P(None, "model"),
+        "hidden": P(None, "model"),
+    }
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

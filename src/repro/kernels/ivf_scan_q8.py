@@ -1,0 +1,78 @@
+"""Fused int8-residual posting scan (Pallas) — the optimized serving hot
+path from EXPERIMENTS §Perf it.3.
+
+Same structure as ivf_scan (scalar-prefetch block table, one posting block
+DMA'd HBM->VMEM per (query, probe) grid step) but the payload is the int8
+RESIDUAL code from core/quantize.py at 1/4 the HBM bytes; the kernel
+dequantizes in registers and applies the closed-form residual expansion:
+
+    ||q - (c + s r8)||^2 = ||q - c||^2 - 2 s (q - c).r8 + s^2 ||r8||^2
+
+Operands per grid step: q8 block (L, D) int8, centroid row (D,), per-cluster
+scale, precomputed s^2||r8||^2 row (L,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cids_ref, mask_ref, q_ref, cent_ref, scale_ref, norm2_ref,
+            q8_ref, o_ref):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)             # (1, D)
+    cent = cent_ref[...].astype(jnp.float32)       # (1, D)
+    r8 = q8_ref[0].astype(jnp.float32)             # (L, D)
+    s = scale_ref[0, 0].astype(jnp.float32)        # ()
+    n2 = norm2_ref[...].astype(jnp.float32)        # (1, L)
+    qc = q - cent                                  # (1, D)
+    cross = jax.lax.dot_general(
+        qc, r8, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # (1, L)
+    d = jnp.sum(qc * qc) - 2.0 * s * cross + n2
+    d = jnp.maximum(d, 0.0)
+    live = mask_ref[b, p] > 0
+    o_ref[...] = jnp.where(live, d[:, None, :], jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ivf_scan_q8(
+    q8: jax.Array,         # (C, L, D) int8 residual codes
+    scale: jax.Array,      # (C, 1, 1) f32
+    norm2: jax.Array,      # (C, L) f32
+    centroids: jax.Array,  # (C, D) f32
+    cids: jax.Array,       # (B, P) int32
+    mask: jax.Array,       # (B, P) bool
+    queries: jax.Array,    # (B, D)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, P, L) f32 distances; masked probes +inf."""
+    C, L, D = q8.shape
+    B, P = cids.shape
+    safe = jnp.clip(cids, 0, C - 1).astype(jnp.int32)
+    mask_i = mask.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda b, p, c_p, m_p: (b, 0)),
+            pl.BlockSpec((1, D), lambda b, p, c_p, m_p: (c_p[b, p], 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, p, c_p, m_p: (c_p[b, p], 0, 0)),
+            pl.BlockSpec((1, L), lambda b, p, c_p, m_p: (c_p[b, p], 0)),
+            pl.BlockSpec((1, L, D), lambda b, p, c_p, m_p: (c_p[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L), lambda b, p, c_p, m_p: (b, p, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P, L), jnp.float32),
+        interpret=interpret,
+    )(safe, mask_i, queries, centroids, scale, norm2, q8)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(N, D) x (M, D) -> (N, M) squared L2, f32 accumulation."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    a2 = jnp.sum(a * a, axis=-1, keepdims=True)
+    b2 = jnp.sum(b * b, axis=-1, keepdims=True).T
+    return jnp.maximum(a2 - 2.0 * (a @ b.T) + b2, 0.0)
+
+
+def ivf_scan_ref(
+    postings: jax.Array,   # (C, L, D)
+    cids: jax.Array,       # (B, P) int32 (clamped valid)
+    mask: jax.Array,       # (B, P) bool — True = scan this cluster
+    queries: jax.Array,    # (B, D)
+) -> jax.Array:
+    """Gather selected posting lists and compute squared L2 distances.
+
+    Returns (B, P, L) f32; masked probes are +inf.
+    """
+    q = queries.astype(jnp.float32)
+    gathered = postings[jnp.clip(cids, 0, postings.shape[0] - 1)]  # (B,P,L,D)
+    gathered = gathered.astype(jnp.float32)
+    diff2 = (
+        jnp.sum(q * q, axis=-1)[:, None, None]
+        - 2.0 * jnp.einsum("bd,bpld->bpl", q, gathered)
+        + jnp.sum(gathered * gathered, axis=-1)
+    )
+    diff2 = jnp.maximum(diff2, 0.0)
+    return jnp.where(mask[:, :, None], diff2, jnp.inf)
+
+
+def ivf_scan_clustermajor_ref(
+    postings: jax.Array,   # (C, L, D)
+    active: jax.Array,     # (A,) int32 cluster ids to visit (union of probes)
+    qsel: jax.Array,       # (A, B) bool — query b probes active cluster a
+    queries: jax.Array,    # (B, D)
+) -> jax.Array:
+    """Cluster-major scan (beyond-paper MXU-friendly variant).
+
+    Returns (A, L, B) f32 distances, +inf where the query did not select the
+    cluster.
+    """
+    q = queries.astype(jnp.float32)                      # (B, D)
+    g = postings[jnp.clip(active, 0, postings.shape[0] - 1)].astype(jnp.float32)
+    d = (
+        jnp.sum(g * g, axis=-1)[:, :, None]
+        - 2.0 * jnp.einsum("ald,bd->alb", g, q)
+        + jnp.sum(q * q, axis=-1)[None, None, :]
+    )
+    d = jnp.maximum(d, 0.0)
+    return jnp.where(qsel[:, None, :], d, jnp.inf)

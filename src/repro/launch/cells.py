@@ -1,0 +1,522 @@
+"""Cell builders: (arch x shape x mesh) -> (step_fn, abstract args, shardings).
+
+A "cell" is one dry-run unit: the jitted step function for that architecture
+and input shape, with explicit in/out shardings on the production mesh, plus
+abstract (ShapeDtypeStruct) arguments so nothing is ever allocated.
+
+MODEL_FLOPS conventions (for the §Roofline useful-compute ratio):
+  train    6 * N(_active) * tokens
+  prefill  2 * N(_active) * tokens
+  decode   2 * N(_active) * batch          (one token per sequence)
+  gnn      (see _gnn_model_flops) x3 for train
+  recsys   per-arch analytic estimate x3 for train
+  anns     2 * B * D * (C_scanned + nprobe*L) distance MACs->flops
+
+Pallas kernels are NOT used in the dry-run path (interpret-mode grids would
+be unrolled on the CPU backend); the jnp reference path has identical
+flops/bytes, and the kernels are validated against it in tests/.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchDef, ShapeDef
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    abstract_args: tuple
+    in_specs: tuple
+    out_specs: Any               # pytree of PartitionSpec or None
+    model_flops: float
+    donate: tuple = ()
+    note: str = ""
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _bspec(mesh: Mesh, batch: int, *trailing) -> P:
+    """Batch sharding that degrades to replication when batch < dp factors."""
+    if batch % dp_size(mesh) == 0:
+        return P(batch_axes(mesh), *trailing)
+    if batch % mesh.shape["data"] == 0:
+        return P("data", *trailing)
+    return P(None, *trailing)
+
+
+def f32_like(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree
+    )
+
+
+def opt_abstract(params_abs) -> adamw.AdamWState:
+    return adamw.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=f32_like(params_abs),
+        nu=f32_like(params_abs),
+    )
+
+
+def zero1_specs(specs, shapes, mesh: Mesh):
+    """Optimizer-moment sharding: param spec + shard the first free dim over
+    `data` when divisible (ZeRO-1).  Skipped when `data` already appears
+    (FSDP weights)."""
+    dsize = mesh.shape["data"]
+
+    def one(spec: P, s) -> P:
+        parts = tuple(spec) + (None,) * (len(s.shape) - len(tuple(spec)))
+        flat = []
+        for p_ in parts:
+            if p_ is None:
+                flat.append(None)
+            elif isinstance(p_, tuple):
+                flat.extend(p_)
+            else:
+                flat.append(p_)
+        if "data" in flat:
+            return spec
+        for i, p_ in enumerate(parts):
+            if p_ is None and s.shape[i] % dsize == 0 and s.shape[i] >= dsize:
+                return P(*parts[:i], "data", *parts[i + 1:])
+        return spec
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_specs(param_specs_tree, params_abs, mesh: Mesh) -> adamw.AdamWState:
+    z = zero1_specs(param_specs_tree, params_abs, mesh)
+    return adamw.AdamWState(step=P(), mu=z, nu=z)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(arch: ArchDef, shape: ShapeDef, mesh: Mesh) -> Cell:
+    from repro.models import lm as lm_mod
+    from repro.models.lm import transformer as tf
+
+    cfg = arch.config
+    tp = mesh.shape["model"]
+    p_abs = tf.param_shapes(cfg)
+    p_specs = tf.param_specs(cfg, tp=tp)
+    b, s = shape.batch, shape.seq
+    if cfg.pure_dp and b % (mesh.shape["data"] * tp) == 0:
+        tokens_spec = P(("data", "model"), None)   # batch over BOTH axes
+    else:
+        tokens_spec = _bspec(mesh, b, None)
+
+    if shape.kind == "train":
+        o_abs = opt_abstract(p_abs)
+        o_specs = opt_specs(p_specs, p_abs, mesh)
+        tokens = jax.ShapeDtypeStruct((b, s + 1), jnp.int32)
+        step = tf.make_train_step(cfg, mesh=mesh)
+        mf = 6.0 * cfg.n_active_params * b * s
+        return Cell(arch.name, shape.name, step,
+                    (p_abs, o_abs, tokens),
+                    (p_specs, o_specs, tokens_spec),
+                    (p_specs, o_specs, None), mf,
+                    donate=(0, 1))
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        def step(params, tokens):
+            return tf.prefill_step(params, tokens, cfg, mesh)
+
+        mf = 2.0 * cfg.n_active_params * b * s
+        return Cell(arch.name, shape.name, step, (p_abs, tokens),
+                    (p_specs, tokens_spec), None, mf)
+    if shape.kind == "decode":
+        cache_abs = tf.cache_shapes(cfg, b, s)
+        c_specs = tf.cache_specs(cfg, mesh)
+        # batch dim of the cache follows the token batch sharding
+        if b % dp_size(mesh) != 0:
+            c_specs = jax.tree.map(
+                lambda sp: P(*[None if (isinstance(x, tuple) or x in ("pod", "data")) else x
+                               for x in tuple(sp)]),
+                c_specs, is_leaf=lambda x: isinstance(x, P))
+        token = jax.ShapeDtypeStruct((b,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def step(params, cache, token, pos):
+            return tf.decode_step(params, cache, token, pos, cfg, mesh)
+
+        mf = 2.0 * cfg.n_active_params * b
+        return Cell(arch.name, shape.name, step,
+                    (p_abs, cache_abs, token, pos),
+                    (p_specs, c_specs, _bspec(mesh, b), P()),
+                    (None, c_specs), mf, donate=(1,))
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _gnn_model_flops(cfg, n_nodes, n_edges, d_feat, train=True) -> float:
+    dh = cfg.d_hidden
+    per_layer = 6 * dh * dh * n_edges + 6 * dh * dh * n_nodes
+    enc = 2 * (d_feat * dh + dh * dh) * n_nodes
+    dec = 2 * (dh * dh + dh * cfg.n_vars) * n_nodes
+    f = cfg.n_layers * per_layer + enc + dec
+    return (3.0 if train else 1.0) * f
+
+
+def _gnn_cell(arch: ArchDef, shape: ShapeDef, mesh: Mesh) -> Cell:
+    from repro.models import gnn as gnn_mod
+    from repro.models.gnn import graphcast as gc
+
+    cfg = arch.config
+    n, e = shape.get("n_nodes"), shape.get("n_edges")
+    d = shape.get("d_feat")
+    mode = shape.get("mode")
+    p_abs = gc.param_shapes(cfg, d)
+    p_specs = gc.param_specs(cfg)
+    o_abs = opt_abstract(p_abs)
+    o_specs = opt_specs(p_specs, p_abs, mesh)
+    ba = batch_axes(mesh)
+
+    if mode == "batched":
+        bsz = shape.batch
+        bs = _bspec(mesh, bsz)
+        batch_abs = {
+            "node_feats": jax.ShapeDtypeStruct((bsz, n, d), jnp.float32),
+            "src": jax.ShapeDtypeStruct((bsz, e), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((bsz, e), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((bsz, e), jnp.bool_),
+            "targets": jax.ShapeDtypeStruct((bsz, n, cfg.n_vars), jnp.float32),
+        }
+        b_specs = {
+            "node_feats": _bspec(mesh, bsz, None, None),
+            "src": _bspec(mesh, bsz, None),
+            "dst": _bspec(mesh, bsz, None),
+            "edge_mask": _bspec(mesh, bsz, None),
+            "targets": _bspec(mesh, bsz, None, None),
+        }
+        step = gc.make_train_step(cfg, batched=True)
+        mf = _gnn_model_flops(cfg, n * bsz, e * bsz, d)
+    else:
+        batch_abs = {
+            "node_feats": jax.ShapeDtypeStruct((n, d), jnp.float32),
+            "src": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((e,), jnp.bool_),
+            "targets": jax.ShapeDtypeStruct((n, cfg.n_vars), jnp.float32),
+            "node_mask": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        }
+        b_specs = {
+            "node_feats": P(None, None),      # hidden dim shards via params
+            "src": P(ba), "dst": P(ba), "edge_mask": P(ba),
+            "targets": P(None, None),
+            "node_mask": P(None),
+        }
+        use_mesh = cfg.sharded_mp or cfg.row_dp
+        step = gc.make_train_step(cfg, batched=False,
+                                  mesh=mesh if use_mesh else None)
+        if cfg.row_dp:
+            # row-DP contract: node rows divide the flat mesh; pad N up
+            n_flat = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+            n = -(-n // n_flat) * n_flat
+            batch_abs["node_feats"] = jax.ShapeDtypeStruct((n, d), jnp.float32)
+            batch_abs["targets"] = jax.ShapeDtypeStruct((n, cfg.n_vars), jnp.float32)
+            batch_abs["node_mask"] = jax.ShapeDtypeStruct((n,), jnp.bool_)
+            ba_flat = tuple(mesh.axis_names)
+            b_specs["node_feats"] = P(ba_flat, None)
+            b_specs["targets"] = P(ba_flat, None)
+            b_specs["node_mask"] = P(ba_flat)
+            b_specs["src"] = P(ba_flat)
+            b_specs["dst"] = P(ba_flat)
+            b_specs["edge_mask"] = P(ba_flat)
+            # edges must divide the flat mesh too
+            e_flat = -(-e // n_flat) * n_flat
+            for kk in ("src", "dst"):
+                batch_abs[kk] = jax.ShapeDtypeStruct((e_flat,), jnp.int32)
+            batch_abs["edge_mask"] = jax.ShapeDtypeStruct((e_flat,), jnp.bool_)
+        mf = _gnn_model_flops(cfg, n, e, d)
+    return Cell(arch.name, shape.name, step,
+                (p_abs, o_abs, batch_abs),
+                (p_specs, o_specs, b_specs),
+                (p_specs, o_specs, None), mf, donate=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+def _recsys_model_flops(cfg, batch: int) -> float:
+    d = cfg.embed_dim
+    f = cfg.n_sparse
+    fl = 0.0
+    if cfg.kind == "xdeepfm":
+        prev = f
+        for hk in cfg.cin_layers:
+            fl += 2 * prev * f * hk * d + prev * f * d
+            prev = hk
+        dims = (f * d,) + tuple(cfg.mlp) + (1,)
+        fl += sum(2 * a * b_ for a, b_ in zip(dims[:-1], dims[1:]))
+    elif cfg.kind == "wide_deep":
+        dims = (f * d,) + tuple(cfg.mlp) + (1,)
+        fl += sum(2 * a * b_ for a, b_ in zip(dims[:-1], dims[1:]))
+    elif cfg.kind == "din":
+        s = cfg.seq_len
+        adims = (4 * d,) + tuple(cfg.attn_mlp) + (1,)
+        fl += s * sum(2 * a * b_ for a, b_ in zip(adims[:-1], adims[1:]))
+        mdims = ((cfg.n_sparse + 2) * d,) + tuple(cfg.mlp) + (1,)
+        fl += sum(2 * a * b_ for a, b_ in zip(mdims[:-1], mdims[1:]))
+    elif cfg.kind == "mind":
+        s, i = cfg.seq_len, cfg.n_interests
+        fl += 2 * s * d * d                       # bilinear map
+        fl += cfg.capsule_iters * (4 * i * s * d)  # routing iterations
+        fl += 2 * d * d + 2 * i * d               # label attention
+    return float(fl * batch)
+
+
+def _recsys_batch_abs(cfg, b: int, mesh: Mesh) -> tuple[dict, dict]:
+    abs_ = {
+        "sparse_ids": jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b,), jnp.float32),
+    }
+    specs = {
+        "sparse_ids": _bspec(mesh, b, None),
+        "labels": _bspec(mesh, b),
+    }
+    if cfg.seq_len:
+        abs_["hist_ids"] = jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32)
+        abs_["hist_len"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        specs["hist_ids"] = _bspec(mesh, b, None)
+        specs["hist_len"] = _bspec(mesh, b)
+    return abs_, specs
+
+
+def _recsys_cell(arch: ArchDef, shape: ShapeDef, mesh: Mesh) -> Cell:
+    from repro.models import recsys as rs
+    from repro.models.recsys import models as rm
+
+    cfg = arch.config
+    ba = batch_axes(mesh)
+    p_abs = rm.param_shapes(cfg)
+    p_specs = rm.param_specs(cfg)
+
+    if shape.kind == "train":
+        b = shape.batch
+        o_abs = opt_abstract(p_abs)
+        o_specs = opt_specs(p_specs, p_abs, mesh)
+        batch_abs, b_specs = _recsys_batch_abs(cfg, b, mesh)
+        step = rm.make_train_step(cfg, mesh=mesh, batch_axes=ba)
+        mf = 3.0 * _recsys_model_flops(cfg, b)
+        return Cell(arch.name, shape.name, step,
+                    (p_abs, o_abs, batch_abs),
+                    (p_specs, o_specs, b_specs),
+                    (p_specs, o_specs, None), mf, donate=(0, 1))
+    if shape.kind == "serve":
+        b = shape.batch
+        batch_abs, b_specs = _recsys_batch_abs(cfg, b, mesh)
+        batch_abs.pop("labels"); b_specs.pop("labels")
+
+        def step(params, batch):
+            return jax.nn.sigmoid(rm.forward(params, batch, cfg, mesh, ba))
+
+        mf = _recsys_model_flops(cfg, b)
+        return Cell(arch.name, shape.name, step, (p_abs, batch_abs),
+                    (p_specs, b_specs), None, mf)
+    if shape.kind == "retrieval":
+        nc = shape.get("n_candidates")
+        d = cfg.embed_dim
+        cand = jax.ShapeDtypeStruct((nc, d), jnp.float32)
+        cand_spec = P("model", None)
+        if cfg.kind == "mind":
+            hist = jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32)
+            hlen = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+            def step(params, hist_ids, hist_len, cand):
+                from repro.models.recsys.models import capsule_routing
+                from repro.models.recsys.embedding import embedding_lookup_sharded
+                # single-user tower: batch replicated (batch=1 < data axis)
+                hvec = embedding_lookup_sharded(params["table"], hist_ids, mesh, ())
+                hmask = jnp.arange(cfg.seq_len)[None, :] < hist_len[:, None]
+                interests = capsule_routing(hvec, hmask, params["bilinear"], cfg)
+                return rm.retrieval_scores(interests, cand, k=100)
+
+            mf = 2.0 * nc * d * cfg.n_interests + _recsys_model_flops(cfg, 1)
+            return Cell(arch.name, shape.name, step,
+                        (p_abs, hist, hlen, cand),
+                        (p_specs, P(None, None), P(None), cand_spec),
+                        None, mf,
+                        note="1 user x 1M candidates, batched dot + top-k")
+        # ranking archs: bulk-score the 1M candidates through the model
+        b = nc
+        batch_abs, b_specs = _recsys_batch_abs(cfg, b, mesh)
+        batch_abs.pop("labels"); b_specs.pop("labels")
+
+        def step(params, batch):
+            return jax.nn.sigmoid(rm.forward(params, batch, cfg, mesh, ba))
+
+        mf = _recsys_model_flops(cfg, b)
+        return Cell(arch.name, shape.name, step, (p_abs, batch_abs),
+                    (p_specs, b_specs), None, mf,
+                    note="1 user x 1M candidates scored as a bulk batch")
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# ANNS (Helmsman) cells
+# ---------------------------------------------------------------------------
+def _anns_cell(arch: ArchDef, shape: ShapeDef, mesh: Mesh) -> Cell:
+    from repro.core.search import SearchConfig, make_sharded_serve
+    from repro.core.gbdt import GBDTParams
+    from repro.core.llsp import LLSPParams
+
+    hc = arch.config
+    ba = batch_axes(mesh)
+    tp = mesh.shape["model"]
+
+    if shape.kind == "anns_serve":
+        b = shape.batch
+        scfg = SearchConfig(k=hc.k, nprobe_max=hc.nprobe_max,
+                            pruning="llsp", use_kernel=False)
+        C, L, D = hc.n_clusters, hc.cluster_len, hc.dim
+        cents = jax.ShapeDtypeStruct((C, D), jnp.float32)
+        posts = jax.ShapeDtypeStruct((C, L, D), jnp.float32)
+        pids = jax.ShapeDtypeStruct((C, L), jnp.int32)
+        n_levels, T, nodes = 4, 64, 63
+        gb = lambda lead: GBDTParams(
+            feature=jax.ShapeDtypeStruct(lead + (T, nodes), jnp.int32),
+            threshold=jax.ShapeDtypeStruct(lead + (T, nodes), jnp.float32),
+            value=jax.ShapeDtypeStruct(lead + (T, nodes), jnp.float32),
+            base=jax.ShapeDtypeStruct(lead, jnp.float32),
+            lr=jax.ShapeDtypeStruct(lead, jnp.float32),
+        )
+        llsp = LLSPParams(
+            router=gb(()),
+            pruners=gb((n_levels,)),
+            levels=jax.ShapeDtypeStruct((n_levels,), jnp.int32),
+        )
+        queries = jax.ShapeDtypeStruct((b, D), jnp.float32)
+        topk = jax.ShapeDtypeStruct((b,), jnp.int32)
+        fn = make_sharded_serve(mesh, scfg, batch_axes=ba, shard_axis="model")
+        llsp_spec = jax.tree.map(lambda _: P(), llsp)
+        # distance flops: centroid scan (B x C x D per model shard, replicated
+        # in the baseline) + posting scan (B x nprobe x L x D)
+        mf = 2.0 * b * D * (C + hc.nprobe_max * L)
+        return Cell(arch.name, shape.name, fn,
+                    (cents, posts, pids, llsp, queries, topk),
+                    (P(), P("model"), P("model"), llsp_spec,
+                     _bspec(mesh, b, None), _bspec(mesh, b)),
+                    None, mf,
+                    note="paper's serving path: LLSP + sharded posting scan + k-merge")
+    if shape.kind == "anns_build":
+        n = shape.batch
+        k = shape.get("k_coarse")
+        D = hc.dim
+        x = jax.ShapeDtypeStruct((n, D), jnp.float32)
+        cents = jax.ShapeDtypeStruct((k, D), jnp.float32)
+
+        def step(x, cents):
+            from repro.build.kmeans import kmeans_sharded_step
+            return kmeans_sharded_step(mesh, x, cents, k)
+
+        mf = 2.0 * n * k * D
+        return Cell(arch.name, shape.name, step, (x, cents),
+                    (_bspec(mesh, n, None), P(None, None)), P(None, None), mf,
+                    note="one distributed Lloyd iteration (stage-1 build)")
+    raise ValueError(shape.kind)
+
+
+BUILDERS = {
+    "lm": _lm_cell,
+    "gnn": _gnn_cell,
+    "recsys": _recsys_cell,
+    "anns": _anns_cell,
+}
+
+# beyond-baseline per-arch optimizations (§Perf hillclimbs):
+#   * pad_heads_to   — heads shard over TP=16, killing the O(S^2) score psum
+#                      that Dh-sharding forces (phi4: 24->32, llama4: 40->48)
+#   * seq_parallel   — Megatron-SP activation sharding between blocks
+#   * shard_centroids + bf16 postings — Helmsman serving memory/compute
+OPT_OVERRIDES = {
+    # head padding: big win wherever scores are O(S^2) (train/prefill);
+    # slightly NEGATIVE at decode (Tq=1, no score psum) -> decode stays base
+    ("phi4_mini", "prefill"): dict(pad_heads_to=32),
+    ("phi4_mini", "train"): dict(pad_heads_to=32, seq_parallel=True),
+    ("llama4_scout", "prefill"): dict(pad_heads_to=48),
+    ("llama4_scout", "train"): dict(pad_heads_to=48, seq_parallel=True),
+    ("gemma3_12b", "train"): dict(pure_dp=True),
+    ("gemma3_27b", "train"): dict(seq_parallel=True),
+    ("qwen2_moe", "train"): dict(seq_parallel=True),
+}
+
+
+def optimize_arch(arch: ArchDef, shape_name: str) -> ArchDef:
+    if arch.family == "gnn":
+        mode = arch.shapes[shape_name].get("mode")
+        if mode == "full":   # full-graph cells: row-DP + dst-sorted edges
+            cfg = dataclasses.replace(arch.config, row_dp=True)
+            return dataclasses.replace(arch, config=cfg)
+        return arch
+    if arch.family != "lm":
+        return arch
+    kind = arch.shapes[shape_name].kind
+    ov = OPT_OVERRIDES.get((arch.name, kind),
+                           OPT_OVERRIDES.get((arch.name, "*")))
+    if ov:
+        cfg = dataclasses.replace(arch.config, **ov)
+        return dataclasses.replace(arch, config=cfg)
+    return arch
+
+
+def build_cell(arch: ArchDef, shape_name: str, mesh: Mesh,
+               variant: str = "base") -> Cell:
+    if variant == "opt":
+        arch = optimize_arch(arch, shape_name)
+    shape = arch.shapes[shape_name]
+    cell = BUILDERS[arch.family](arch, shape, mesh)
+    if variant == "opt" and arch.family == "anns" and shape.kind == "anns_serve":
+        cell = _anns_cell_opt(arch, shape, mesh)
+    return cell
+
+
+def _anns_cell_opt(arch: ArchDef, shape: ShapeDef, mesh: Mesh) -> Cell:
+    """Optimized Helmsman serving it.3: sharded centroid scan + int8
+    RESIDUAL postings (4x fewer scan bytes, <1% recall cost — validated in
+    tests/test_quantize.py)."""
+    from repro.core.search import SearchConfig, make_sharded_serve_quantized
+    base = _anns_cell(arch, shape, mesh)
+    hc = arch.config
+    ba = batch_axes(mesh)
+    scfg = SearchConfig(k=hc.k, nprobe_max=hc.nprobe_max, pruning="llsp",
+                        use_kernel=False, shard_centroids=True)
+    fn = make_sharded_serve_quantized(mesh, scfg, batch_axes=ba,
+                                      shard_axis="model")
+    C, L, D = hc.n_clusters, hc.cluster_len, hc.dim
+    cents, _posts, pids, llsp, queries, topk = base.abstract_args
+    args = (
+        cents,
+        jax.ShapeDtypeStruct((C, L, D), jnp.int8),      # q8 residuals
+        jax.ShapeDtypeStruct((C, 1, 1), jnp.float32),   # per-cluster scale
+        jax.ShapeDtypeStruct((C, L), jnp.float32),      # precomputed norms
+        pids, llsp, queries, topk,
+    )
+    specs = (P("model"), P("model"), P("model"), P("model"), P("model"),
+             base.in_specs[3], base.in_specs[4], base.in_specs[5])
+    return dataclasses.replace(
+        base, fn=fn, abstract_args=args, in_specs=specs,
+        note=base.note + " [opt: sharded centroid scan + int8 residual postings]")

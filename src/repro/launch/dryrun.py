@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY other import: jax locks the
+#   device count at first init, and the production meshes need 512
+#   placeholder devices (16x16 single pod, 2x16x16 multi-pod).
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(*input_specs(arch))
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+plus a collective-bytes pass over the post-SPMD HLO (cost_analysis does not
+expose collective traffic).  Results stream to one JSON per cell under
+``results/dryrun/`` so the sweep is resumable; benchmarks/roofline.py builds
+the §Roofline table from those files.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse
+import json
+import time
+import traceback
+
+# deliberate: jax imports AFTER the XLA_FLAGS line above
+import jax                                            # noqa: E402
+import numpy as np                                    # noqa: E402
+
+from repro.configs import all_archs, get              # noqa: E402
+from repro.launch.cells import build_cell             # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# TPU v5e hardware constants (per spec)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
+             out_dir: str, force: bool = False, save_hlo: bool = False,
+             variant: str = "base") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch_name}.{shape_name}.{mesh_kind}" + (
+        "" if variant == "base" else f".{variant}")
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            cached = json.load(f)
+        if cached.get("ok"):        # failed cells re-run on the next sweep
+            return cached
+
+    arch = get(arch_name)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "ok": False}
+    t0 = time.perf_counter()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        cell = build_cell(arch, shape_name, mesh, variant=variant)
+        from jax.sharding import NamedSharding
+
+        def to_sharding(spec_tree, abs_tree):
+            return jax.tree.map(
+                lambda sp, _: NamedSharding(mesh, sp), spec_tree, abs_tree,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+
+        in_sh = tuple(
+            to_sharding(sp, ab) for sp, ab in zip(cell.in_specs, cell.abstract_args)
+        )
+        out_sh = None
+        if cell.out_specs is not None:
+            out_sh = jax.tree.map(
+                lambda sp: NamedSharding(mesh, sp), cell.out_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            )
+        with mesh:
+            jitted = jax.jit(cell.fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*cell.abstract_args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            from repro.launch.hlo_analysis import analyze
+            totals = analyze(hlo)
+            coll = {"bytes": totals.coll, "ops": totals.coll_ops,
+                    "total": totals.coll_total}
+            if save_hlo:
+                with open(os.path.join(out_dir, tag + ".hlo"), "w") as f:
+                    f.write(hlo)
+            hlo_len = len(hlo)
+            del hlo
+
+        # trip-count-corrected per-device totals (launch/hlo_analysis.py);
+        # raw cost_analysis() kept for reference (counts loop bodies once)
+        flops = totals.flops
+        bytes_acc = totals.bytes
+        raw_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+        raw_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+        mem_rec = {}
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    mem_rec[k] = int(v)
+        # cost_analysis() of the SPMD-partitioned module reports PER-DEVICE
+        # numbers (calibrated against the analytically-known k-means cell:
+        # HLO flops == global/16 under data-axis-only sharding), so the
+        # roofline terms divide by per-chip peaks only.
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_acc / HBM_BW
+        coll_s = coll["total"] / ICI_BW
+        model_flops = cell.model_flops
+        rec.update({
+            "ok": True,
+            "n_chips": n_chips,
+            "flops": flops,
+            "bytes_accessed": bytes_acc,
+            "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
+            "n_while_loops": totals.n_while,
+            "collectives": coll,
+            "memory_analysis": mem_rec,
+            "bytes_per_device": {
+                k: v // n_chips for k, v in mem_rec.items()
+                if k.endswith("_in_bytes")
+            },
+            "roofline": {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": coll_s,
+                "dominant": max(
+                    [("compute", compute_s), ("memory", memory_s),
+                     ("collective", coll_s)], key=lambda kv: kv[1])[0],
+            },
+            "model_flops": model_flops,
+            # global useful flops vs global compiled flops (per-device x chips)
+            "useful_ratio": (model_flops / (flops * n_chips)) if flops else None,
+            "note": cell.note,
+            "hlo_chars": hlo_len,
+            "seconds": {"lower": t_lower, "compile": t_compile},
+        })
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["seconds"] = {"total": time.perf_counter() - t0}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[{status}] {tag}  "
+          + (f"flops={rec['flops']:.3g} coll={rec['collectives']['total']:.3g} "
+             f"dom={rec['roofline']['dominant']} "
+             f"compile={rec['seconds']['compile']:.1f}s"
+             if rec["ok"] else rec.get("error", "")), flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="base", choices=["base", "opt"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for shape in arch.shapes:
+                for m in meshes:
+                    cells.append((arch.name, shape, m))
+            for sname, reason in arch.skip_shapes:
+                for m in meshes:
+                    tag = f"{arch.name}.{sname}.{m}"
+                    path = os.path.join(args.out, tag + ".json")
+                    os.makedirs(args.out, exist_ok=True)
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch.name, "shape": sname,
+                                   "mesh": m, "ok": None,
+                                   "skipped": reason}, f, indent=1)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        for m in meshes:
+            cells.append((args.arch, args.shape, m))
+
+    n_ok = n_fail = 0
+    for arch_name, shape, m in cells:
+        rec = run_cell(arch_name, shape, m, args.out, force=args.force,
+                       save_hlo=args.save_hlo, variant=args.variant)
+        if rec.get("ok"):
+            n_ok += 1
+        elif rec.get("ok") is False:
+            n_fail += 1
+    print(f"done: {n_ok} ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

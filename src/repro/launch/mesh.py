@@ -1,0 +1,27 @@
+"""Production mesh factory.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; ``pod`` is an outer batch
+axis (gradient reduction / serving batch split crosses pods).
+
+A FUNCTION, not a module constant, so importing never touches jax device
+state (the dry run sets XLA_FLAGS before the first jax call; tests and
+benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the real local device(s) — smoke tests of sharded code
+    paths (shard_map logic) on CPU."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, max(1, n // data)), ("data", "model"))

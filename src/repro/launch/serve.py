@@ -1,0 +1,156 @@
+"""Serving launcher — the online half of Fig. 8 as a runnable node daemon.
+
+Responsibilities (container-scale versions of the production node):
+  * index deployment: build or load indexes, allocate their cluster extents
+    from the node's ChunkArena (multi-index hosting, §4.2), publish
+    IndexMeta;
+  * traffic loop: batched queries through the leveled LLSP engine;
+  * health: heartbeat table per logical shard, straggler detection, replica
+    failover on shard failure (§6.2);
+  * freshness: `--rebuild-every N` swaps in a freshly built index between
+    batches (the paper's daily/hourly rebuild flow) atomically.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --indexes 2 --batches 30
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.build.pipeline import BuildConfig, build_index
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.llsp import LLSPConfig
+from repro.core.search import SearchConfig, serve_leveled
+from repro.data import PAPER_DATASETS, make_queries, make_vectors
+from repro.distributed import HeartbeatMonitor, ownership_mask, plan_failover
+from repro.storage import ChunkArena, IndexMeta, make_replica_map, plan_striping
+
+
+@dataclasses.dataclass
+class Deployment:
+    name: str
+    index: object
+    llsp: object
+    spec: object
+    meta: IndexMeta
+    striping: object
+    replica_map: object
+
+
+def deploy(arena: ChunkArena, name: str, spec, workdir: str,
+           n_shards: int) -> Deployment:
+    x = make_vectors(spec)
+    q, topk = make_queries(spec, 256)
+    topk = np.minimum(topk, 50).astype(np.int32)
+    cfg = BuildConfig(max_cluster_size=96, cluster_len=128,
+                      coarse_per_task=5000, n_workers=2,
+                      llsp=LLSPConfig(levels=(8, 16, 32, 64)))
+    index, llsp, report = build_index(x, cfg, workdir, queries=q,
+                                      query_topk=topk)
+    cluster_bytes = index.cluster_len * index.dim * 4
+    extents = arena.allocate_index(name, index.n_clusters, cluster_bytes)
+    striping = plan_striping(index.n_clusters, n_shards, extents)
+    hot = np.arange(index.n_clusters)[::3]
+    rmap = make_replica_map(index.n_clusters, n_shards, striping,
+                            hot_clusters=hot, n_replicas=2)
+    meta = IndexMeta(name=name, n_clusters=index.n_clusters,
+                     cluster_len=index.cluster_len, dim=index.dim,
+                     dtype="float32", extents=extents)
+    meta.save(os.path.join(workdir, f"{name}.meta.json"))
+    print(f"[deploy] {name}: {index.n_clusters} clusters, "
+          f"{len({e.device for e in extents})} devices, "
+          f"arena free {arena.free_bytes >> 20} MiB")
+    return Deployment(name, index, llsp, spec, meta, striping, rmap)
+
+
+def undeploy(arena: ChunkArena, dep: Deployment) -> None:
+    arena.release_index(dep.name)
+    print(f"[undeploy] {dep.name}: chunks recycled "
+          f"(arena free {arena.free_bytes >> 20} MiB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--indexes", type=int, default=2)
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--n", type=int, default=10_000)
+    ap.add_argument("--rebuild-every", type=int, default=8)
+    ap.add_argument("--fail-shard", type=int, default=-1,
+                    help="simulate this shard failing mid-run")
+    args = ap.parse_args()
+
+    n_shards = 8
+    arena = ChunkArena(n_devices=12, device_bytes=1 << 30, chunk_bytes=1 << 20)
+    hb = HeartbeatMonitor(n_shards)
+    names = list(PAPER_DATASETS)[: args.indexes]
+    deps = {}
+    with tempfile.TemporaryDirectory() as root:
+        for name in names:
+            spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
+            deps[name] = deploy(arena, name, spec,
+                                os.path.join(root, name), n_shards)
+
+        scfg = SearchConfig(k=10, nprobe_max=64, pruning="llsp", n_ratio=16,
+                            use_kernel=False)
+        failed: list = []
+        for b in range(args.batches):
+            name = names[b % len(names)]
+            dep = deps[name]
+            q, topk = make_queries(dep.spec, args.batch, seed=10_000 + b)
+            topk = np.minimum(topk, 50).astype(np.int32)
+            t0 = time.perf_counter()
+            out = serve_leveled(dep.index, dep.llsp, q, topk, scfg)
+            dt = time.perf_counter() - t0
+            hb.tick()
+            for s in range(n_shards):
+                if s not in failed:
+                    hb.beat(s, latency=dt / args.batch)
+            if b % 5 == 0:
+                x = make_vectors(dep.spec)
+                _, ti = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+                r = recall_at_k(out["ids"], np.asarray(ti))
+                print(f"[serve] b{b:03d} {name:8s} {args.batch/dt:7.0f} q/s "
+                      f"recall={r:.3f} probes={out['nprobe'].mean():.1f}")
+            if b == args.batches // 2 and args.fail_shard >= 0:
+                # fail a shard that actually owns clusters of THIS index
+                owners = set(dep.replica_map.replicas[:, 0].tolist())
+                shard = (args.fail_shard if args.fail_shard in owners
+                         else int(dep.replica_map.replicas[0, 0]))
+                failed.append(shard)
+                plan = plan_failover(dep.replica_map, failed)
+                mask = ownership_mask(plan.owner, n_shards)
+                print(f"[fault] shard {shard} down: "
+                      f"{len(plan.moved)} clusters on replicas, "
+                      f"{plan.n_lost} lost pending re-replication; "
+                      f"heartbeat reports failed={hb.failed().tolist()}")
+            if args.rebuild_every and b > 0 and b % args.rebuild_every == 0:
+                # freshness: rebuild + atomic swap (paper's daily rebuild)
+                name_r = names[0]
+                old = deps[name_r]
+                undeploy(arena, old)
+                spec = dataclasses.replace(old.spec, seed=old.spec.seed + b)
+                deps[name_r] = deploy(
+                    arena, name_r, spec,
+                    os.path.join(root, f"{name_r}_r{b}"), n_shards)
+                print(f"[swap] {name_r} rebuilt and swapped in")
+        if failed:
+            print(f"[health] heartbeat-detected failures at shutdown: "
+                  f"{hb.failed().tolist()} (injected: {failed})")
+        for dep in deps.values():
+            undeploy(arena, dep)
+        arena.validate()
+    print("[done]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from .transformer import (
+    LMConfig,
+    cache_shapes,
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    make_train_step,
+    param_shapes,
+    param_specs,
+    prefill_step,
+)
+from .moe import MoEConfig

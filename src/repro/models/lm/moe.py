@@ -1,0 +1,224 @@
+"""Mixture-of-Experts FFN with shard_map expert parallelism.
+
+Covers the two assigned MoE archs:
+* llama4-scout: 16 routed experts, top-1, plus 1 shared expert.
+* qwen2-moe:    60 routed experts (padded to 64 for even EP), top-4,
+                plus 4 shared experts.
+
+Design (TP-style activations, EP weights):
+activations are replicated across the ``model`` axis (as in Megatron TP), and
+each model shard owns E/TP experts.  Per shard: mask the router assignment to
+local experts, select up to ``capacity`` tokens per local expert with a
+static-shape argsort gather, run the expert FFN as one batched einsum, scatter
+the weighted outputs back, and psum over ``model``.  Communication is a single
+(B, S, D) psum — identical to the dense TP FFN — so EP costs no extra
+collective volume; the price is capacity-overflow token drops (standard).
+
+Shared experts are plain SwiGLU with d_ff sharded over ``model`` (TP), fused
+into the same psum.
+
+Router uses float32 logits + load-balancing auxiliary loss (recorded in the
+forward as a side value via ``aux_loss_accum`` — the train loss adds it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int            # routed experts (logical)
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0      # per shared expert
+    e_pad: int = 0            # padded expert count for even EP (0 = n_experts)
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+
+    @property
+    def e(self) -> int:
+        return self.e_pad or self.n_experts
+
+
+def moe_param_shapes(moe: MoEConfig, d: int, lead: tuple, dtype) -> dict:
+    sd = lambda shape: jax.ShapeDtypeStruct(lead + shape, dtype)
+    e, fe = moe.e, moe.d_ff_expert
+    out = {
+        "moe_router": jax.ShapeDtypeStruct(lead + (d, e), jnp.float32),
+        "moe_gate": sd((e, d, fe)),
+        "moe_up": sd((e, d, fe)),
+        "moe_down": sd((e, fe, d)),
+    }
+    if moe.n_shared:
+        fs = moe.n_shared * moe.d_ff_shared
+        out.update({
+            "w_gate": sd((d, fs)),
+            "w_up": sd((d, fs)),
+            "w_down": sd((fs, d)),
+        })
+    return out
+
+
+def moe_param_specs(moe: MoEConfig, fsdp: bool = False, n_lead: int = 2) -> dict:
+    dp = "data" if fsdp else None
+    lead = (None,) * n_lead
+    out = {
+        "moe_router": P(),
+        "moe_gate": P(*lead, "model", None, dp),
+        "moe_up": P(*lead, "model", None, dp),
+        "moe_down": P(*lead, "model", dp, None),
+    }
+    if moe.n_shared:
+        out.update({
+            "w_gate": P(*lead, dp, "model"),
+            "w_up": P(*lead, dp, "model"),
+            "w_down": P(*lead, "model", dp),
+        })
+    return out
+
+
+def _local_expert_ffn(
+    x2d: jax.Array,        # (T, D) local tokens (replicated over model)
+    probs: jax.Array,      # (T, K) router probs of the top-k choices
+    choice: jax.Array,     # (T, K) expert ids of the top-k choices
+    gate: jax.Array,       # (Eloc, D, Fe)
+    up: jax.Array,
+    down: jax.Array,       # (Eloc, Fe, D)
+    e0: jax.Array,         # first expert id owned by this shard
+    capacity: int,
+) -> jax.Array:
+    t, k = choice.shape
+    e_loc = gate.shape[0]
+    flat_choice = choice.reshape(-1)                   # (T*K,)
+    flat_prob = probs.reshape(-1)
+    local_eid = flat_choice - e0
+    mine = (local_eid >= 0) & (local_eid < e_loc)
+    # rank slots per local expert: sort (expert, -prob) so each expert's
+    # highest-prob tokens win the capacity race
+    sort_key = jnp.where(mine, local_eid, e_loc).astype(jnp.float32) * 2.0 - flat_prob * 1e-6
+    # selection is non-differentiable (grads flow via the prob weights at
+    # combine); stop_gradient also dodges the broken sort JVP in this build
+    order = jnp.argsort(jax.lax.stop_gradient(sort_key))
+    sorted_eid = jnp.where(mine, local_eid, e_loc)[order]
+    # position within its expert group
+    same = sorted_eid[:, None] == jnp.arange(e_loc + 1)[None, :]
+    rank_in_e = jnp.cumsum(same, axis=0) - 1
+    # flat 1-D gather (take_along_axis grads are broken in this jax build)
+    n_cols = e_loc + 1
+    slot_rank = rank_in_e.reshape(-1)[jnp.arange(t * k) * n_cols + sorted_eid]
+    keep = (sorted_eid < e_loc) & (slot_rank < capacity)
+    slot = jnp.where(keep, sorted_eid * capacity + slot_rank, e_loc * capacity)
+    # scatter token rows into (Eloc*capacity + 1 overflow, D)
+    token_of = order // k
+    buf = jnp.zeros((e_loc * capacity + 1, x2d.shape[1]), x2d.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], x2d[token_of], 0))
+    xe = buf[:-1].reshape(e_loc, capacity, -1)         # (Eloc, C, D)
+    g = jnp.einsum("ecd,edf->ecf", xe, gate)
+    u = jnp.einsum("ecd,edf->ecf", xe, up)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u, down)
+    y = y.reshape(e_loc * capacity, -1)
+    y = jnp.concatenate([y, jnp.zeros((1, y.shape[1]), y.dtype)], axis=0)
+    # gather back, weight by router prob, sum over the K choices
+    contrib = y[slot] * jnp.where(keep, flat_prob[order], 0.0)[:, None].astype(y.dtype)
+    out = jnp.zeros_like(x2d)
+    out = out.at[token_of].add(contrib)
+    return out
+
+
+def moe_ffn(
+    x: jax.Array,          # (B, S, D); B sharded over the batch axes
+    lp: dict,              # block-layer params incl. moe_* (already sliced)
+    moe: MoEConfig,
+    mesh,
+    fsdp: bool = False,
+) -> jax.Array:
+    b, s, d = x.shape
+    router = lp["moe_router"].astype(jnp.float32)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router)
+    if moe.e != moe.n_experts:  # mask padded experts off
+        pad_mask = jnp.arange(moe.e) >= moe.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs_full, moe.top_k)        # (B, S, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = mesh.shape["model"]
+    else:
+        tp = 1
+    e_loc = moe.e // tp
+    fe = moe.d_ff_expert
+
+    x2d = x.reshape(b * s, d)
+    probs2 = top_p.reshape(b * s, moe.top_k).astype(jnp.float32)
+    choice2 = top_e.reshape(b * s, moe.top_k)
+
+    if tp == 1:
+        capacity = max(1, int(np.ceil(b * s * moe.top_k / moe.e * moe.capacity_factor)))
+        routed = _local_expert_ffn(
+            x2d, probs2, choice2,
+            lp["moe_gate"], lp["moe_up"], lp["moe_down"],
+            jnp.int32(0), capacity,
+        )
+    else:
+        ba = tuple(a for a in mesh.axis_names if a != "model")
+
+        def shard_fn(x2d, probs2, choice2, gate, up, down):
+            shard = jax.lax.axis_index("model")
+            e0 = (shard * e_loc).astype(jnp.int32)
+            if fsdp:  # ZeRO-3: gather the weight shard over `data` per use
+                gate = jax.lax.all_gather(gate, "data", axis=3, tiled=True)
+                up = jax.lax.all_gather(up, "data", axis=3, tiled=True)
+                down = jax.lax.all_gather(down, "data", axis=2, tiled=True)
+            t_loc = x2d.shape[0]
+            cap = max(1, int(np.ceil(t_loc * moe.top_k / moe.e * moe.capacity_factor)))
+            y = _local_expert_ffn(
+                x2d, probs2, choice2, gate[0], up[0], down[0], e0, cap
+            )
+            return jax.lax.psum(y, "model")
+
+        wdp = "data" if fsdp else None
+        routed = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(
+                P(ba), P(ba), P(ba),
+                P("model", None, None, wdp),
+                P("model", None, None, wdp),
+                P("model", None, wdp, None),
+            ),
+            out_specs=P(ba),
+            check_vma=False,
+        )(
+            x2d, probs2, choice2,
+            lp["moe_gate"].reshape(tp, e_loc, d, fe),
+            lp["moe_up"].reshape(tp, e_loc, d, fe),
+            lp["moe_down"].reshape(tp, e_loc, fe, d),
+        )
+    out = routed.reshape(b, s, d)
+
+    if moe.n_shared:
+        g = jnp.einsum("bsd,df->bsf", x, lp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, lp["w_up"])
+        out = out + jnp.einsum(
+            "bsf,fd->bsd",
+            jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+            lp["w_down"],
+        )
+    return out.astype(x.dtype)
+
+
+def load_balance_loss(logits: jax.Array, top_e: jax.Array, moe: MoEConfig) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    p_mean = probs.mean(axis=(0, 1))
+    onehot = jax.nn.one_hot(top_e[..., 0], moe.e)
+    f = onehot.mean(axis=(0, 1))
+    return moe.e * jnp.sum(f * p_mean) * moe.aux_coef

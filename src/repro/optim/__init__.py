@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, AdamWState, apply, cosine_schedule, init

@@ -1,0 +1,10 @@
+from .arena import ChunkArena, Extent, OutOfSpace, LBA_BYTES
+from .layout import (
+    IndexMeta,
+    ReplicaMap,
+    Striping,
+    apply_striping,
+    make_replica_map,
+    plan_striping,
+)
+from .host_tier import TieredPostings, TierStats

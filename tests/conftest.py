@@ -1,0 +1,36 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device (the 512-device flag belongs to
+launch/dryrun.py ONLY, per the dry-run spec)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_corpus(rng):
+    """Clustered vectors + queries shared by the ANNS tests."""
+    from repro.data import PAPER_DATASETS, make_queries, make_vectors
+    import dataclasses
+    spec = dataclasses.replace(PAPER_DATASETS["sift"], n=4000, dim=24, n_modes=16)
+    x = make_vectors(spec)
+    q, topk = make_queries(spec, 64)
+    return x, q, np.minimum(topk, 50).astype(np.int32)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_corpus):
+    import jax.numpy as jnp
+    from repro.build.kmeans import balanced_hierarchical_kmeans
+    from repro.core.spann_rules import closure_assign
+    from repro.core.ivf import IVFIndex, build_postings
+
+    x, _, _ = small_corpus
+    cents, _ = balanced_hierarchical_kmeans(x, max_cluster_size=48, iters=8)
+    ca = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                   eps=0.2, max_replicas=4))
+    postings, pids = build_postings(x, ca, cents.shape[0], 64)
+    return IVFIndex(jnp.asarray(cents), jnp.asarray(postings), jnp.asarray(pids))

@@ -1,0 +1,62 @@
+"""Distance / top-k utilities, with hypothesis property tests."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distance import (
+    dedup_topk, recall_at_k, squared_l2, squared_l2_chunked, topk_smallest,
+)
+
+
+def test_squared_l2_matches_numpy(rng):
+    a = rng.normal(size=(20, 7)).astype(np.float32)
+    b = rng.normal(size=(31, 7)).astype(np.float32)
+    want = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(squared_l2(jnp.asarray(a), jnp.asarray(b))),
+                               want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 7, 31, 100])
+def test_squared_l2_chunked_invariant_to_chunk(rng, chunk):
+    a = rng.normal(size=(9, 5)).astype(np.float32)
+    b = rng.normal(size=(23, 5)).astype(np.float32)
+    full = squared_l2(jnp.asarray(a), jnp.asarray(b))
+    ch = squared_l2_chunked(jnp.asarray(a), jnp.asarray(b), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(ch), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_dedup_topk_properties(data):
+    n = data.draw(st.integers(4, 40))
+    k = data.draw(st.integers(1, 8))
+    n_ids = data.draw(st.integers(2, 12))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    dists = rng.uniform(0, 10, size=(2, n)).astype(np.float32)
+    ids = rng.integers(-1, n_ids, size=(2, n)).astype(np.int32)
+    vals, out_ids = dedup_topk(jnp.asarray(dists), jnp.asarray(ids), k)
+    vals, out_ids = np.asarray(vals), np.asarray(out_ids)
+    for row in range(2):
+        seen = set()
+        # valid prefix: no dup ids, ascending distances, each is the MIN
+        # distance for that id
+        for j in range(k):
+            if out_ids[row, j] < 0:
+                continue
+            i = int(out_ids[row, j])
+            assert i not in seen, "duplicate id in top-k"
+            seen.add(i)
+            mind = dists[row][ids[row] == i].min()
+            assert vals[row, j] == pytest.approx(mind, rel=1e-6)
+        finite = vals[row][~np.isinf(vals[row])]
+        assert np.all(np.diff(finite) >= -1e-6), "not sorted"
+        # count of unique valid ids caps the number of finite results
+        n_unique = len(set(ids[row][ids[row] >= 0].tolist()))
+        assert (out_ids[row] >= 0).sum() == min(k, n_unique)
+
+
+def test_recall_at_k():
+    pred = np.array([[1, 2, 3], [4, 5, 6]])
+    true = np.array([[1, 2, 9], [4, 5, 6]])
+    assert recall_at_k(pred, true) == pytest.approx(5 / 6)

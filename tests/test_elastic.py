@@ -1,0 +1,71 @@
+"""Elastic construction pool: policies under failure injection."""
+import numpy as np
+import pytest
+
+from repro.build.elastic import (
+    PoolPolicy, SimNode, SimPool, SimTask, TaskFailed, run_tasks,
+)
+
+
+def _tasks(n, work=10.0):
+    return [SimTask(i, work) for i in range(n)]
+
+
+def test_sim_pool_finishes_under_preemption():
+    nodes = [SimNode(i, preempt_rate=0.4 if i < 3 else 0.0) for i in range(8)]
+    rep = SimPool(nodes, PoolPolicy(seed=1)).run(_tasks(50))
+    assert len(rep.task_node) == 50
+    assert rep.n_preemptions > 0
+
+
+def test_sim_pool_evicts_flaky_nodes():
+    nodes = [SimNode(0, preempt_rate=1.0)] + [SimNode(i) for i in range(1, 4)]
+    rep = SimPool(nodes, PoolPolicy(evict_after=2, seed=2)).run(_tasks(20))
+    assert rep.n_evictions >= 1
+    # the always-preempting node must not own any finished task
+    assert 0 not in set(rep.task_node.values())
+
+
+def test_sim_pool_scaling_reduces_makespan():
+    """Fig. 21b analogue: makespan shrinks as workers grow."""
+    makespans = []
+    for n_nodes in (1, 4, 16, 64):
+        nodes = [SimNode(i) for i in range(n_nodes)]
+        rep = SimPool(nodes, PoolPolicy(seed=0)).run(_tasks(128, work=5.0))
+        makespans.append(rep.makespan)
+    assert makespans == sorted(makespans, reverse=True)
+    assert makespans[0] / makespans[-1] > 16  # near-linear region
+
+
+def test_sim_pool_straggler_backup():
+    nodes = [SimNode(0, speed=0.02)] + [SimNode(i) for i in range(1, 6)]
+    rep = SimPool(nodes, PoolPolicy(straggler_factor=2.0, seed=3)).run(
+        _tasks(24, work=8.0))
+    # the slow node's task gets duplicated; makespan must stay near the
+    # fast-node serial bound, far below the slow node's 400 time units
+    assert rep.makespan < 100
+    assert rep.n_backups >= 1
+
+
+def test_run_tasks_retries_transient_failures():
+    attempts = {}
+
+    def mk(i):
+        def f():
+            attempts[i] = attempts.get(i, 0) + 1
+            if i % 3 == 0 and attempts[i] < 3:
+                raise RuntimeError("preempted")
+            return i * i
+        return f
+
+    out = run_tasks([mk(i) for i in range(9)], n_workers=3)
+    assert out == [i * i for i in range(9)]
+    assert attempts[0] == 3
+
+
+def test_run_tasks_gives_up_eventually():
+    def always_fail():
+        raise RuntimeError("dead node")
+
+    with pytest.raises(TaskFailed):
+        run_tasks([always_fail], n_workers=1, max_attempts=3)

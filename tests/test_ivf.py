@@ -1,0 +1,113 @@
+"""IVF index construction + search properties."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.build.kmeans import balanced_hierarchical_kmeans, kmeans
+from repro.core.distance import recall_at_k
+from repro.core.ivf import IVFIndex, brute_force_topk, build_postings, search_flat
+from repro.core.search import SearchConfig, serve_step
+from repro.core.spann_rules import closure_assign, fixed_eps_nprobe
+
+
+def test_kmeans_decreases_inertia(rng):
+    x = rng.normal(size=(1000, 8)).astype(np.float32)
+    _, _, inertia1 = kmeans(x, 10, iters=1)
+    _, _, inertia10 = kmeans(x, 10, iters=10)
+    assert inertia10 <= inertia1
+
+
+def test_balanced_kmeans_respects_bound(rng):
+    x = rng.normal(size=(3000, 8)).astype(np.float32)
+    cents, assign = balanced_hierarchical_kmeans(x, max_cluster_size=50, iters=6)
+    sizes = np.bincount(assign, minlength=cents.shape[0])
+    assert sizes.max() <= 50
+    assert assign.min() >= 0 and assign.max() < cents.shape[0]
+
+
+def test_closure_assign_invariants(rng):
+    x = rng.normal(size=(500, 8)).astype(np.float32)
+    cents, _, _ = kmeans(x, 20, iters=5)
+    ca = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                   eps=0.3, max_replicas=4))
+    # column 0 is the nearest centroid
+    d = ((x[:, None] - cents[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(ca[:, 0], d.argmin(1))
+    # no duplicate assignment per row; -1 padding only after valid entries
+    for row in ca:
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid)
+
+
+def test_closure_rng_rule_prunes(rng):
+    x = rng.normal(size=(500, 8)).astype(np.float32)
+    cents, _, _ = kmeans(x, 20, iters=5)
+    with_rng = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                         eps=0.5, max_replicas=4, rng_rule=True))
+    without = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                        eps=0.5, max_replicas=4, rng_rule=False))
+    assert (with_rng >= 0).sum() <= (without >= 0).sum()
+
+
+def test_build_postings_fixed_size_and_ids(rng):
+    x = rng.normal(size=(300, 8)).astype(np.float32)
+    assign = np.stack([rng.integers(0, 10, 300),
+                       rng.integers(-1, 10, 300)], axis=1).astype(np.int32)
+    postings, ids = build_postings(x, assign, 10, 40)
+    assert postings.shape == (10, 40, 8) and ids.shape == (10, 40)
+    for c in range(10):
+        valid = ids[c][ids[c] >= 0]
+        for slot, vid in enumerate(ids[c]):
+            if vid >= 0:
+                np.testing.assert_array_equal(postings[c, slot], x[vid])
+
+
+def test_recall_monotonic_in_nprobe(small_corpus, small_index):
+    x, q, _ = small_corpus
+    qj = jnp.asarray(q)
+    _, ti = brute_force_topk(jnp.asarray(x), qj, 10)
+    recalls = []
+    for nprobe in (2, 8, 32):
+        _, ids = search_flat(small_index, qj, 10, nprobe=nprobe)
+        recalls.append(recall_at_k(ids, ti))
+    assert recalls[0] <= recalls[1] <= recalls[2] + 1e-9
+    assert recalls[-1] > 0.8, recalls  # clustered corpus: 32 probes suffice
+
+
+def test_serve_step_kernel_matches_flat(small_corpus, small_index):
+    x, q, _ = small_corpus
+    qj = jnp.asarray(q)
+    topk_req = jnp.full((q.shape[0],), 10, jnp.int32)
+    d0, i0 = search_flat(small_index, qj, 10, nprobe=16)
+    for use_kernel in (False, True):
+        out = serve_step(small_index, None, qj, topk_req,
+                         SearchConfig(k=10, nprobe_max=16, pruning="none",
+                                      use_kernel=use_kernel))
+        np.testing.assert_allclose(np.asarray(out["dists"]), np.asarray(d0),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fixed_eps_pruning_counts():
+    cd = jnp.asarray([[1.0, 1.1, 1.2, 4.0], [1.0, 2.0, 3.0, 4.0]])
+    np_ = np.asarray(fixed_eps_nprobe(cd, eps=0.12, nmax=4))
+    # (1+eps)^2*1.0 = 1.2544 -> first row keeps 3, second keeps 1
+    np.testing.assert_array_equal(np_, [3, 1])
+
+
+def test_two_level_quantizer_path(small_corpus, small_index):
+    from repro.core.ivf import make_group_quantizer
+    x, q, _ = small_corpus
+    gc, gm = make_group_quantizer(np.asarray(small_index.centroids), 8)
+    idx = IVFIndex(small_index.centroids, small_index.postings,
+                   small_index.posting_ids,
+                   group_centroids=jnp.asarray(gc), group_members=jnp.asarray(gm))
+    qj = jnp.asarray(q)
+    topk_req = jnp.full((q.shape[0],), 10, jnp.int32)
+    out = serve_step(idx, None, qj, topk_req,
+                     SearchConfig(k=10, nprobe_max=16, pruning="none",
+                                  use_kernel=False, two_level=True,
+                                  n_groups_probe=4))
+    _, ti = brute_force_topk(jnp.asarray(x), qj, 10)
+    r = recall_at_k(out["ids"], ti)
+    assert r > 0.5, r   # coarse quantizer trades some recall

@@ -1,0 +1,77 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs the pure-jnp
+oracle in kernels/ref.py."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.ivf_scan import ivf_scan, ivf_scan_clustermajor
+from repro.kernels.pairwise_l2 import pairwise_l2
+
+
+@pytest.mark.parametrize("n,m,d", [(8, 16, 8), (128, 128, 128),
+                                   (100, 257, 96), (33, 64, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_l2_sweep(n, m, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * m + d))
+    a = jax.random.normal(k1, (n, d), dtype)
+    b = jax.random.normal(k2, (m, d), dtype)
+    got = pairwise_l2(a, b, bn=32, bm=64, bd=64, interpret=True)
+    want = ref.pairwise_l2_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("c,l,d,b,p", [(16, 8, 16, 4, 4), (64, 32, 64, 8, 16),
+                                       (10, 16, 24, 3, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ivf_scan_sweep(c, l, d, b, p, dtype):
+    key = jax.random.PRNGKey(c + l + d)
+    k1, k2, k3 = jax.random.split(key, 3)
+    postings = jax.random.normal(k1, (c, l, d), dtype)
+    queries = jax.random.normal(k2, (b, d), dtype)
+    cids = jax.random.randint(k3, (b, p), 0, c)
+    mask = jax.random.bernoulli(k3, 0.7, (b, p))
+    got = ivf_scan(postings, cids, mask, queries, interpret=True)
+    want = ref.ivf_scan_ref(postings, cids, mask, queries)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+    # masked probes are +inf in both
+    assert np.all(np.isinf(np.asarray(got)[~np.asarray(mask)]))
+
+
+@pytest.mark.parametrize("c,l,d,b,a_n", [(16, 8, 16, 4, 6), (32, 16, 32, 8, 12)])
+def test_ivf_scan_clustermajor_sweep(c, l, d, b, a_n):
+    key = jax.random.PRNGKey(a_n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    postings = jax.random.normal(k1, (c, l, d))
+    queries = jax.random.normal(k2, (b, d))
+    active = jax.random.randint(k3, (a_n,), 0, c)
+    qsel = jax.random.bernoulli(k3, 0.5, (a_n, b))
+    got = ivf_scan_clustermajor(postings, active, qsel, queries, interpret=True)
+    want = ref.ivf_scan_clustermajor_ref(postings, active, qsel, queries)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_kmeans_assign_matches_argmin():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(k1, (300, 32))
+    c = jax.random.normal(k2, (17, 32))
+    assign, mind = ops.kmeans_assign(x, c, chunk=128)
+    d = ref.pairwise_l2_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(assign), np.argmin(np.asarray(d), 1))
+    # fused-vs-unfused float noise near zero: atol-dominated comparison
+    np.testing.assert_allclose(np.asarray(mind), np.min(np.asarray(d), 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_wrappers_dispatch():
+    """ops.* must run without explicit interpret flags on this backend."""
+    a = jnp.ones((16, 8))
+    b = jnp.zeros((4, 8))
+    out = ops.pairwise_l2(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.full((16, 4), 8.0), rtol=1e-6)

@@ -1,0 +1,64 @@
+"""Construction pipeline: 3 stages, checkpoint/resume, LLSP integration."""
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.build.pipeline import BuildConfig, build_index
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.llsp import LLSPConfig
+from repro.core.search import SearchConfig, serve_step
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory, small_corpus):
+    x, q, topk = small_corpus
+    wd = str(tmp_path_factory.mktemp("build"))
+    cfg = BuildConfig(max_cluster_size=48, cluster_len=64, coarse_per_task=800,
+                      n_workers=2,
+                      llsp=LLSPConfig(levels=(4, 8, 16, 32), n_trees=20,
+                                      max_depth=4, n_ratio_features=8))
+    idx, llsp, report = build_index(x, cfg, wd, queries=q,
+                                    query_topk=np.minimum(topk, 20))
+    return wd, cfg, idx, llsp, report, small_corpus
+
+
+def test_build_produces_searchable_index(built):
+    wd, cfg, idx, llsp, report, (x, q, topk) = built
+    assert report.n_clusters > 10
+    assert report.replication >= 1.0
+    qj = jnp.asarray(q)
+    _, ti = brute_force_topk(jnp.asarray(x), qj, 10)
+    out = serve_step(idx, None, qj, jnp.full((q.shape[0],), 10, jnp.int32),
+                     SearchConfig(k=10, nprobe_max=32, pruning="none",
+                                  use_kernel=False))
+    assert recall_at_k(out["ids"], np.asarray(ti)) > 0.85
+
+
+def test_llsp_trained_in_pipeline_works(built):
+    wd, cfg, idx, llsp, report, (x, q, topk) = built
+    assert llsp is not None
+    qj = jnp.asarray(q)
+    out = serve_step(idx, llsp, qj, jnp.full((q.shape[0],), 10, jnp.int32),
+                     SearchConfig(k=10, nprobe_max=32, pruning="llsp",
+                                  n_ratio=8, use_kernel=False))
+    assert float(np.asarray(out["nprobe"]).mean()) <= 32
+
+
+def test_resume_skips_finished_stages(built, small_corpus):
+    wd, cfg, idx, llsp, report, _ = built
+    x, q, topk = small_corpus
+    idx2, _, report2 = build_index(x, cfg, wd, queries=q,
+                                   query_topk=np.minimum(topk, 20))
+    assert "stage1" in report2.resumed_stages
+    assert "stage2" in report2.resumed_stages
+    np.testing.assert_array_equal(np.asarray(idx.posting_ids),
+                                  np.asarray(idx2.posting_ids))
+
+
+def test_stage2_task_files_exist(built):
+    wd = built[0]
+    shards = os.listdir(os.path.join(wd, "shards"))
+    assert len(shards) >= 2          # elastic pool actually split the work

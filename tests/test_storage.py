@@ -1,0 +1,111 @@
+"""Storage tier: arena allocator (hypothesis), layout/striping, host tier."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.storage import (
+    ChunkArena, OutOfSpace, TieredPostings, apply_striping, make_replica_map,
+    plan_striping,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_arena_alloc_release_invariants(data):
+    n_dev = data.draw(st.integers(1, 8))
+    arena = ChunkArena(n_devices=n_dev, device_bytes=1 << 24, chunk_bytes=1 << 20)
+    live = []
+    for i in range(data.draw(st.integers(1, 12))):
+        action = data.draw(st.sampled_from(["alloc", "release"]))
+        if action == "alloc" or not live:
+            name = f"idx{i}"
+            n_clusters = data.draw(st.integers(1, 300))
+            cbytes = data.draw(st.integers(1, 96 * 1024))
+            try:
+                exts = arena.allocate_index(name, n_clusters, cbytes)
+                live.append(name)
+                assert len(exts) == n_clusters
+                blocks = -(-cbytes // 4096)
+                for e in exts:
+                    assert e.n_blocks == blocks
+                    assert 0 <= e.device < n_dev
+                    # extent inside device capacity
+                    assert (e.lba + e.n_blocks) * 4096 <= 1 << 24
+                # no overlapping extents within the index
+                spans = sorted((e.device, e.lba, e.lba + e.n_blocks) for e in exts)
+                for (d1, s1, e1), (d2, s2, e2) in zip(spans, spans[1:]):
+                    assert d1 != d2 or e1 <= s2
+            except OutOfSpace:
+                pass
+        else:
+            name = data.draw(st.sampled_from(live))
+            live.remove(name)
+            arena.release_index(name)
+        arena.validate()
+    # full cleanup returns every chunk
+    for name in live:
+        arena.release_index(name)
+    arena.validate()
+    assert arena.used_bytes == 0
+
+
+def test_arena_cluster_bigger_than_chunk():
+    arena = ChunkArena(2, 1 << 22, chunk_bytes=1 << 20)
+    with pytest.raises(ValueError):
+        arena.allocate_index("big", 1, (1 << 20) + 1)
+
+
+def test_striping_bijective():
+    st_ = plan_striping(100, 8)
+    perm = st_.perm
+    valid = perm[perm >= 0]
+    assert sorted(valid.tolist()) == list(range(100))
+    for c in range(100):
+        assert perm[st_.cluster_to_row[c]] == c
+    # shard loads balanced within 1
+    shards = st_.shard_of(np.arange(100))
+    counts = np.bincount(shards, minlength=8)
+    assert counts.max() - counts.min() <= 1
+
+
+def test_apply_striping_masks_pads():
+    st_ = plan_striping(5, 4)
+    postings = np.arange(5 * 2 * 3, dtype=np.float32).reshape(5, 2, 3)
+    ids = np.arange(10, dtype=np.int32).reshape(5, 2)
+    p, i = apply_striping(st_, postings, ids)
+    assert p.shape[0] == 4 * st_.rows_per_shard
+    assert (i[st_.perm < 0] == -1).all()
+
+
+def test_replica_failover_and_loss():
+    st_ = plan_striping(64, 8)
+    rm = make_replica_map(64, 8, st_, hot_clusters=np.arange(16), n_replicas=2)
+    from repro.distributed import plan_failover
+    plan = plan_failover(rm, [0])
+    owners = plan.owner
+    # no owner is the failed shard
+    assert not np.any(owners == 0)
+    # hot clusters whose primary was shard 0 moved to their replica
+    hot_on_0 = [c for c in range(16) if rm.replicas[c, 0] == 0]
+    for c in hot_on_0:
+        assert owners[c] == rm.replicas[c, 1]
+    # cold clusters on shard 0 are lost
+    cold_on_0 = [c for c in range(16, 64) if rm.replicas[c, 0] == 0]
+    assert set(cold_on_0) <= set(plan.lost.tolist())
+
+
+def test_tiered_postings_fetch_dedup(rng):
+    postings = rng.normal(size=(20, 4, 8)).astype(np.float32)
+    ids = rng.integers(0, 100, size=(20, 4)).astype(np.int32)
+    tier = TieredPostings(postings, ids)
+    cids = np.array([[0, 3, 3], [3, 5, 0]], dtype=np.int32)
+    mask = np.array([[True, True, False], [True, True, True]])
+    packed, packed_ids, remap = tier.fetch(cids, mask)
+    assert tier.stats.clusters_deduped == 3      # {0, 3, 5}
+    packed = np.asarray(packed)
+    remap = np.asarray(remap)
+    for b in range(2):
+        for p_ in range(3):
+            if mask[b, p_]:
+                np.testing.assert_array_equal(packed[remap[b, p_]],
+                                              postings[cids[b, p_]])
