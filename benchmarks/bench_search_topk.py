@@ -24,6 +24,52 @@ TOPKS = (10, 50, 100)
 RECALL_TARGET = 0.9
 
 
+def serving_datapath_compare(bi, k: int = 10, nprobe_max: int = 64) -> dict:
+    """Legacy (B, P, L) writeback vs the candidate-compressed fused-topk path.
+
+    Measures both paths end-to-end (serve_step) and reports the per-query
+    HBM writeback of the scan stage: the legacy path writes the full (P, L)
+    f32 distance tile AND materializes the (P, L) i32 id gather regardless of
+    nprobe; the fused path writes n_cand (distance, id) pairs.  The modeled
+    bytes are analytic (shape-derived); recalls are measured.  NOTE on the
+    latencies: on this CPU container both rows run the jnp oracle
+    (use_kernel=False — the interpret-mode Pallas grid is a correctness
+    harness, not a fast path), so compute_us shows result PARITY overhead
+    only; the writeback win itself is a TPU HBM effect the bytes model
+    captures.
+    """
+    import dataclasses as dc
+
+    from repro.core.search import _auto_ncand
+
+    L = bi.index.cluster_len
+    k2 = _auto_ncand(k)
+    bytes_legacy = nprobe_max * L * (4 + 4)
+    bytes_fused = k2 * (4 + 4)
+    b = bi.q.shape[0]
+    rows = {}
+    base = SearchConfig(k=k, nprobe_max=nprobe_max, pruning="none",
+                        n_ratio=16, use_kernel=False)
+    for name, cfg in (("legacy", dc.replace(base, fused_topk=False)),
+                      ("fused_topk", dc.replace(base, fused_topk=True))):
+        qj = jnp.asarray(bi.q)
+        tj = jnp.full((b,), k, jnp.int32)
+        fn = jax.jit(lambda q, t, cfg=cfg: serve_step(bi.index, None, q, t, cfg))
+        out = fn(qj, tj)
+        secs = time_fn(fn, qj, tj)
+        rows[name] = dict(
+            recall10=recall_at_k(np.asarray(out["ids"])[:, :10], bi.true10),
+            compute_us=secs / b * 1e6,
+            hbm_bytes_written_per_query=(bytes_legacy if name == "legacy"
+                                         else bytes_fused),
+        )
+    rows["writeback_reduction_x"] = bytes_legacy / bytes_fused
+    rows["shapes"] = dict(P=nprobe_max, L=L, k=k, n_cand=k2)
+    rows["measured_path"] = ("jnp oracle (use_kernel=False); bytes are the "
+                             "analytic TPU writeback model")
+    return rows
+
+
 def _clustered(bi, k, pruning, llsp, nprobe_max, eps=0.12, use_kernel=False):
     cfg = SearchConfig(k=k, nprobe_max=nprobe_max, pruning=pruning, eps=eps,
                        n_ratio=16, use_kernel=use_kernel)
@@ -122,13 +168,19 @@ def run() -> dict:
             "io_bound_vs_spann": h["qps_io_bound"] / s["qps_io_bound"],
             "io_bound_vs_graph": h["qps_io_bound"] / gq["qps_io_bound"],
         }
-    payload = {"rows": rows, "ratios": ratios, "recall_target": RECALL_TARGET}
+    # ---- serving data path: legacy (B,P,L) writeback vs fused top-k -------
+    datapath = serving_datapath_compare(bi)
+    payload = {"rows": rows, "ratios": ratios, "recall_target": RECALL_TARGET,
+               "serving_datapath": datapath}
     save_result("search_topk", payload)
     for r in rows:
         if r:
             emit(f"search.{r['system']}.top{r['topk']}",
                  r["compute_us"] + r["io_us"],
                  f"recall={r['recall']:.3f};qps/core={r['qps_per_core']:.0f}")
+    emit("search.datapath.fused_topk", datapath["fused_topk"]["compute_us"],
+         f"recall={datapath['fused_topk']['recall10']:.3f};"
+         f"writeback_reduction={datapath['writeback_reduction_x']:.0f}x")
     return payload
 
 

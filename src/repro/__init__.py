@@ -1,0 +1,19 @@
+"""repro package init — compatibility shims for the pinned container jax.
+
+The codebase targets the current jax API surface; the container pins
+jax 0.4.37 where ``shard_map`` still lives in jax.experimental and spells the
+replication-check kwarg ``check_rep``.  Installing the alias here (every
+module of this package imports through here) keeps call sites on the modern
+``jax.shard_map(..., check_vma=...)`` spelling with no per-module guards.
+"""
+import jax as _jax
+
+if not hasattr(_jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _compat_shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                          check_vma=True, **kw):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)
+
+    _jax.shard_map = _compat_shard_map

@@ -1,0 +1,6 @@
+"""Offline construction pipeline (paper §5 / Fig. 21).
+
+Three stages — coarse clustering, closure assignment + posting build, LLSP
+training — executed as dependency-free tasks on an elastic worker pool with
+checkpoint/resume at task granularity.
+"""

@@ -1,0 +1,154 @@
+"""Accelerated k-means for construction stage 1 (paper Fig. 13 / 21a).
+
+The E-step dispatches through kernels/ops.kmeans_assign (the pairwise-L2
+Pallas kernel on TPU, its jnp oracle elsewhere); the M-step is a host-side
+scatter-add.  ``balanced_hierarchical_kmeans`` is the SPANN-style recursive
+splitter that bounds every leaf cluster at ``max_cluster_size`` so posting
+lists stay fixed-size (the serving layout's contract).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def kmeans(
+    x: np.ndarray, k: int, iters: int = 10, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray, float]:
+    """Lloyd's algorithm. Returns (centroids (k, D), assign (N,), inertia)."""
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    k = max(1, min(int(k), n))
+    rng = np.random.default_rng(seed)
+    cents = x[rng.choice(n, size=k, replace=False)].astype(np.float32).copy()
+    assign = np.zeros(n, np.int64)
+    mind = np.zeros(n, np.float32)
+    for _ in range(max(1, iters)):
+        a, md = kops.kmeans_assign(jnp.asarray(x), jnp.asarray(cents))
+        assign, mind = np.asarray(a, np.int64), np.asarray(md)
+        sums = np.zeros((k, d), np.float64)
+        np.add.at(sums, assign, x)
+        counts = np.bincount(assign, minlength=k)
+        nonz = counts > 0
+        cents[nonz] = (sums[nonz] / counts[nonz, None]).astype(np.float32)
+        if (~nonz).any():  # reseed empty clusters at the worst-served points
+            far = np.argsort(mind)[::-1][: int((~nonz).sum())]
+            cents[~nonz] = x[far]
+    return cents, assign.astype(np.int32), float(mind.sum())
+
+
+def balanced_hierarchical_kmeans(
+    x: np.ndarray,
+    max_cluster_size: int,
+    iters: int = 8,
+    seed: int = 0,
+    branch: int = 8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Recursive balanced clustering: split until every leaf fits the bound.
+
+    Returns (centroids (C, D) f32 = leaf means, assign (N,) int32).  A
+    degenerate split (k-means collapses everything into one cluster) falls
+    back to a median split along the highest-variance axis, so termination is
+    guaranteed.
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    stack = [np.arange(n)]
+    leaves: list[np.ndarray] = []
+    task_seed = seed
+    while stack:
+        idxs = stack.pop()
+        if idxs.size <= max_cluster_size:
+            leaves.append(idxs)
+            continue
+        k = int(min(branch, max(2, -(-idxs.size // max_cluster_size))))
+        task_seed += 1
+        _, a, _ = kmeans(x[idxs], k, iters=iters, seed=task_seed)
+        sizes = np.bincount(a, minlength=k)
+        if (sizes == idxs.size).any():  # degenerate: force a median split
+            dim = int(np.argmax(x[idxs].var(axis=0)))
+            order = idxs[np.argsort(x[idxs][:, dim], kind="stable")]
+            half = idxs.size // 2
+            stack.append(order[:half])
+            stack.append(order[half:])
+            continue
+        for j in range(k):
+            sub = idxs[a == j]
+            if sub.size:
+                stack.append(sub)
+    leaves.sort(key=lambda l: int(l[0]))  # deterministic leaf order
+    cents = np.stack([x[l].mean(axis=0) for l in leaves]).astype(np.float32)
+    assign = np.empty(n, np.int32)
+    for ci, l in enumerate(leaves):
+        assign[l] = ci
+    return cents, assign
+
+
+def enforce_size_bound(
+    x: np.ndarray,
+    centroids: np.ndarray,
+    bound: int,
+    max_rounds: int = 20,
+    seed: int = 0,
+) -> np.ndarray:
+    """Split Voronoi cells larger than ``bound`` until none remain.
+
+    Chunk-local clustering (stage-1 elastic tasks) bounds leaf sizes per
+    chunk, but the MERGED centroid set's global Voronoi cells can still
+    exceed the posting-list capacity; any primary overflow would be silently
+    truncated by the fixed-size posting build.  Each round reassigns all
+    points and 2-way-splits every oversized cell.
+    """
+    x = np.asarray(x, np.float32)
+    cents = np.asarray(centroids, np.float32).copy()
+    for rnd in range(max_rounds):
+        a, _ = kops.kmeans_assign(jnp.asarray(x), jnp.asarray(cents))
+        a = np.asarray(a)
+        counts = np.bincount(a, minlength=cents.shape[0])
+        over = np.nonzero(counts > bound)[0]
+        if over.size == 0:
+            break
+        new_rows = []
+        for c in over:
+            pts = x[a == c]
+            sub, _, _ = kmeans(pts, 2, iters=4, seed=seed + 131 * rnd + int(c))
+            cents[c] = sub[0]
+            if sub.shape[0] > 1:
+                new_rows.append(sub[1])
+        if new_rows:
+            cents = np.concatenate([cents, np.stack(new_rows)], axis=0)
+    return cents
+
+
+def kmeans_sharded_step(mesh, x, cents, k: int):
+    """One distributed Lloyd iteration (stage-1 build cell for dry-runs).
+
+    x sharded over the data axes, centroids replicated; per-shard one-hot
+    partial sums + counts are psum'd so every shard ends with the same new
+    centroids.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distance import squared_l2
+
+    data_axes = tuple(n for n in mesh.axis_names if n != "model")
+
+    def step(xl, c):
+        d = squared_l2(xl, c)
+        a = jnp.argmin(d, axis=1)
+        oh = jax.nn.one_hot(a, c.shape[0], dtype=jnp.float32)
+        sums = oh.T @ xl
+        counts = jnp.sum(oh, axis=0)
+        for ax in data_axes:
+            sums = jax.lax.psum(sums, ax)
+            counts = jax.lax.psum(counts, ax)
+        safe = jnp.maximum(counts[:, None], 1.0)
+        return jnp.where(counts[:, None] > 0, sums / safe, c)
+
+    return jax.shard_map(
+        step, mesh=mesh, in_specs=(P(data_axes), P()), out_specs=P(),
+        check_vma=False,
+    )(x, cents)

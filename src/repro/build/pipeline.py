@@ -1,0 +1,173 @@
+"""3-stage construction pipeline with checkpoint/resume (paper §5, Fig. 21a).
+
+Stage 1 — coarse clustering: the corpus is split into ``coarse_per_task``
+chunks; each task runs balanced hierarchical k-means (accelerated E-step) and
+the per-task centroid sets are concatenated.  Stage 2 — closure multi-cluster
+assignment (SPANN RNG rule) per chunk, persisted one file per task under
+``workdir/shards`` so a preempted pool resumes at task granularity, then the
+fixed-size posting build.  Stage 3 — LLSP training from logged queries.
+
+Every stage checkpoints its output under ``workdir``; rebuilding with the
+same config resumes instead of recomputing (report.resumed_stages).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.ivf import IVFIndex, build_postings
+from repro.core.llsp import LLSPConfig, LLSPParams, train_llsp
+from repro.core.spann_rules import closure_assign
+
+from .elastic import run_tasks
+from .kmeans import balanced_hierarchical_kmeans, enforce_size_bound
+
+
+@dataclasses.dataclass
+class BuildConfig:
+    max_cluster_size: int = 96
+    cluster_len: int = 128
+    coarse_per_task: int = 10_000
+    n_workers: int = 2
+    closure_eps: float = 0.2
+    max_replicas: int = 4
+    kmeans_iters: int = 8
+    seed: int = 0
+    llsp: Optional[LLSPConfig] = None
+
+
+@dataclasses.dataclass
+class BuildReport:
+    n_clusters: int
+    replication: float            # mean posting slots per corpus vector
+    stage_seconds: dict
+    resumed_stages: list
+
+
+def _chunks(n: int, per_task: int) -> list[tuple[int, int]]:
+    return [(s, min(s + per_task, n)) for s in range(0, n, per_task)]
+
+
+def build_index(
+    x: np.ndarray,
+    cfg: BuildConfig,
+    workdir: str,
+    queries: Optional[np.ndarray] = None,
+    query_topk: Optional[np.ndarray] = None,
+) -> tuple[IVFIndex, Optional[LLSPParams], BuildReport]:
+    """Build (or resume) the serving index. Returns (index, llsp, report)."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    os.makedirs(workdir, exist_ok=True)
+    shards_dir = os.path.join(workdir, "shards")
+    os.makedirs(shards_dir, exist_ok=True)
+    spans = _chunks(n, cfg.coarse_per_task)
+    stage_seconds: dict = {}
+    resumed: list = []
+
+    # ---- stage 1: coarse clustering (elastic tasks, per-chunk) -----------
+    t0 = time.perf_counter()
+    c_path = os.path.join(workdir, "stage1_centroids.npy")
+    if os.path.exists(c_path):
+        centroids = np.load(c_path)
+        resumed.append("stage1")
+    else:
+        def mk_stage1(i, lo, hi):
+            def task():
+                cents, _ = balanced_hierarchical_kmeans(
+                    x[lo:hi], cfg.max_cluster_size, iters=cfg.kmeans_iters,
+                    seed=cfg.seed + 1000 * i)
+                return cents
+            return task
+
+        outs = run_tasks([mk_stage1(i, lo, hi)
+                          for i, (lo, hi) in enumerate(spans)],
+                         n_workers=cfg.n_workers)
+        centroids = np.concatenate(outs, axis=0).astype(np.float32)
+        # merged Voronoi cells must fit a posting list, else the fixed-size
+        # build would truncate primary assignments (replication < 1)
+        centroids = enforce_size_bound(
+            x, centroids, min(cfg.max_cluster_size, cfg.cluster_len),
+            seed=cfg.seed)
+        np.save(c_path, centroids)
+    n_clusters = centroids.shape[0]
+    stage_seconds["stage1"] = time.perf_counter() - t0
+
+    # ---- stage 2: closure assignment per chunk + posting build -----------
+    t0 = time.perf_counter()
+    cj = jnp.asarray(centroids)
+    shard_paths = [os.path.join(shards_dir, f"assign_{i:05d}.npz")
+                   for i in range(len(spans))]
+    if all(os.path.exists(p) for p in shard_paths):
+        resumed.append("stage2")
+    else:
+        def mk_stage2(i, lo, hi, path):
+            def task():
+                if os.path.exists(path):     # task-granular resume
+                    return path
+                a = np.asarray(closure_assign(
+                    jnp.asarray(x[lo:hi]), cj, eps=cfg.closure_eps,
+                    max_replicas=cfg.max_replicas))
+                tmp = path + ".tmp.npz"   # .npz suffix: savez won't append
+                np.savez(tmp, assign=a)
+                os.replace(tmp, path)
+                return path
+            return task
+
+        run_tasks([mk_stage2(i, lo, hi, p)
+                   for (i, ((lo, hi), p)) in enumerate(zip(spans, shard_paths))],
+                  n_workers=cfg.n_workers)
+    assign = np.concatenate(
+        [np.load(p)["assign"] for p in shard_paths], axis=0)
+    postings, posting_ids = build_postings(x, assign, n_clusters,
+                                           cfg.cluster_len)
+    index = IVFIndex(jnp.asarray(centroids), jnp.asarray(postings),
+                     jnp.asarray(posting_ids))
+    stage_seconds["stage2"] = time.perf_counter() - t0
+
+    # ---- stage 3: LLSP training from logged queries -----------------------
+    t0 = time.perf_counter()
+    llsp = None
+    if cfg.llsp is not None and queries is not None and query_topk is not None:
+        llsp = train_llsp_for_index(cfg.llsp, index, x, queries,
+                                    np.asarray(query_topk), seed=cfg.seed)
+    stage_seconds["stage3"] = time.perf_counter() - t0
+
+    replication = float((posting_ids >= 0).sum()) / max(n, 1)
+    report = BuildReport(n_clusters=n_clusters, replication=replication,
+                         stage_seconds=stage_seconds, resumed_stages=resumed)
+    return index, llsp, report
+
+
+def train_llsp_for_index(
+    llsp_cfg: LLSPConfig,
+    index: IVFIndex,
+    x: np.ndarray,
+    queries: np.ndarray,
+    query_topk: np.ndarray,
+    seed: int = 0,
+) -> LLSPParams:
+    """Offline LLSP training: labels from a non-pruned large-nprobe search."""
+    from repro.core.distance import squared_l2_chunked, topk_smallest
+    from repro.core.ivf import search_flat
+
+    q = jnp.asarray(np.asarray(queries, np.float32))
+    topk = np.asarray(query_topk, np.int64)
+    nmax = min(llsp_cfg.nmax, index.n_clusters)
+    cd = squared_l2_chunked(q, index.centroids)
+    cdists, cid_order = topk_smallest(cd, nmax)
+    kmax = int(topk.max())
+    _, true_ids = search_flat(index, q, kmax, nprobe=nmax)
+    true = np.asarray(true_ids)
+    cols = np.arange(kmax)[None, :]
+    true = np.where(cols < topk[:, None], true, -1)   # per-query k padding
+    return train_llsp(
+        llsp_cfg, np.asarray(queries, np.float32), topk,
+        np.asarray(cid_order), np.asarray(cdists), true,
+        np.asarray(index.posting_ids), x.shape[0], seed=seed,
+    )

@@ -84,6 +84,42 @@ def dedup_topk(dists: Array, ids: Array, k: int) -> tuple[Array, Array]:
     return vals, out_ids
 
 
+def merge_candidate_topk(dists: Array, ids: Array, k: int) -> tuple[Array, Array]:
+    """Top-k merge over small candidate sets (n = O(k), the fused-kernel
+    output or a cross-shard gather of per-shard top-k).
+
+    Same contract as dedup_topk — ascending per-id min distances, invalid
+    slots (+inf, -1) — but sized for candidate-compressed inputs: one argsort
+    by distance plus an O(n^2) pairwise duplicate mask instead of the second
+    full argsort-by-id.  For n ~ tens of candidates the (…, n, n) comparison
+    tile is cheaper than sorting twice; past that the quadratic mask loses,
+    so large inputs (e.g. many-shard x large-k gathers) fall back to the
+    sort-based dedup with the identical contract.
+    """
+    n = dists.shape[-1]
+    if n > 256:  # (…, n, n) bool mask no longer pays for itself
+        return dedup_topk(dists, ids, k)
+    order = jnp.argsort(dists, axis=-1)
+    sd = jnp.take_along_axis(dists, order, axis=-1)
+    si = jnp.take_along_axis(ids, order, axis=-1)
+    # dup[i] = some j<i (strictly earlier in distance order) has the same id
+    same = si[..., :, None] == si[..., None, :]          # (…, n, n)
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)
+    dup = jnp.any(same & earlier, axis=-1)
+    sd = jnp.where(dup | (si < 0), jnp.inf, sd)
+    k_eff = min(k, n)
+    vals, pos = topk_smallest(sd, k_eff)
+    out_ids = jnp.take_along_axis(si, pos, axis=-1)
+    out_ids = jnp.where(jnp.isinf(vals), -1, out_ids)
+    if k_eff < k:  # fewer candidates than requested: pad (inf, -1)
+        pad = k - k_eff
+        vals = jnp.pad(vals, [(0, 0)] * (vals.ndim - 1) + [(0, pad)],
+                       constant_values=jnp.inf)
+        out_ids = jnp.pad(out_ids, [(0, 0)] * (out_ids.ndim - 1) + [(0, pad)],
+                          constant_values=-1)
+    return vals, out_ids
+
+
 def recall_at_k(pred_ids, true_ids) -> float:
     """Mean recall@k between (B, k) predicted ids and (B, k) ground truth."""
     import numpy as np

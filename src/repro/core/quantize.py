@@ -78,13 +78,29 @@ def ivf_scan_quantized(
 
 
 def search_flat_quantized(index: IVFIndex, qp: QuantizedPostings,
-                          queries: jax.Array, k: int, nprobe: int):
-    """Quantized counterpart of core.ivf.search_flat (same merge path)."""
-    from .distance import dedup_topk, squared_l2_chunked, topk_smallest
+                          queries: jax.Array, k: int, nprobe: int,
+                          fused: bool = True):
+    """Quantized counterpart of core.ivf.search_flat.
+
+    ``fused`` (default) routes through the candidate-compressed data path:
+    the scan stage keeps only (B, ~2k) unique-by-id candidates and a cheap
+    merge takes the final k — the same contract as the fused-topk kernels.
+    ``fused=False`` keeps the legacy full (B, P, L) distance materialization.
+    """
+    from .distance import dedup_topk, merge_candidate_topk, squared_l2_chunked, \
+        topk_smallest
 
     cd = squared_l2_chunked(queries, index.centroids)
     _, cids = topk_smallest(cd, nprobe)
     mask = jnp.ones(cids.shape, bool)
+    if fused:
+        from .search import _auto_ncand
+        from repro.kernels.ref import ivf_scan_q8_topk_ref
+
+        cand_d, cand_i = ivf_scan_q8_topk_ref(
+            qp.q8, qp.scale, qp.norm2, index.centroids, index.posting_ids,
+            cids, mask, queries, _auto_ncand(k))
+        return merge_candidate_topk(cand_d, cand_i, k)
     dist = ivf_scan_quantized(qp, index.centroids, cids, mask, queries)
     gids = index.posting_ids[cids]
     dist = jnp.where(gids < 0, jnp.inf, dist)

@@ -16,8 +16,11 @@ array + frontend merge of Fig. 2a/10.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import itertools
+import weakref
 from typing import Optional
 
 import jax
@@ -25,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import llsp as llsp_mod
-from .distance import dedup_topk, squared_l2, topk_smallest
+from .distance import dedup_topk, merge_candidate_topk, squared_l2, topk_smallest
 from .ivf import IVFIndex
 from .spann_rules import fixed_eps_nprobe
 from repro.kernels import ops as kops
@@ -45,6 +48,34 @@ class SearchConfig:
                                   # (each shard scans C/TP centroids, then one
                                   # tiny (B, nmax) all-gather + re-rank) —
                                   # removes the TP-fold redundant scan
+    fused_topk: bool = True       # candidate-compressed scan: the kernel (or
+                                  # its oracle) emits (B, ~2k) candidates, not
+                                  # (B, P, L) distances — O(P*L/k) less HBM
+                                  # writeback.  False = legacy full-distance
+                                  # path (kept for A/B benchmarking).
+    n_cand: int = 0               # candidates per query the scan stage keeps
+                                  # (0 = auto: ~2k rounded up to a lane
+                                  # multiple).  Candidates are unique-by-id,
+                                  # so n_cand >= k guarantees exact parity
+                                  # with the legacy dedup-top-k.
+
+
+def _auto_ncand(k: int) -> int:
+    """Default candidate width: ~2k, padded to a multiple of 8 lanes."""
+    return -(-max(2 * k, 16) // 8) * 8
+
+
+def _fused_scan_candidates(cfg: "SearchConfig", kernel_call, ref_call):
+    """Shared candidate-compressed dispatch: run the scan stage at width
+    n_cand (kernel or jnp oracle per cfg.use_kernel), merge to cfg.k.
+
+    ``kernel_call`` / ``ref_call``: callables taking the candidate width k2
+    and returning ((B, k2) dists, (B, k2) ids).  Single definition so the
+    f32 and quantized engines can't drift apart.
+    """
+    k2 = cfg.n_cand or _auto_ncand(cfg.k)
+    cd, ci = kernel_call(k2) if cfg.use_kernel else ref_call(k2)
+    return merge_candidate_topk(cd, ci, cfg.k)
 
 
 def centroid_scan(
@@ -98,12 +129,31 @@ def _scan_and_rank(
     queries: jax.Array,
     cids: jax.Array,
     probe_mask: jax.Array,
-    k: int,
-    use_kernel: bool,
+    cfg: SearchConfig,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused posting scan + dedup top-k. Returns (dists (B,k), ids (B,k))."""
+    """Posting scan + top-k. Returns (dists (B,k), ids (B,k)).
+
+    Default (cfg.fused_topk): the candidate-compressed path — the scan stage
+    emits (B, n_cand) unique-by-id candidates (in-kernel top-k, in-kernel
+    posting_ids resolution) and a cheap merge takes the final k.  Legacy: the
+    scan writes (B, P, L) distances + a (B, P, L) id gather, then a global
+    dedup-top-k double-argsorts over P*L elements.
+    """
     b = queries.shape[0]
-    if use_kernel:
+    k = cfg.k
+    if cfg.fused_topk:
+        from repro.kernels.ref import ivf_scan_topk_ref
+
+        return _fused_scan_candidates(
+            cfg,
+            lambda k2: kops.ivf_scan_topk(
+                index.postings, index.posting_ids, cids, probe_mask, queries,
+                k2=k2),
+            lambda k2: ivf_scan_topk_ref(
+                index.postings, index.posting_ids, cids, probe_mask, queries,
+                k2),
+        )
+    if cfg.use_kernel:
         dists = kops.ivf_scan(index.postings, cids, probe_mask, queries)
     else:
         from repro.kernels.ref import ivf_scan_ref
@@ -126,7 +176,7 @@ def serve_step(
     cdists, cids = centroid_scan(index, queries, nmax, cfg)
     nprobe = decide_nprobe(cfg, llsp_params, queries, topk_req, cdists)
     probe_mask = (jnp.arange(nmax)[None, :] < nprobe[:, None]) & (cids >= 0)
-    dists, ids = _scan_and_rank(index, queries, cids, probe_mask, cfg.k, cfg.use_kernel)
+    dists, ids = _scan_and_rank(index, queries, cids, probe_mask, cfg)
     return {"ids": ids, "dists": dists, "nprobe": nprobe}
 
 
@@ -140,7 +190,43 @@ def serve_step(
 # are bucketed by level (padded to `pad`), and each bucket runs its level's
 # program.  Compute now scales with the routed level — leveling is not just
 # a model-granularity choice, it is the static-shape mechanism.
-_LEVEL_CACHE: dict = {}
+# Cache keying: ``id(index)`` alone is unsafe — a freed-and-reallocated index
+# can reuse the address and alias a stale compiled fn (stale shapes or, worse,
+# silently-wrong donated buffers).  Each index object instead gets a monotonic
+# token, validated through a weakref so an id() reuse mints a fresh token.
+# The cache itself is LRU-bounded so long-lived serving processes that churn
+# through indexes/configs don't grow it without bound.
+_LEVEL_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_LEVEL_CACHE_MAX = 64
+_INDEX_TOKENS: dict = {}          # id(index) -> (weakref, token)
+_TOKEN_COUNTER = itertools.count()
+
+
+def _index_token(index) -> int:
+    """Monotonic identity token for an index object (id()-reuse safe)."""
+    key = id(index)
+    ent = _INDEX_TOKENS.get(key)
+    if ent is not None and ent[0]() is index:
+        return ent[1]
+    if len(_INDEX_TOKENS) > 4 * _LEVEL_CACHE_MAX:     # prune dead entries
+        for dead in [kid for kid, (r, _) in _INDEX_TOKENS.items()
+                     if r() is None]:
+            del _INDEX_TOKENS[dead]
+    tok = next(_TOKEN_COUNTER)
+    _INDEX_TOKENS[key] = (weakref.ref(index), tok)
+    return tok
+
+
+def _level_cache_lookup(key, make_fn):
+    """LRU get-or-build on _LEVEL_CACHE."""
+    fn = _LEVEL_CACHE.get(key)
+    if fn is None:
+        fn = make_fn()
+        _LEVEL_CACHE[key] = fn
+    _LEVEL_CACHE.move_to_end(key)
+    while len(_LEVEL_CACHE) > _LEVEL_CACHE_MAX:
+        _LEVEL_CACHE.popitem(last=False)
+    return fn
 
 
 def _serve_at_level(index, llsp_params, queries, topk_req, level_idx, bound, cfg):
@@ -152,8 +238,7 @@ def _serve_at_level(index, llsp_params, queries, topk_req, level_idx, bound, cfg
     nprobe = jnp.minimum(nprobe, bound)
     cids = cids[:, :bound]
     probe_mask = (jnp.arange(bound)[None, :] < nprobe[:, None]) & (cids >= 0)
-    dists, ids = _scan_and_rank(index, queries, cids, probe_mask, cfg.k,
-                                cfg.use_kernel)
+    dists, ids = _scan_and_rank(index, queries, cids, probe_mask, cfg)
     return {"ids": ids, "dists": dists, "nprobe": nprobe}
 
 
@@ -187,12 +272,13 @@ def serve_leveled(
             continue
         padded = -(-sel.size // pad) * pad
         rows = np.concatenate([sel, np.full(padded - sel.size, sel[0])])
-        key = (id(index), li, padded, cfg)
-        fn = _LEVEL_CACHE.get(key)
-        if fn is None:
-            fn = jax.jit(functools.partial(
-                _serve_at_level, level_idx=li, bound=int(bounds[li]), cfg=cfg))
-            _LEVEL_CACHE[key] = fn
+        # key carries everything baked into the compiled fn: the index
+        # identity, level index AND its bound (a retrained LLSP can move the
+        # bounds for the same index), batch padding, and the static cfg.
+        # llsp weights are a traced argument, so they need no key entry.
+        key = (_index_token(index), li, int(bounds[li]), padded, cfg)
+        fn = _level_cache_lookup(key, lambda: jax.jit(functools.partial(
+            _serve_at_level, level_idx=li, bound=int(bounds[li]), cfg=cfg)))
         res = fn(index, llsp_params, jnp.asarray(q[rows]), jnp.asarray(tk[rows]))
         out_d[sel] = np.asarray(res["dists"])[: sel.size]
         out_i[sel] = np.asarray(res["ids"])[: sel.size]
@@ -254,15 +340,18 @@ def make_sharded_serve(
         probe_mask = probe_mask & on_shard
         local_cids = jnp.clip(local_cids, 0, c_local - 1)
         dists_k, ids_k = _scan_and_rank(
-            local_index, queries, local_cids, probe_mask, cfg.k, cfg.use_kernel
+            local_index, queries, local_cids, probe_mask, cfg
         )
-        # merge across shards: gather each shard's k candidates, re-rank
+        # merge across shards: gather each shard's k candidates, re-rank.
+        # The all-gather already speaks the k-candidate format, so the merge
+        # is over S*k = O(k) elements — merge_candidate_topk, not the full
+        # double-argsort.
         all_d = jax.lax.all_gather(dists_k, shard_axis)            # (S, B, k)
         all_i = jax.lax.all_gather(ids_k, shard_axis)
         b = queries.shape[0]
         all_d = jnp.moveaxis(all_d, 0, 1).reshape(b, n_shards * cfg.k)
         all_i = jnp.moveaxis(all_i, 0, 1).reshape(b, n_shards * cfg.k)
-        fd, fi = dedup_topk(all_d, all_i, cfg.k)
+        fd, fi = merge_candidate_topk(all_d, all_i, cfg.k)
         return fd, fi, nprobe
 
     cent_spec = P(shard_axis) if cfg.shard_centroids else P()
@@ -324,17 +413,31 @@ def make_sharded_serve_quantized(
         on_shard = (local_cids >= 0) & (local_cids < c_local)
         probe_mask = probe_mask & on_shard
         local_cids = jnp.clip(local_cids, 0, c_local - 1)
-        qp = QuantizedPostings(q8=q8, scale=scale, norm2=norm2)
-        dists = ivf_scan_quantized(qp, centroids_l, local_cids, probe_mask, queries)
-        ids = posting_ids[jnp.maximum(local_cids, 0)]
-        dists = jnp.where(ids < 0, jnp.inf, dists)
-        dists_k, ids_k = dedup_topk(
-            dists.reshape(bq, -1), ids.reshape(bq, -1), cfg.k)
+        if cfg.fused_topk:
+            from repro.kernels.ref import ivf_scan_q8_topk_ref
+
+            dists_k, ids_k = _fused_scan_candidates(
+                cfg,
+                lambda k2: kops.ivf_scan_q8_topk(
+                    q8, scale, norm2, centroids_l, posting_ids,
+                    local_cids, probe_mask, queries, k2=k2),
+                lambda k2: ivf_scan_q8_topk_ref(
+                    q8, scale, norm2, centroids_l, posting_ids,
+                    local_cids, probe_mask, queries, k2),
+            )
+        else:
+            qp = QuantizedPostings(q8=q8, scale=scale, norm2=norm2)
+            dists = ivf_scan_quantized(qp, centroids_l, local_cids, probe_mask,
+                                       queries)
+            ids = posting_ids[jnp.maximum(local_cids, 0)]
+            dists = jnp.where(ids < 0, jnp.inf, dists)
+            dists_k, ids_k = dedup_topk(
+                dists.reshape(bq, -1), ids.reshape(bq, -1), cfg.k)
         all_d = jax.lax.all_gather(dists_k, shard_axis)
         all_i = jax.lax.all_gather(ids_k, shard_axis)
         all_d = jnp.moveaxis(all_d, 0, 1).reshape(bq, n_shards * cfg.k)
         all_i = jnp.moveaxis(all_i, 0, 1).reshape(bq, n_shards * cfg.k)
-        fd, fi = dedup_topk(all_d, all_i, cfg.k)
+        fd, fi = merge_candidate_topk(all_d, all_i, cfg.k)
         return fd, fi, nprobe
 
     return jax.shard_map(

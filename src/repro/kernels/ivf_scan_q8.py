@@ -2,14 +2,22 @@
 path from EXPERIMENTS §Perf it.3.
 
 Same structure as ivf_scan (scalar-prefetch block table, one posting block
-DMA'd HBM->VMEM per (query, probe) grid step) but the payload is the int8
-RESIDUAL code from core/quantize.py at 1/4 the HBM bytes; the kernel
-dequantizes in registers and applies the closed-form residual expansion:
+DMA'd HBM->VMEM per grid step) but the payload is the int8 RESIDUAL code from
+core/quantize.py at 1/4 the HBM bytes; the kernel dequantizes in registers
+and applies the closed-form residual expansion:
 
     ||q - (c + s r8)||^2 = ||q - c||^2 - 2 s (q - c).r8 + s^2 ||r8||^2
 
 Operands per grid step: q8 block (L, D) int8, centroid row (D,), per-cluster
 scale, precomputed s^2||r8||^2 row (L,).
+
+Two variants:
+
+* ``ivf_scan_q8``      — legacy (B, P, L) full-distance writeback.
+* ``ivf_scan_q8_topk`` — candidate-compressed: query-tiled grid + in-VMEM
+  running top-k2 with in-kernel posting-id resolution, emitting (B, k2)
+  candidates.  See kernels/ivf_scan.py for the grid/scratch design; this
+  kernel shares its probe plan and top-k merge helpers.
 """
 from __future__ import annotations
 
@@ -19,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .ivf_scan import _extract_topk, plan_tile_probes
 
 
 def _kernel(cids_ref, mask_ref, q_ref, cent_ref, scale_ref, norm2_ref,
@@ -76,3 +86,99 @@ def ivf_scan_q8(
         out_shape=jax.ShapeDtypeStruct((B, P, L), jnp.float32),
         interpret=interpret,
     )(safe, mask_i, queries, centroids, scale, norm2, q8)
+
+
+# --------------------------------------------------------------------------
+# fused in-kernel top-k over int8 residual postings
+# --------------------------------------------------------------------------
+def _qtile_topk_q8_kernel(tc_ref, q_ref, cent_ref, scale_ref, norm2_ref,
+                          pids_ref, qsel_ref, q8_ref, od_ref, oi_ref):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        od_ref[...] = jnp.full(od_ref.shape, jnp.inf, od_ref.dtype)
+        oi_ref[...] = jnp.full(oi_ref.shape, -1, oi_ref.dtype)
+
+    q = q_ref[...].astype(jnp.float32)                  # (bq, D)
+    cent = cent_ref[...].astype(jnp.float32)            # (1, D)
+    r8 = q8_ref[0].astype(jnp.float32)                  # (L, D)
+    sc = scale_ref[0, 0, 0].astype(jnp.float32)         # ()
+    n2 = norm2_ref[...].astype(jnp.float32)             # (1, L)
+    qc = q - cent                                       # (bq, D)
+    cross = jax.lax.dot_general(
+        qc, r8, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                   # (bq, L) — one MXU op
+    d = jnp.sum(qc * qc, axis=1, keepdims=True) - 2.0 * sc * cross + n2
+    d = jnp.maximum(d, 0.0)
+    bq = d.shape[0]
+    sel = jnp.reshape(qsel_ref[...], (bq, 1)) > 0       # (bq, 1)
+    ids = jnp.broadcast_to(pids_ref[...], d.shape).astype(jnp.int32)
+    d = jnp.where(sel & (ids >= 0), d, jnp.inf)
+    cat_d = jnp.concatenate([od_ref[...], d], axis=1)
+    cat_i = jnp.concatenate([oi_ref[...], ids], axis=1)
+    nd, ni = _extract_topk(cat_d, cat_i, od_ref.shape[-1])
+    od_ref[...] = nd
+    oi_ref[...] = ni
+
+
+@functools.partial(jax.jit, static_argnames=("k2", "bq", "interpret"))
+def ivf_scan_q8_topk(
+    q8: jax.Array,           # (C, L, D) int8 residual codes
+    scale: jax.Array,        # (C, 1, 1) f32
+    norm2: jax.Array,        # (C, L) f32
+    centroids: jax.Array,    # (C, D) f32
+    posting_ids: jax.Array,  # (C, L) int32, -1 = pad slot
+    cids: jax.Array,         # (B, P) int32
+    mask: jax.Array,         # (B, P) bool
+    queries: jax.Array,      # (B, D)
+    *,
+    k2: int,
+    bq: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused q8 scan + in-kernel top-k2: ((B, k2) dists, (B, k2) ids).
+
+    Same candidate contract as ivf_scan_topk; the per-id min collapses the
+    slightly-different residual distances of closure duplicates (each copy is
+    quantized against its own centroid)."""
+    C, L, D = q8.shape
+    B, P = cids.shape
+    padb = (-B) % bq
+    if padb:
+        queries = jnp.pad(queries, ((0, padb), (0, 0)))
+        cids = jnp.pad(cids, ((0, padb), (0, 0)))
+        mask = jnp.pad(jnp.asarray(mask, bool), ((0, padb), (0, 0)))
+    bp = B + padb
+    nb = bp // bq
+    s_len = bq * P
+    tile_cids, qsel = plan_tile_probes(cids, mask, bq, C)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, s_len),
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda t, s, tc: (t, 0)),
+            pl.BlockSpec((1, D), lambda t, s, tc: (tc[t, s], 0)),
+            pl.BlockSpec((1, 1, 1), lambda t, s, tc: (tc[t, s], 0, 0)),
+            pl.BlockSpec((1, L), lambda t, s, tc: (tc[t, s], 0)),
+            pl.BlockSpec((1, L), lambda t, s, tc: (tc[t, s], 0)),
+            pl.BlockSpec((1, 1, bq), lambda t, s, tc: (t, s, 0)),
+            pl.BlockSpec((1, L, D), lambda t, s, tc: (tc[t, s], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k2), lambda t, s, tc: (t, 0)),
+            pl.BlockSpec((bq, k2), lambda t, s, tc: (t, 0)),
+        ],
+    )
+    od, oi = pl.pallas_call(
+        _qtile_topk_q8_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((bp, k2), jnp.float32),
+            jax.ShapeDtypeStruct((bp, k2), jnp.int32),
+        ),
+        interpret=interpret,
+    )(tile_cids, queries, centroids, scale, norm2,
+      posting_ids.astype(jnp.int32), qsel, q8)
+    return od[:B], oi[:B]

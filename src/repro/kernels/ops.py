@@ -63,3 +63,21 @@ def ivf_scan_q8(q8, scale, norm2, centroids, cids, mask, queries):
     from . import ivf_scan_q8 as _q8
     return _q8.ivf_scan_q8(q8, scale, norm2, centroids, cids, mask, queries,
                            interpret=_interp())
+
+
+def ivf_scan_topk(postings, posting_ids, cids, mask, queries, *, k2, bq=8):
+    """Candidate-compressed scan: fused gather + L2 + in-kernel top-k2.
+
+    Returns ((B, k2) dists, (B, k2) ids) — the (B, P, L) distance tensor
+    never crosses the pallas_call boundary."""
+    return _ivf.ivf_scan_topk(postings, posting_ids, cids, mask, queries,
+                              k2=k2, bq=bq, interpret=_interp())
+
+
+def ivf_scan_q8_topk(q8, scale, norm2, centroids, posting_ids, cids, mask,
+                     queries, *, k2, bq=8):
+    """Candidate-compressed int8-residual scan (see ivf_scan_topk)."""
+    from . import ivf_scan_q8 as _q8
+    return _q8.ivf_scan_q8_topk(q8, scale, norm2, centroids, posting_ids,
+                                cids, mask, queries, k2=k2, bq=bq,
+                                interpret=_interp())

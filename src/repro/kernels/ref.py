@@ -36,6 +36,58 @@ def ivf_scan_ref(
     return jnp.where(mask[:, :, None], diff2, jnp.inf)
 
 
+def ivf_scan_topk_ref(
+    postings: jax.Array,     # (C, L, D)
+    posting_ids: jax.Array,  # (C, L) int32, -1 = pad slot
+    cids: jax.Array,         # (B, P) int32
+    mask: jax.Array,         # (B, P) bool
+    queries: jax.Array,      # (B, D)
+    k2: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused-topk kernel: full scan then dedup-top-k2.
+
+    Returns ((B, k2) dists ascending, (B, k2) global ids), unique-by-id with
+    per-id min distance, padded with (+inf, -1) — the exact candidate
+    contract of kernels.ivf_scan.ivf_scan_topk (up to tie ordering).
+    """
+    from repro.core.distance import dedup_topk  # lazy: avoid import cycle
+
+    d = ivf_scan_ref(postings, cids, mask, queries)               # (B, P, L)
+    ids = posting_ids[jnp.clip(cids, 0, postings.shape[0] - 1)]   # (B, P, L)
+    d = jnp.where(ids < 0, jnp.inf, d)
+    b = queries.shape[0]
+    return dedup_topk(d.reshape(b, -1), ids.reshape(b, -1), k2)
+
+
+def ivf_scan_q8_topk_ref(
+    q8: jax.Array,           # (C, L, D) int8 residual codes
+    scale: jax.Array,        # (C, 1, 1) f32
+    norm2: jax.Array,        # (C, L) f32
+    centroids: jax.Array,    # (C, D) f32
+    posting_ids: jax.Array,  # (C, L) int32
+    cids: jax.Array,         # (B, P) int32
+    mask: jax.Array,         # (B, P) bool
+    queries: jax.Array,      # (B, D)
+    k2: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused-topk q8 kernel (same candidate contract)."""
+    from repro.core.distance import dedup_topk  # lazy: avoid import cycle
+
+    q = queries.astype(jnp.float32)
+    safe = jnp.clip(cids, 0, q8.shape[0] - 1)
+    g8 = q8[safe].astype(jnp.float32)                    # (B, P, L, D)
+    s = scale[safe][:, :, :, 0]                          # (B, P, 1)
+    qc = q[:, None, :] - centroids[safe]                 # (B, P, D)
+    cross = jnp.einsum("bpd,bpld->bpl", qc, g8)
+    d = jnp.sum(qc * qc, axis=-1)[:, :, None] - 2.0 * s * cross + norm2[safe]
+    d = jnp.maximum(d, 0.0)
+    d = jnp.where(mask[:, :, None], d, jnp.inf)
+    ids = posting_ids[safe]                              # (B, P, L)
+    d = jnp.where(ids < 0, jnp.inf, d)
+    b = queries.shape[0]
+    return dedup_topk(d.reshape(b, -1), ids.reshape(b, -1), k2)
+
+
 def ivf_scan_clustermajor_ref(
     postings: jax.Array,   # (C, L, D)
     active: jax.Array,     # (A,) int32 cluster ids to visit (union of probes)

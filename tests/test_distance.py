@@ -1,8 +1,14 @@
-"""Distance / top-k utilities, with hypothesis property tests."""
+"""Distance / top-k utilities, with hypothesis property tests.
+
+hypothesis is an OPTIONAL dev dependency (requirements-dev.txt): without it
+the property tests are skipped but the rest of this module still runs, so a
+lean install never loses the whole tier-1 suite to an ImportError.
+"""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.distance import (
     dedup_topk, recall_at_k, squared_l2, squared_l2_chunked, topk_smallest,

@@ -1,0 +1,246 @@
+"""Candidate-compressed serving data path: fused-topk kernels vs the ref.py
+oracles (interpret mode), merge edge cases, engine equivalence old vs new,
+and the level-cache hygiene fixes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.distance import dedup_topk, merge_candidate_topk
+from repro.kernels import ref
+from repro.kernels.ivf_scan import ivf_scan_topk, plan_tile_probes
+from repro.kernels.ivf_scan_q8 import ivf_scan_q8_topk
+
+
+def _assert_candidates_match(gd, gi, wd, wi, tol=1e-4):
+    """Distances must match elementwise; ids must match except inside tied
+    groups (equal distances), where only the id SET must agree."""
+    gd, gi, wd, wi = map(np.asarray, (gd, gi, wd, wi))
+    np.testing.assert_allclose(gd, wd, rtol=tol, atol=tol * 10)
+    for r in range(gd.shape[0]):
+        # compare ids where the distance is unique within the row
+        for j in range(gd.shape[1]):
+            if np.isinf(wd[r, j]):
+                assert gi[r, j] == -1 and wi[r, j] == -1
+                continue
+            tied = np.isclose(wd[r], wd[r, j], rtol=tol, atol=tol * 10)
+            if tied.sum() == 1:
+                assert gi[r, j] == wi[r, j], (r, j, gi[r], wi[r])
+            else:
+                assert set(gi[r][tied].tolist()) == set(wi[r][tied].tolist())
+
+
+@pytest.mark.parametrize("c,l,d,b,p,bq", [(16, 8, 16, 4, 4, 2),
+                                          (64, 32, 64, 8, 16, 4),
+                                          (10, 16, 24, 3, 5, 8),
+                                          (32, 16, 32, 13, 7, 4)])
+def test_ivf_scan_topk_matches_oracle(c, l, d, b, p, bq):
+    key = jax.random.PRNGKey(c * l + d + b)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    postings = jax.random.normal(k1, (c, l, d))
+    queries = jax.random.normal(k2, (b, d))
+    cids = jax.random.randint(k3, (b, p), 0, c)
+    mask = jax.random.bernoulli(k4, 0.7, (b, p))
+    pids = jax.random.randint(k1, (c, l), -1, 4 * c * l)
+    k2c = 12
+    gd, gi = ivf_scan_topk(postings, pids, cids, mask, queries,
+                           k2=k2c, bq=bq, interpret=True)
+    wd, wi = ref.ivf_scan_topk_ref(postings, pids, cids, mask, queries, k2c)
+    assert gd.shape == (b, k2c) and gi.shape == (b, k2c)
+    _assert_candidates_match(gd, gi, wd, wi)
+
+
+def test_ivf_scan_topk_all_masked_and_dup_probes():
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    postings = jax.random.normal(k1, (8, 4, 8))
+    queries = jax.random.normal(k2, (4, 8))
+    # every query probes cluster 3 four times (duplicate probes must not
+    # produce duplicate candidates), query 0 fully masked
+    cids = jnp.full((4, 4), 3, jnp.int32)
+    mask = jnp.ones((4, 4), bool).at[0].set(False)
+    pids = jnp.arange(8 * 4, dtype=jnp.int32).reshape(8, 4)
+    gd, gi = ivf_scan_topk(postings, pids, cids, mask, queries,
+                           k2=8, bq=2, interpret=True)
+    gd, gi = np.asarray(gd), np.asarray(gi)
+    assert np.all(np.isinf(gd[0])) and np.all(gi[0] == -1)
+    for r in range(1, 4):
+        valid = gi[r][gi[r] >= 0]
+        assert len(valid) == 4                      # L=4 slots, scanned once
+        assert len(set(valid.tolist())) == len(valid)
+
+
+def test_ivf_scan_q8_topk_matches_oracle():
+    for (c, l, d, b, p, bq) in [(16, 8, 16, 4, 4, 2), (32, 16, 32, 6, 8, 4)]:
+        key = jax.random.PRNGKey(c + l + d)
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        cents = jax.random.normal(k1, (c, d))
+        post = cents[:, None, :] + 0.1 * jax.random.normal(k2, (c, l, d))
+        r = post - cents[:, None, :]
+        amax = jnp.max(jnp.abs(r), axis=(1, 2), keepdims=True)
+        scale = jnp.maximum(amax / 127.0, 1e-12)
+        q8 = jnp.clip(jnp.round(r / scale), -127, 127).astype(jnp.int8)
+        norm2 = (scale ** 2)[:, :, 0] * jnp.sum(
+            q8.astype(jnp.float32) ** 2, axis=-1)
+        queries = jax.random.normal(k3, (b, d))
+        cids = jax.random.randint(k4, (b, p), 0, c)
+        mask = jax.random.bernoulli(k5, 0.8, (b, p))
+        pids = jax.random.randint(k4, (c, l), 0, 10_000)
+        gd, gi = ivf_scan_q8_topk(q8, scale, norm2, cents, pids, cids, mask,
+                                  queries, k2=10, bq=bq, interpret=True)
+        wd, wi = ref.ivf_scan_q8_topk_ref(q8, scale, norm2, cents, pids,
+                                          cids, mask, queries, 10)
+        _assert_candidates_match(gd, gi, wd, wi, tol=1e-3)
+
+
+def test_plan_tile_probes_covers_union_once():
+    cids = jnp.asarray([[1, 5, 1, 7], [5, 5, 2, 0]], jnp.int32)
+    mask = jnp.asarray([[True, True, True, False], [True, False, True, True]])
+    tc, qsel = plan_tile_probes(cids, mask, bq=2, n_clusters=8)
+    tc, qsel = np.asarray(tc), np.asarray(qsel)
+    live = qsel.any(axis=-1)[0]
+    # union of live probes = {0, 1, 2, 5}; each exactly once
+    assert sorted(tc[0][live].tolist()) == [0, 1, 2, 5]
+    # cluster 5: probed (live) by BOTH queries -> one slot serves both
+    s5 = int(np.nonzero((tc[0] == 5) & live)[0][0])
+    assert qsel[0, s5].tolist() == [1, 1]
+    # sorted block table => duplicate clusters adjacent (DMA revisit skip)
+    assert (np.diff(tc[0]) >= 0).all()
+
+
+# -------------------------------------------------------------------------
+# merge edge cases
+# -------------------------------------------------------------------------
+def test_merge_candidate_topk_matches_dedup_topk(rng):
+    for n, k, n_ids in [(8, 4, 3), (24, 10, 40), (16, 20, 6)]:
+        dists = rng.uniform(0, 10, size=(5, n)).astype(np.float32)
+        ids = rng.integers(-1, n_ids, size=(5, n)).astype(np.int32)
+        vm, im = merge_candidate_topk(jnp.asarray(dists), jnp.asarray(ids), k)
+        vd, id_ = dedup_topk(jnp.asarray(dists), jnp.asarray(ids), k)
+        np.testing.assert_allclose(np.asarray(vm), np.asarray(vd),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(im), np.asarray(id_))
+
+
+def test_merge_candidate_topk_all_duplicates():
+    dists = jnp.asarray([[3.0, 1.0, 2.0, 5.0]])
+    ids = jnp.asarray([[7, 7, 7, 7]], jnp.int32)
+    vals, out = merge_candidate_topk(dists, ids, 3)
+    assert out[0, 0] == 7 and vals[0, 0] == 1.0       # keeps the min
+    assert np.all(np.asarray(out)[0, 1:] == -1)
+    assert np.all(np.isinf(np.asarray(vals)[0, 1:]))
+
+
+def test_merge_candidate_topk_all_masked():
+    dists = jnp.full((2, 4), jnp.inf)
+    ids = jnp.full((2, 4), -1, jnp.int32)
+    vals, out = merge_candidate_topk(dists, ids, 3)
+    assert np.all(np.asarray(out) == -1)
+    assert np.all(np.isinf(np.asarray(vals)))
+
+
+def test_merge_candidate_topk_k_exceeds_candidates():
+    dists = jnp.asarray([[2.0, 1.0]])
+    ids = jnp.asarray([[4, 9]], jnp.int32)
+    vals, out = merge_candidate_topk(dists, ids, 6)
+    assert out.shape == (1, 6)
+    assert np.asarray(out)[0, :2].tolist() == [9, 4]
+    assert np.all(np.asarray(out)[0, 2:] == -1)
+
+
+# -------------------------------------------------------------------------
+# engine equivalence: candidate-compressed path vs legacy full-distance path
+# -------------------------------------------------------------------------
+def _mk_cfg(**kw):
+    from repro.core.search import SearchConfig
+    return SearchConfig(**kw)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_serve_step_fused_matches_legacy(small_corpus, small_index, use_kernel):
+    from repro.core.search import serve_step
+    x, q, _ = small_corpus
+    qj = jnp.asarray(q[:24] if use_kernel else q)
+    tk = jnp.full((qj.shape[0],), 10, jnp.int32)
+    outs = []
+    for fused in (False, True):
+        cfg = _mk_cfg(k=10, nprobe_max=16, pruning="none",
+                      use_kernel=use_kernel, fused_topk=fused)
+        outs.append(serve_step(small_index, None, qj, tk, cfg))
+    np.testing.assert_allclose(np.asarray(outs[0]["dists"]),
+                               np.asarray(outs[1]["dists"]),
+                               rtol=1e-5, atol=1e-5)
+    # identical recall by construction (same unique-id top-k)
+    a, b = np.asarray(outs[0]["ids"]), np.asarray(outs[1]["ids"])
+    for ra, rb in zip(a, b):
+        assert set(ra.tolist()) == set(rb.tolist())
+
+
+def test_sharded_engine_fused_matches_legacy(small_corpus, small_index):
+    from repro.core.search import make_sharded_serve
+    x, q, _ = small_corpus
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tk = jnp.full((q.shape[0],), 10, jnp.int32)
+    outs = []
+    for fused in (False, True):
+        cfg = _mk_cfg(k=10, nprobe_max=16, pruning="none", use_kernel=False,
+                      fused_topk=fused)
+        serve = make_sharded_serve(mesh, cfg)
+        d, i, _ = serve(small_index.centroids, small_index.postings,
+                        small_index.posting_ids, None, jnp.asarray(q), tk)
+        outs.append((np.asarray(d), np.asarray(i)))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_sharded_engine_fused_matches_legacy(small_corpus,
+                                                       small_index):
+    from repro.core.quantize import quantize_postings
+    from repro.core.search import make_sharded_serve_quantized
+    x, q, _ = small_corpus
+    qp = quantize_postings(small_index.postings, small_index.centroids)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tk = jnp.full((q.shape[0],), 10, jnp.int32)
+    outs = []
+    for fused in (False, True):
+        cfg = _mk_cfg(k=10, nprobe_max=16, pruning="none", use_kernel=False,
+                      fused_topk=fused)
+        serve = make_sharded_serve_quantized(mesh, cfg)
+        d, i, _ = serve(small_index.centroids, qp.q8, qp.scale, qp.norm2,
+                        small_index.posting_ids, None, jnp.asarray(q), tk)
+        outs.append((np.asarray(d), np.asarray(i)))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------------------
+# level-cache hygiene
+# -------------------------------------------------------------------------
+def test_level_cache_is_lru_bounded():
+    from repro.core import search as s
+    s._LEVEL_CACHE.clear()
+    for i in range(3 * s._LEVEL_CACHE_MAX):
+        s._level_cache_lookup(("key", i), lambda: object())
+    assert len(s._LEVEL_CACHE) == s._LEVEL_CACHE_MAX
+    # most-recent keys survive
+    assert ("key", 3 * s._LEVEL_CACHE_MAX - 1) in s._LEVEL_CACHE
+    assert ("key", 0) not in s._LEVEL_CACHE
+    s._LEVEL_CACHE.clear()
+
+
+def test_index_token_stable_and_id_reuse_safe():
+    from repro.core import search as s
+
+    class Obj:  # weakref-able stand-in
+        pass
+
+    a = Obj()
+    t1 = s._index_token(a)
+    assert s._index_token(a) == t1          # stable for the live object
+    b = Obj()
+    assert s._index_token(b) != t1          # distinct objects never alias
+    # simulate id() reuse: plant a's entry under another object's id, as if
+    # the allocator reused the address — the weakref validation must mint a
+    # fresh token instead of returning a's stale one
+    c = Obj()
+    s._INDEX_TOKENS[id(c)] = s._INDEX_TOKENS[id(a)]
+    t3 = s._index_token(c)
+    assert t3 != t1

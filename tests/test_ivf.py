@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.build.kmeans import balanced_hierarchical_kmeans, kmeans
 from repro.core.distance import recall_at_k

@@ -1,7 +1,7 @@
 """Storage tier: arena allocator (hypothesis), layout/striping, host tier."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.storage import (
     ChunkArena, OutOfSpace, TieredPostings, apply_striping, make_replica_map,
