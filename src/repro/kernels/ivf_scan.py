@@ -173,6 +173,8 @@ def plan_tile_probes(
     mask: jax.Array,   # (B, P) bool — live probes
     bq: int,
     n_clusters: int,
+    *,
+    tile_chunk: int = 0,   # 0 = auto: bound the membership intermediate
 ) -> tuple[jax.Array, jax.Array]:
     """Build the per-tile block table + query-selection mask.
 
@@ -187,6 +189,14 @@ def plan_tile_probes(
 
     A (query, cluster) pair probed more than once contributes a single scan,
     which matches the dedup-top-k semantics downstream.
+
+    The membership test materializes an O(S·bq·P) boolean per tile; at the
+    runtime batcher's large coalesced batches (B >= 1e4) the full
+    (nb, S, bq, P) intermediate would be hundreds of MB, so tiles are
+    processed in chunks of ``tile_chunk`` (auto-sized to keep each chunk's
+    intermediate under ~16M elements).  Chunking is over the tile dim only —
+    per-tile outputs are independent — so chunked and one-shot plans are
+    bit-identical.
     """
     B, P = cids.shape
     nb = B // bq
@@ -200,11 +210,22 @@ def plan_tile_probes(
     ) & (sc < n_clusters)
     cl3 = cl.reshape(nb, bq, P)
     lv3 = live.reshape(nb, bq, P)
-    member = jnp.any(
-        (cl3[:, None, :, :] == sc[:, :, None, None]) & lv3[:, None, :, :],
-        axis=-1,
-    )                                                            # (nb, S, bq)
-    qsel = (member & uniq[:, :, None]).astype(jnp.int32)
+    if tile_chunk <= 0:
+        per_tile = s_len * bq * P
+        tile_chunk = max(1, (1 << 24) // max(per_tile, 1))
+    qsel_chunks = []
+    for lo in range(0, nb, tile_chunk):
+        hi = min(lo + tile_chunk, nb)
+        member = jnp.any(
+            (cl3[lo:hi, None, :, :] == sc[lo:hi, :, None, None])
+            & lv3[lo:hi, None, :, :],
+            axis=-1,
+        )                                                        # (c, S, bq)
+        qsel_chunks.append(
+            (member & uniq[lo:hi, :, None]).astype(jnp.int32)
+        )
+    qsel = (qsel_chunks[0] if len(qsel_chunks) == 1
+            else jnp.concatenate(qsel_chunks, axis=0))
     tile_cids = jnp.minimum(sc, n_clusters - 1).astype(jnp.int32)
     return tile_cids, qsel
 

@@ -1,17 +1,29 @@
 """Serving launcher — the online half of Fig. 8 as a runnable node daemon.
 
+PR 2 made this a thin driver over the async serving runtime
+(``repro.runtime``): index deployment and node health stay here, but the
+traffic loop is the runtime's SQ/CQ queue-pair engine — arrivals from a
+seeded multi-tenant Poisson trace are submitted one query at a time, the
+dynamic batcher coalesces them per index with deadline-aware admission
+control, and the prefetch pipeline overlaps each batch's host gather +
+device stream with the previous batch's fused-topk scan.
+
 Responsibilities (container-scale versions of the production node):
   * index deployment: build or load indexes, allocate their cluster extents
     from the node's ChunkArena (multi-index hosting, §4.2), publish
-    IndexMeta;
-  * traffic loop: batched queries through the leveled LLSP engine;
+    IndexMeta, wrap the postings in a streamed host tier + pipeline;
+  * traffic: open-loop Poisson tenants through the ServeEngine (§4.1);
   * health: heartbeat table per logical shard, straggler detection, replica
     failover on shard failure (§6.2);
-  * freshness: `--rebuild-every N` swaps in a freshly built index between
-    batches (the paper's daily/hourly rebuild flow) atomically.
+  * freshness: a mid-run rebuild + atomic ``swap_pipeline`` (the paper's
+    daily/hourly rebuild flow) while the engine keeps serving.
+
+The scan path is the PR 1 fused-topk data path: the Pallas kernel on TPU,
+interpret-mode on CPU (``--no-kernel`` switches to the fast packed-domain
+jnp oracle instead — same candidates, same recall).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.serve --indexes 2 --batches 30
+  PYTHONPATH=src python -m repro.launch.serve --indexes 2 --duration 8
 """
 from __future__ import annotations
 
@@ -22,17 +34,26 @@ import tempfile
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.build.pipeline import BuildConfig, build_index
 from repro.core.distance import recall_at_k
 from repro.core.ivf import brute_force_topk
 from repro.core.llsp import LLSPConfig
-from repro.core.search import SearchConfig, serve_leveled
+from repro.core.search import SearchConfig
 from repro.data import PAPER_DATASETS, make_queries, make_vectors
-from repro.distributed import HeartbeatMonitor, ownership_mask, plan_failover
-from repro.storage import ChunkArena, IndexMeta, make_replica_map, plan_striping
+from repro.distributed import HeartbeatMonitor, plan_failover
+from repro.runtime import (
+    BatchPolicy,
+    DynamicBatcher,
+    PrefetchPipeline,
+    ServeEngine,
+    TenantSpec,
+    latency_percentiles,
+    multi_tenant_trace,
+)
+from repro.storage import ChunkArena, IndexMeta, TieredPostings, \
+    make_replica_map, plan_striping
 
 
 @dataclasses.dataclass
@@ -44,16 +65,19 @@ class Deployment:
     meta: IndexMeta
     striping: object
     replica_map: object
+    pipeline: PrefetchPipeline
+    queries: np.ndarray          # probe pool for recall spot checks
+    true10: np.ndarray
 
 
 def deploy(arena: ChunkArena, name: str, spec, workdir: str,
-           n_shards: int) -> Deployment:
+           n_shards: int, scfg: SearchConfig) -> Deployment:
     x = make_vectors(spec)
     q, topk = make_queries(spec, 256)
     topk = np.minimum(topk, 50).astype(np.int32)
     cfg = BuildConfig(max_cluster_size=96, cluster_len=128,
                       coarse_per_task=5000, n_workers=2,
-                      llsp=LLSPConfig(levels=(8, 16, 32, 64)))
+                      llsp=LLSPConfig(levels=(8, 16), n_ratio_features=8))
     index, llsp, report = build_index(x, cfg, workdir, queries=q,
                                       query_topk=topk)
     cluster_bytes = index.cluster_len * index.dim * 4
@@ -66,10 +90,15 @@ def deploy(arena: ChunkArena, name: str, spec, workdir: str,
                      cluster_len=index.cluster_len, dim=index.dim,
                      dtype="float32", extents=extents)
     meta.save(os.path.join(workdir, f"{name}.meta.json"))
+    tier = TieredPostings(np.asarray(index.postings),
+                          np.asarray(index.posting_ids))
+    pipeline = PrefetchPipeline(index, llsp, scfg, tier=tier)
+    _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
     print(f"[deploy] {name}: {index.n_clusters} clusters, "
           f"{len({e.device for e in extents})} devices, "
           f"arena free {arena.free_bytes >> 20} MiB")
-    return Deployment(name, index, llsp, spec, meta, striping, rmap)
+    return Deployment(name, index, llsp, spec, meta, striping, rmap,
+                      pipeline, q, np.asarray(t10))
 
 
 def undeploy(arena: ChunkArena, dep: Deployment) -> None:
@@ -78,78 +107,182 @@ def undeploy(arena: ChunkArena, dep: Deployment) -> None:
           f"(arena free {arena.free_bytes >> 20} MiB)")
 
 
+def probe_recall(engine: ServeEngine, dep: Deployment,
+                 lat: list[float], tenant: str, n: int = 64) -> float:
+    """Submit known queries THROUGH the engine and score the completions —
+    the health check exercises the exact serving path, not a side door.
+    Non-probe completions drained along the way keep feeding ``lat``."""
+    want = {}
+    for i in range(n):
+        rid = engine.submit(dep.queries[i], 10, index=tenant, block=True)
+        if rid >= 0:
+            want[rid] = i
+    deadline = time.monotonic() + 60.0
+    got: dict[int, np.ndarray] = {}
+    while len(got) < len(want) and time.monotonic() < deadline:
+        for c in engine.qp.poll():
+            if c.req_id in want:
+                if c.ids is not None:
+                    got[c.req_id] = c.ids
+                else:
+                    want.pop(c.req_id)
+            elif c.status != "shed":
+                lat.append(c.latency)
+        time.sleep(0.01)
+    if not got:
+        return float("nan")
+    rows = [want[r] for r in got]
+    ids = np.stack([got[r] for r in got])
+    return recall_at_k(ids[:, :10], dep.true10[rows])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--indexes", type=int, default=2)
-    ap.add_argument("--batches", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--duration", type=float, default=8.0,
+                    help="seconds of traffic")
+    ap.add_argument("--rate", type=float, default=30.0,
+                    help="total offered qps across tenants")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="batcher max micro-batch")
     ap.add_argument("--n", type=int, default=10_000)
-    ap.add_argument("--rebuild-every", type=int, default=8)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline (0 = best-effort)")
+    ap.add_argument("--rebuild", action="store_true",
+                    help="rebuild + swap index 0 mid-run (freshness flow)")
     ap.add_argument("--fail-shard", type=int, default=-1,
                     help="simulate this shard failing mid-run")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="packed-domain jnp oracle instead of the Pallas "
+                         "kernel (interpret-mode on CPU)")
     args = ap.parse_args()
 
     n_shards = 8
     arena = ChunkArena(n_devices=12, device_bytes=1 << 30, chunk_bytes=1 << 20)
     hb = HeartbeatMonitor(n_shards)
+    scfg = SearchConfig(k=10, nprobe_max=16, pruning="llsp", n_ratio=8,
+                        use_kernel=not args.no_kernel, fused_topk=True)
     names = list(PAPER_DATASETS)[: args.indexes]
-    deps = {}
+    deadline_s = args.deadline_ms * 1e-3 or None
+    deps: dict[str, Deployment] = {}
     with tempfile.TemporaryDirectory() as root:
         for name in names:
             spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
             deps[name] = deploy(arena, name, spec,
-                                os.path.join(root, name), n_shards)
+                                os.path.join(root, name), n_shards, scfg)
 
-        scfg = SearchConfig(k=10, nprobe_max=64, pruning="llsp", n_ratio=16,
-                            use_kernel=False)
-        failed: list = []
-        for b in range(args.batches):
-            name = names[b % len(names)]
-            dep = deps[name]
-            q, topk = make_queries(dep.spec, args.batch, seed=10_000 + b)
-            topk = np.minimum(topk, 50).astype(np.int32)
-            t0 = time.perf_counter()
-            out = serve_leveled(dep.index, dep.llsp, q, topk, scfg)
-            dt = time.perf_counter() - t0
-            hb.tick()
-            for s in range(n_shards):
-                if s not in failed:
-                    hb.beat(s, latency=dt / args.batch)
-            if b % 5 == 0:
-                x = make_vectors(dep.spec)
-                _, ti = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
-                r = recall_at_k(out["ids"], np.asarray(ti))
-                print(f"[serve] b{b:03d} {name:8s} {args.batch/dt:7.0f} q/s "
-                      f"recall={r:.3f} probes={out['nprobe'].mean():.1f}")
-            if b == args.batches // 2 and args.fail_shard >= 0:
-                # fail a shard that actually owns clusters of THIS index
-                owners = set(dep.replica_map.replicas[:, 0].tolist())
+        policy = BatchPolicy(max_batch=args.batch, max_wait_s=0.05,
+                             shed="degrade", degrade_nprobe=8)
+        batcher = DynamicBatcher(policy, names)
+        engine = ServeEngine({n: d.pipeline for n, d in deps.items()},
+                             batcher)
+        # compile off-clock: the batcher can release any partial size up to
+        # max_batch, and the pipeline pads each to its own pad_batch
+        # multiple — warm exactly that padded-shape set
+        pb = deps[names[0]].pipeline.pad_batch
+        top = -(-policy.max_batch // pb) * pb
+        warm_sizes = tuple(range(pb, top + 1, pb))
+        for d in deps.values():
+            d.pipeline.warmup(batch_sizes=warm_sizes)
+        engine.start()
+
+        trace = multi_tenant_trace(
+            [TenantSpec(n, args.rate / len(names), topk_lo=10, topk_hi=50,
+                        deadline_s=deadline_s, n_queries=256)
+             for n in names],
+            args.duration)
+        print(f"[serve] replaying {len(trace)} arrivals over "
+              f"{args.duration:.0f}s ({args.rate:.0f} qps offered, "
+              f"kernel={'pallas' if scfg.use_kernel else 'oracle'})")
+        t0 = time.monotonic()
+        next_report = 1.0
+        n_ticks = 0
+        lat: list[float] = []
+        failed: list[int] = []
+        did_fail = did_rebuild = False
+        for arr in trace:
+            lag = t0 + arr.t - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            dep = deps[arr.index]
+            engine.submit(dep.queries[arr.qrow], arr.topk, index=arr.index,
+                          deadline_s=arr.deadline_s)
+            el = time.monotonic() - t0
+            if el >= next_report:
+                # heartbeat ticks every 1s (the monitor needs a few ticks
+                # after a failure to cross its miss threshold); stats print
+                # every other tick
+                while next_report <= el:
+                    next_report += 1.0
+                n_ticks += 1
+                comps = engine.qp.poll()
+                lat += [c.latency for c in comps if c.status != "shed"]
+                hb.tick()
+                mean_lat = float(np.mean(lat[-64:])) if lat else 0.0
+                for s in range(n_shards):
+                    if s not in failed:
+                        hb.beat(s, latency=mean_lat)
+                st = engine.stats
+                if n_ticks % 2 == 0:
+                    print(f"[serve] t={el:4.1f}s completed={st.completed} "
+                          f"batches={st.batches} shed={st.shed} "
+                          f"degraded={st.degraded} "
+                          f"p50={latency_percentiles(lat)['p50_ms']:.0f}ms")
+            if (not did_fail and args.fail_shard >= 0
+                    and el > args.duration / 2):
+                did_fail = True
+                dep0 = deps[names[0]]
+                owners = set(dep0.replica_map.replicas[:, 0].tolist())
                 shard = (args.fail_shard if args.fail_shard in owners
-                         else int(dep.replica_map.replicas[0, 0]))
+                         else int(dep0.replica_map.replicas[0, 0]))
                 failed.append(shard)
-                plan = plan_failover(dep.replica_map, failed)
-                mask = ownership_mask(plan.owner, n_shards)
+                plan = plan_failover(dep0.replica_map, failed)
                 print(f"[fault] shard {shard} down: "
                       f"{len(plan.moved)} clusters on replicas, "
                       f"{plan.n_lost} lost pending re-replication; "
                       f"heartbeat reports failed={hb.failed().tolist()}")
-            if args.rebuild_every and b > 0 and b % args.rebuild_every == 0:
-                # freshness: rebuild + atomic swap (paper's daily rebuild)
+            if not did_rebuild and args.rebuild and el > 2 * args.duration / 3:
+                did_rebuild = True
                 name_r = names[0]
                 old = deps[name_r]
+                spec = dataclasses.replace(old.spec, seed=old.spec.seed + 1)
+                fresh = deploy(arena, name_r + "_r1", spec,
+                               os.path.join(root, f"{name_r}_r1"),
+                               n_shards, scfg)
+                fresh.pipeline.warmup(batch_sizes=warm_sizes)
+                engine.swap_pipeline(name_r, fresh.pipeline)
                 undeploy(arena, old)
-                spec = dataclasses.replace(old.spec, seed=old.spec.seed + b)
-                deps[name_r] = deploy(
-                    arena, name_r, spec,
-                    os.path.join(root, f"{name_r}_r{b}"), n_shards)
-                print(f"[swap] {name_r} rebuilt and swapped in")
+                deps[name_r] = fresh
+                print(f"[swap] {name_r} rebuilt and swapped in "
+                      f"(engine kept serving)")
+
+        for name, dep in deps.items():
+            r = probe_recall(engine, dep, lat, name)
+            print(f"[health] {name}: recall@10={r:.3f} (through the engine)")
+        engine.stop(drain=True)
+        comps = engine.qp.poll()
+        lat += [c.latency for c in comps if c.status != "shed"]
+        st = engine.stats
+        pct = latency_percentiles(lat)
+        wall = time.monotonic() - t0
+        print(f"[done] {st.completed} completions in {wall:.1f}s "
+              f"({(st.completed - st.shed) / wall:.0f} q/s), "
+              f"p50={pct['p50_ms']:.0f}ms p99={pct['p99_ms']:.0f}ms, "
+              f"shed={st.shed} degraded={st.degraded} "
+              f"rejected={st.rejected}")
         if failed:
+            # live shards keep beating through shutdown so the monitor can
+            # cross its miss threshold on the silent one
+            for _ in range(3):
+                hb.tick()
+                for s in range(n_shards):
+                    if s not in failed:
+                        hb.beat(s, latency=1e-3)
             print(f"[health] heartbeat-detected failures at shutdown: "
                   f"{hb.failed().tolist()} (injected: {failed})")
         for dep in deps.values():
             undeploy(arena, dep)
         arena.validate()
-    print("[done]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,41 @@
+"""Async serving runtime — the §4.1 userspace I/O stack, adapted to TPU.
+
+Paper-to-module map:
+
+=====================  ====================================================
+paper §4.1 component   runtime module
+=====================  ====================================================
+SQ/CQ queue pairs,     :mod:`repro.runtime.engine` — bounded submission /
+doorbells, polling     completion queues, doorbell conditions, poller thread
+SSD-read / scan        :mod:`repro.runtime.pipeline` — double-buffered
+overlap                plan/prefetch/dispatch/harvest stages; gather of
+                       batch i+1 overlaps the in-flight scan of batch i
+request coalescing,    :mod:`repro.runtime.batcher` — dynamic micro-batching
+overload control       with deadline-aware shed/degrade admission control
+                       and round-robin fairness across co-resident indexes
+production traffic     :mod:`repro.runtime.loadgen` — seeded Poisson /
+                       bursty / multi-tenant arrival traces
+=====================  ====================================================
+"""
+from .batcher import BatchPolicy, BatcherStats, DynamicBatcher, MicroBatch
+from .engine import (
+    Completion,
+    EngineStats,
+    QueuePair,
+    SearchRequest,
+    ServeEngine,
+)
+from .loadgen import (
+    Arrival,
+    TenantSpec,
+    bursty_trace,
+    multi_tenant_trace,
+    poisson_trace,
+)
+from .pipeline import (
+    BatchResult,
+    PrefetchPipeline,
+    StageTimes,
+    latency_percentiles,
+    overlap_efficiency,
+)

@@ -1,0 +1,203 @@
+"""Dynamic micro-batching + deadline-aware admission control (§4.1/§4.2).
+
+TPU serving wants batches (one doorbell per batch, MXU-shaped work), but
+traffic arrives one query at a time.  The batcher sits between the
+submission queue and the scan pipeline and makes three decisions the paper's
+runtime makes in its userspace stack:
+
+* **coalescing** — accumulate single-query arrivals per index and release a
+  micro-batch when it is full (``max_batch``) or its head-of-line request
+  has waited ``max_wait_s`` (bounded batching delay);
+* **admission control / shedding** — a request whose deadline cannot be met
+  even by the *fastest* path is completed immediately as ``shed`` (fail fast
+  beats queueing doomed work — the paper's overload posture); a request that
+  would miss its deadline at the routed LLSP level but could make it at a
+  cheaper level is **degraded**: its nprobe is capped (``degrade_nprobe``),
+  trading recall for latency instead of dropping the query;
+* **fairness** — micro-batches are released round-robin across the node's
+  co-resident indexes (§4.2 multi-index hosting), so a hot tenant cannot
+  starve a cold one; within an index, FIFO order is preserved.
+
+All decisions are functions of (policy, observed-EWMA service rate, ``now``)
+only — replaying a seeded arrival trace against a virtual clock reproduces
+the exact shed/degrade/batch sequence, which is what the determinism tests
+assert.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .engine import Completion, SearchRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPolicy:
+    max_batch: int = 64            # release when this many are pending
+    max_wait_s: float = 0.005      # ... or when head-of-line waited this long
+    pad: int = 16                  # micro-batch quantum; keep equal to the
+                                   # pipeline's pad_batch (the actual jit
+                                   # padding knob) so warmups cover the
+                                   # shapes the pipeline really compiles
+    shed: str = "degrade"          # "none" | "shed" | "degrade"
+    degrade_nprobe: int = 8        # nprobe cap for degraded requests
+                                   # (lowest LLSP level bound)
+    degrade_speedup: float = 2.0   # assumed service speedup of a degraded req
+    overhead_s: float = 1e-3       # fixed per-batch cost (dispatch + merge)
+    init_query_s: float = 1e-4     # prior per-query service estimate
+    ewma: float = 0.3              # service-estimate smoothing
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    index: str
+    requests: list                 # list[SearchRequest], FIFO
+    nprobe_cap: np.ndarray         # (b,) int32, 0 = uncapped
+    degraded: np.ndarray           # (b,) bool
+    formed_at: float
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    admitted: int = 0
+    shed_admission: int = 0        # dead on arrival (deadline unmeetable)
+    shed_deadline: int = 0         # dropped at batch formation
+    degraded: int = 0
+    batches: int = 0
+
+
+class DynamicBatcher:
+    """Per-index pending queues + round-robin micro-batch formation."""
+
+    def __init__(self, policy: BatchPolicy, indexes: list[str]):
+        self.policy = policy
+        self._pending: dict[str, collections.deque] = {
+            name: collections.deque() for name in indexes
+        }
+        self._rr = 0                       # round-robin cursor over indexes
+        self.est_query_s = policy.init_query_s
+        self.stats = BatcherStats()
+
+    @property
+    def indexes(self) -> list[str]:
+        return list(self._pending)
+
+    def add_index(self, name: str) -> None:
+        if name in self._pending:
+            return
+        # copy-on-write: the poller thread iterates self._pending without a
+        # lock, so mutate by swapping in a new dict (atomic attribute store)
+        # rather than inserting into the one being iterated
+        self._pending = {**self._pending, name: collections.deque()}
+
+    def pending(self, index: Optional[str] = None) -> int:
+        if index is not None:
+            return len(self._pending[index])
+        return sum(len(q) for q in self._pending.values())
+
+    def observe(self, batch_size: int, service_s: float) -> None:
+        """Fold a measured batch service time into the per-query EWMA."""
+        if batch_size <= 0:
+            return
+        per_q = max(service_s - self.policy.overhead_s, 0.0) / batch_size
+        a = self.policy.ewma
+        self.est_query_s = (1 - a) * self.est_query_s + a * per_q
+
+    # -- admission ---------------------------------------------------------
+    def _min_latency(self, degraded: bool = False) -> float:
+        est = self.policy.overhead_s + self.est_query_s
+        return est / self.policy.degrade_speedup if degraded else est
+
+    def add(self, req: SearchRequest, now: float) -> Optional[Completion]:
+        """Admit a request; returns a shed Completion if it is dead on
+        arrival (deadline unmeetable even solo + degraded), else None."""
+        if req.index not in self._pending:
+            raise KeyError(f"unknown index {req.index!r}")
+        if req.deadline is not None and (
+            now + self._min_latency(degraded=True) > req.deadline
+        ):
+            self.stats.shed_admission += 1
+            return Completion(
+                req_id=req.req_id, index=req.index, status="shed",
+                ids=None, dists=None, nprobe=0,
+                submitted=req.arrival, completed=now,
+            )
+        self.stats.admitted += 1
+        self._pending[req.index].append(req)
+        return None
+
+    # -- batch formation ---------------------------------------------------
+    def ready(self, now: float) -> bool:
+        """Is some index due for release (full batch or head-of-line aged)?"""
+        for q in self._pending.values():
+            if len(q) >= self.policy.max_batch:
+                return True
+            if q and now - q[0].arrival >= self.policy.max_wait_s:
+                return True
+        return False
+
+    def form(
+        self, now: float, force: bool = False
+    ) -> tuple[Optional[MicroBatch], list[Completion]]:
+        """Release the next micro-batch (round-robin across indexes).
+
+        Returns (batch-or-None, sheds) — ``sheds`` are requests dropped at
+        formation time because even the degraded path would miss their
+        deadline.  ``force`` releases a partial batch regardless of age
+        (drain/shutdown path).
+        """
+        names = list(self._pending)
+        pick = None
+        for off in range(len(names)):
+            name = names[(self._rr + off) % len(names)]
+            q = self._pending[name]
+            if not q:
+                continue
+            due = (len(q) >= self.policy.max_batch
+                   or now - q[0].arrival >= self.policy.max_wait_s)
+            if force or due:
+                pick = name
+                self._rr = (names.index(name) + 1) % len(names)
+                break
+        if pick is None:
+            return None, []
+        q = self._pending[pick]
+        reqs: list[SearchRequest] = []
+        sheds: list[Completion] = []
+        while q and len(reqs) < self.policy.max_batch:
+            reqs.append(q.popleft())
+        b = len(reqs)
+        est_full = self.policy.overhead_s + self.est_query_s * b
+        est_deg = self.policy.overhead_s + (
+            self.est_query_s * b / self.policy.degrade_speedup
+        )
+        cap = np.zeros((b,), np.int32)
+        deg = np.zeros((b,), bool)
+        keep: list[SearchRequest] = []
+        for r in reqs:
+            if r.deadline is None or self.policy.shed == "none" \
+                    or now + est_full <= r.deadline:
+                keep.append(r)
+            elif self.policy.shed == "degrade" and now + est_deg <= r.deadline:
+                deg[len(keep)] = True
+                cap[len(keep)] = self.policy.degrade_nprobe
+                keep.append(r)
+                self.stats.degraded += 1
+            else:
+                self.stats.shed_deadline += 1
+                sheds.append(Completion(
+                    req_id=r.req_id, index=r.index, status="shed",
+                    ids=None, dists=None, nprobe=0,
+                    submitted=r.arrival, completed=now,
+                ))
+        if not keep:
+            return None, sheds
+        b = len(keep)
+        self.stats.batches += 1
+        return MicroBatch(
+            index=pick, requests=keep,
+            nprobe_cap=cap[:b], degraded=deg[:b], formed_at=now,
+        ), sheds

@@ -1,0 +1,328 @@
+"""Queue-pair serving engine — the userspace SQ/CQ stack of §4.1, on host.
+
+The paper replaces the kernel block stack with userspace submission /
+completion queue pairs: producers append commands to a bounded SQ, ring a
+doorbell, and a polling thread drains completions without syscalls or
+per-request wakeups.  The TPU-serving analogue implemented here:
+
+* :class:`QueuePair` — a bounded submission queue of :class:`SearchRequest`
+  plus a completion queue of :class:`Completion`.  ``submit`` is the
+  doorbell (condition notify); a full SQ is back-pressure and fails fast
+  (or blocks, caller's choice) instead of growing an unbounded backlog.
+* :class:`ServeEngine` — the poller: drains the SQ into the
+  :class:`~repro.runtime.batcher.DynamicBatcher`, releases micro-batches
+  into a :class:`~repro.runtime.pipeline.PrefetchPipeline`, and pushes
+  completions.  Its serving loop keeps one batch *scanning on device* while
+  the next batch is *planned and its clusters gathered on host* — the
+  prefetch-overlap that makes streamed serving bandwidth-bound instead of
+  latency-bound (measured, not asserted: see StageTimes/overlap_efficiency
+  in runtime/pipeline.py).
+
+Determinism: everything time-dependent takes an injectable ``clock``; tests
+drive :meth:`ServeEngine.step` with a virtual clock, the daemon uses
+:meth:`ServeEngine.start`'s real poller thread.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One query submitted to the SQ (the paper's NVMe-command analogue)."""
+    req_id: int
+    index: str
+    query: np.ndarray               # (D,) float32
+    topk: int
+    deadline: Optional[float]       # absolute clock time, None = best-effort
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    """CQ entry.  status: "ok" | "degraded" | "shed"."""
+    req_id: int
+    index: str
+    status: str
+    ids: Optional[np.ndarray]       # (k,) int32 (None when shed)
+    dists: Optional[np.ndarray]     # (k,) float32
+    nprobe: int
+    submitted: float
+    completed: float
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.submitted
+
+
+class QueuePair:
+    """Bounded SQ + CQ with doorbell semantics (thread-safe)."""
+
+    def __init__(self, sq_depth: int = 1024):
+        self.sq_depth = sq_depth
+        self._sq: collections.deque = collections.deque()
+        self._cq: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._doorbell = threading.Condition(self._lock)   # SQ became nonempty
+        self._not_full = threading.Condition(self._lock)   # SQ drained
+        self._cq_ready = threading.Condition(self._lock)   # CQ grew
+
+    def submit(self, req: SearchRequest, block: bool = False,
+               timeout: Optional[float] = None) -> bool:
+        """Append to the SQ and ring the doorbell.  Returns False when the
+        queue is full (back-pressure) and ``block`` is False or timed out."""
+        with self._lock:
+            if len(self._sq) >= self.sq_depth:
+                if not block:
+                    return False
+                ok = self._not_full.wait_for(
+                    lambda: len(self._sq) < self.sq_depth, timeout)
+                if not ok:
+                    return False
+            self._sq.append(req)
+            self._doorbell.notify_all()
+            return True
+
+    def sq_len(self) -> int:
+        with self._lock:
+            return len(self._sq)
+
+    def cq_len(self) -> int:
+        with self._lock:
+            return len(self._cq)
+
+    def pop_submissions(self, max_n: int = 0) -> list[SearchRequest]:
+        """Poller side: drain up to max_n (0 = all) submissions FIFO."""
+        with self._lock:
+            n = len(self._sq) if max_n <= 0 else min(max_n, len(self._sq))
+            out = [self._sq.popleft() for _ in range(n)]
+            if out:
+                self._not_full.notify_all()
+            return out
+
+    def wait_submissions(self, timeout: Optional[float] = None) -> bool:
+        """Poller side: sleep until the doorbell rings (or timeout)."""
+        with self._lock:
+            return self._doorbell.wait_for(lambda: len(self._sq) > 0, timeout)
+
+    def complete(self, comps: list[Completion]) -> None:
+        with self._lock:
+            self._cq.extend(comps)
+            if comps:
+                self._cq_ready.notify_all()
+
+    def poll(self, max_n: int = 0) -> list[Completion]:
+        """Consumer side: drain up to max_n (0 = all) completions FIFO."""
+        with self._lock:
+            n = len(self._cq) if max_n <= 0 else min(max_n, len(self._cq))
+            return [self._cq.popleft() for _ in range(n)]
+
+    def wait_completions(self, n: int = 1,
+                         timeout: Optional[float] = None) -> bool:
+        with self._lock:
+            return self._cq_ready.wait_for(lambda: len(self._cq) >= n, timeout)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    submitted: int = 0
+    rejected: int = 0               # SQ-full back-pressure
+    completed: int = 0
+    shed: int = 0
+    degraded: int = 0
+    batches: int = 0
+    service_s: float = 0.0          # summed batch service time
+
+
+class ServeEngine:
+    """SQ -> batcher -> prefetch pipeline -> CQ, with one-deep overlap.
+
+    ``pipelines`` maps index name -> PrefetchPipeline (the §4.2 multi-index
+    node).  The engine itself is pipeline-agnostic: it only needs the
+    ``plan / prefetch / dispatch / harvest`` stage protocol.
+    """
+
+    def __init__(self, pipelines: dict, batcher, qp: Optional[QueuePair] = None,
+                 clock=time.monotonic):
+        self.pipelines = dict(pipelines)
+        self.batcher = batcher
+        self.qp = qp or QueuePair()
+        self.clock = clock
+        self.stats = EngineStats()
+        self._req_ids = iter(range(1 << 62))
+        self._swap_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._drain_on_stop = True
+
+    # -- client side -------------------------------------------------------
+    def submit(self, query: np.ndarray, topk: int, index: Optional[str] = None,
+               deadline_s: Optional[float] = None, block: bool = False) -> int:
+        """Submit one query; returns req_id, or -1 on SQ back-pressure."""
+        now = self.clock()
+        if index is None:
+            index = next(iter(self.pipelines))
+        elif index not in self.pipelines:
+            # fail on the CLIENT thread: an unknown index reaching the
+            # poller would kill the serve loop for everyone
+            raise KeyError(f"unknown index {index!r}")
+        req = SearchRequest(
+            req_id=next(self._req_ids), index=index,
+            query=np.asarray(query, np.float32), topk=int(topk),
+            deadline=None if deadline_s is None else now + deadline_s,
+            arrival=now,
+        )
+        if not self.qp.submit(req, block=block):
+            self.stats.rejected += 1
+            return -1
+        self.stats.submitted += 1
+        return req.req_id
+
+    # -- index lifecycle (rebuild/swap flow of launch/serve.py) ------------
+    def swap_pipeline(self, name: str, pipeline) -> None:
+        """Atomically swap in a freshly built index (daily-rebuild flow)."""
+        with self._swap_lock:
+            self.pipelines[name] = pipeline
+            self.batcher.add_index(name)
+
+    def _pipeline(self, name: str):
+        with self._swap_lock:
+            return self.pipelines[name]
+
+    # -- poller ------------------------------------------------------------
+    def _drain_sq(self, now: float) -> None:
+        sheds = []
+        for req in self.qp.pop_submissions():
+            c = self.batcher.add(req, now)
+            if c is not None:
+                sheds.append(c)
+        if sheds:
+            self.stats.shed += len(sheds)
+            self.stats.completed += len(sheds)
+            self.qp.complete(sheds)
+
+    def _complete_batch(self, mb, result, done: float) -> None:
+        comps = []
+        for i, req in enumerate(mb.requests):
+            status = "degraded" if mb.degraded[i] else "ok"
+            comps.append(Completion(
+                req_id=req.req_id, index=req.index, status=status,
+                ids=result.ids[i], dists=result.dists[i],
+                nprobe=int(result.nprobe[i]),
+                submitted=req.arrival, completed=done,
+            ))
+        self.stats.degraded += int(mb.degraded.sum())
+        self.stats.completed += len(comps)
+        self.stats.batches += 1
+        # marginal batch cost = its own stage durations, NOT wall span from
+        # plan_start (in the pipelined steady state that span also covers
+        # the previous batch's in-flight scan and would inflate the EWMA
+        # ~2x, making admission control shed meetable requests)
+        t = result.times
+        service = (t.plan_end - t.plan_start) + (t.scan_done - t.scan_dispatch)
+        self.stats.service_s += service
+        self.batcher.observe(len(mb.requests), service)
+        self.qp.complete(comps)
+
+    def _form_and_plan(self, now: float, force: bool = False):
+        """Form the next micro-batch and run its plan stage (device idle
+        here by construction — before the current batch's scan dispatch)."""
+        mb, sheds = self.batcher.form(now, force=force)
+        if sheds:
+            self.stats.shed += len(sheds)
+            self.stats.completed += len(sheds)
+            self.qp.complete(sheds)
+        if mb is None:
+            return None
+        pipe = self._pipeline(mb.index)
+        queries = np.stack([r.query for r in mb.requests])
+        topk = np.asarray([r.topk for r in mb.requests], np.int32)
+        plan = pipe.plan(queries, topk, nprobe_cap=mb.nprobe_cap)
+        return mb, pipe, plan
+
+    def step(self, now: Optional[float] = None, force: bool = True) -> int:
+        """Synchronous single-batch step (tests / virtual clock): drain the
+        SQ, form one micro-batch, serve it end-to-end.  Returns the number
+        of completions produced."""
+        now = self.clock() if now is None else now
+        before = self.stats.completed
+        self._drain_sq(now)
+        planned = self._form_and_plan(now, force=force)
+        if planned is not None:
+            mb, pipe, plan = planned
+            result = pipe.harvest(pipe.dispatch(pipe.prefetch(plan)))
+            self._complete_batch(mb, result, self.clock() if now is None else now)
+        return self.stats.completed - before
+
+    def _serve_loop(self) -> None:
+        """Overlapped poller: while batch i scans on device, batch i+1 is
+        formed, planned, and its cluster union gathered/streamed on host.
+
+        The plan stage of batch i+1 runs BEFORE batch i's scan dispatch so
+        its (small) device work is not queued behind the (large) scan on the
+        backend's in-order execution stream — this ordering is what makes
+        the host gather actually land inside the scan-in-flight window.
+        """
+        prep = None                    # (mb, pipe, prefetch-handle)
+        while not self._stop.is_set():
+            now = self.clock()
+            self._drain_sq(now)
+            if prep is None:
+                planned = self._form_and_plan(now)
+                if planned is None:
+                    self.qp.wait_submissions(
+                        timeout=self.batcher.policy.max_wait_s)
+                    continue
+                mb, pipe, plan = planned
+                prep = (mb, pipe, pipe.prefetch(plan))
+                continue               # give the SQ one more drain pass
+            # commit the prepared batch: plan the NEXT batch first (device
+            # idle), dispatch scan, then gather the next batch under it.
+            nxt = self._form_and_plan(now)
+            mb, pipe, h = prep
+            infl = pipe.dispatch(h)
+            prep = None
+            if nxt is not None:
+                mb2, pipe2, plan2 = nxt
+                prep = (mb2, pipe2, pipe2.prefetch(plan2))
+            result = pipe.harvest(infl)
+            self._complete_batch(mb, result, self.clock())
+        # drain: finish anything still prepared or pending
+        if prep is not None:
+            mb, pipe, h = prep
+            result = pipe.harvest(pipe.dispatch(h))
+            self._complete_batch(mb, result, self.clock())
+        while self._drain_on_stop:
+            now = self.clock()
+            self._drain_sq(now)
+            planned = self._form_and_plan(now, force=True)
+            if planned is None:
+                if self.batcher.pending() > 0:
+                    continue          # a fully-shed batch is not "drained"
+                break
+            mb, pipe, plan = planned
+            result = pipe.harvest(pipe.dispatch(pipe.prefetch(plan)))
+            self._complete_batch(mb, result, self.clock())
+
+    def start(self) -> None:
+        assert self._thread is None, "engine already started"
+        self._stop.clear()
+        self._drain_on_stop = True
+        self._thread = threading.Thread(
+            target=self._serve_loop, name="serve-poller", daemon=True)
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the poller; by default finishes every admitted request."""
+        if self._thread is None:
+            return
+        self._drain_on_stop = drain
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

@@ -1,0 +1,135 @@
+"""Load generation for the serving runtime — the traffic side of §4.1.
+
+The paper evaluates its userspace I/O stack under production query streams
+("heavy traffic from millions of users"): open-loop arrival processes that
+keep issuing work whether or not the server keeps up (the back-pressure /
+admission-control regime), and closed-loop clients that wait for their
+previous answer (the latency-measurement regime).  This module generates
+deterministic, seeded versions of both:
+
+* ``poisson_trace``    — memoryless open-loop arrivals at a target QPS;
+* ``bursty_trace``     — piecewise-Poisson on/off bursts (the diurnal +
+                         flash-crowd shape of Fig. 1 traffic);
+* ``multi_tenant_trace`` — superposition of per-index traces for the §4.2
+                         multi-index node (each tenant its own rate, top-k
+                         range, and deadline budget).
+
+Traces are plain lists of :class:`Arrival` sorted by time — the engine tests
+replay them against a virtual clock, so every admission/shedding decision is
+reproducible bit-for-bit from (trace seed, policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One query arrival: time is seconds from trace start (virtual clock)."""
+    t: float
+    index: str                     # which co-resident index this query hits
+    qrow: int                      # row into the tenant's query pool
+    topk: int
+    deadline_s: Optional[float]    # latency budget (None = best-effort)
+
+    def deadline_at(self, t0: float) -> Optional[float]:
+        return None if self.deadline_s is None else t0 + self.t + self.deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """Per-tenant traffic shape for multi-index mixes."""
+    index: str
+    rate_qps: float
+    topk_lo: int = 10
+    topk_hi: int = 100
+    deadline_s: Optional[float] = None
+    n_queries: int = 1 << 30       # query-pool size qrow is drawn from
+
+
+def _draw_arrivals(
+    rng: np.random.Generator,
+    spec: TenantSpec,
+    duration_s: float,
+    rate_fn=None,
+) -> list[Arrival]:
+    """Thinned Poisson process: homogeneous at spec.rate_qps, or modulated by
+    ``rate_fn(t) in [0, 1]`` (Lewis–Shedler thinning, so bursty traces stay
+    exactly Poisson within each regime)."""
+    out: list[Arrival] = []
+    t = 0.0
+    if spec.rate_qps <= 0:
+        return out
+    while True:
+        t += rng.exponential(1.0 / spec.rate_qps)
+        if t >= duration_s:
+            break
+        if rate_fn is not None and rng.uniform() > rate_fn(t):
+            continue
+        topk = int(np.exp(rng.uniform(np.log(spec.topk_lo),
+                                      np.log(spec.topk_hi + 1))))
+        topk = min(max(topk, spec.topk_lo), spec.topk_hi)
+        out.append(Arrival(t=float(t), index=spec.index,
+                           qrow=int(rng.integers(0, spec.n_queries)),
+                           topk=topk, deadline_s=spec.deadline_s))
+    return out
+
+
+def poisson_trace(
+    rate_qps: float,
+    duration_s: float,
+    seed: int = 0,
+    index: str = "default",
+    topk: tuple[int, int] = (10, 100),
+    deadline_s: Optional[float] = None,
+    n_queries: int = 1 << 30,
+) -> list[Arrival]:
+    """Open-loop memoryless arrivals at ``rate_qps`` for ``duration_s``."""
+    rng = np.random.default_rng(seed)
+    spec = TenantSpec(index, rate_qps, topk[0], topk[1], deadline_s, n_queries)
+    return _draw_arrivals(rng, spec, duration_s)
+
+
+def bursty_trace(
+    base_qps: float,
+    burst_qps: float,
+    period_s: float,
+    duty: float,
+    duration_s: float,
+    seed: int = 0,
+    index: str = "default",
+    topk: tuple[int, int] = (10, 100),
+    deadline_s: Optional[float] = None,
+    n_queries: int = 1 << 30,
+) -> list[Arrival]:
+    """On/off bursts: ``burst_qps`` for the first ``duty`` fraction of every
+    ``period_s`` window, ``base_qps`` otherwise (flash-crowd shape)."""
+    rng = np.random.default_rng(seed)
+    peak = max(base_qps, burst_qps)
+    spec = TenantSpec(index, peak, topk[0], topk[1], deadline_s, n_queries)
+
+    def rate_fn(t: float) -> float:
+        in_burst = (t % period_s) < duty * period_s
+        return (burst_qps if in_burst else base_qps) / peak
+
+    return _draw_arrivals(rng, spec, duration_s, rate_fn)
+
+
+def multi_tenant_trace(
+    tenants: Sequence[TenantSpec],
+    duration_s: float,
+    seed: int = 0,
+) -> list[Arrival]:
+    """Superposition of independent per-tenant Poisson streams, time-merged.
+
+    Each tenant gets a derived seed, so adding a tenant does not perturb the
+    other tenants' arrivals (important for fairness A/Bs)."""
+    streams = []
+    for i, spec in enumerate(tenants):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, i]))
+        streams.append(_draw_arrivals(rng, spec, duration_s))
+    return list(heapq.merge(*streams, key=lambda a: a.t))

@@ -1,0 +1,370 @@
+"""Double-buffered prefetch pipeline — §4.1's I/O/compute overlap on TPU.
+
+The paper's userspace stack keeps the SSD and the scan engine busy at the
+same time: while one batch's posting lists are being scanned, the next
+batch's lists are already being read.  The TPU translation: while batch i
+runs the fused-topk scan on device, batch i+1's probed-cluster union is
+gathered from the host tier and ``device_put`` in flight, so streamed-mode
+serving overlaps PCIe with MXU instead of serializing them.
+
+Stage protocol (each stage returns a handle consumed by the next):
+
+  ``plan``     -> centroid scan + LLSP routing/pruning on device, probe set
+                  resolved to host (the paper's in-DRAM index walk);
+  ``prefetch`` -> host gather of the probed-cluster union + device stream,
+                  on a dedicated worker thread (the SQ-side DMA engine);
+  ``dispatch`` -> join the gather, launch the fused-topk scan (JAX async
+                  dispatch — returns immediately, scan in flight);
+  ``harvest``  -> block on the scan outputs, truncate padding.
+
+``run_sequential`` chains the stages strictly (the pre-PR-2 serve loop);
+``run_pipelined`` double-buffers them.  Every stage is wall-clock stamped
+(:class:`StageTimes`) so :func:`overlap_efficiency` can *measure* how much
+of batch i+1's gather/stream interval lands inside batch i's
+scan-in-flight interval — the bench asserts overlap from these stamps, not
+from throughput alone.
+
+Ordering note: the plan stage of batch i+1 is always enqueued BEFORE batch
+i's scan (both in ``run_pipelined`` and in the engine's poller).  The CPU /
+TPU backends execute queued computations in order, so planning after the
+scan dispatch would serialize the whole pipeline behind the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distance import (
+    dedup_topk, merge_candidate_topk, squared_l2, topk_smallest,
+)
+from repro.core.search import SearchConfig, _auto_ncand, _scan_and_rank, decide_nprobe
+from repro.kernels import ops as kops
+from repro.storage.host_tier import TieredPostings
+
+
+@dataclasses.dataclass
+class StageTimes:
+    """Wall-clock stamps of one batch through the pipeline (seconds)."""
+    size: int = 0                  # true batch size (pre-padding)
+    rows: int = 0                  # packed posting rows streamed
+    plan_start: float = 0.0
+    plan_end: float = 0.0
+    gather_start: float = 0.0
+    gather_end: float = 0.0        # host union gather materialized
+    stream_end: float = 0.0        # packed tensors on device
+    scan_dispatch: float = 0.0
+    scan_done: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.scan_done - self.plan_start
+
+
+@dataclasses.dataclass
+class BatchResult:
+    ids: np.ndarray                # (b, k) int32
+    dists: np.ndarray              # (b, k) float32
+    nprobe: np.ndarray             # (b,) int32
+    times: StageTimes
+
+
+@dataclasses.dataclass
+class _Plan:
+    queries_dev: jax.Array         # (bp, D) padded, on device
+    cids: np.ndarray               # (bp, P)
+    pmask: np.ndarray              # (bp, P) bool
+    nprobe: np.ndarray             # (bp,)
+    times: StageTimes
+
+
+@dataclasses.dataclass
+class _Prep:
+    plan: _Plan
+    fut: Optional[object]          # gather future (None in resident mode)
+
+
+@dataclasses.dataclass
+class _Inflight:
+    out_d: jax.Array
+    out_i: jax.Array
+    nprobe: np.ndarray
+    times: StageTimes
+    size: int
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _plan_jit(centroids, llsp_params, queries, topk, cfg: SearchConfig):
+    d = squared_l2(queries, centroids)
+    cdists, cids = topk_smallest(d, min(cfg.nprobe_max, centroids.shape[0]))
+    nprobe = decide_nprobe(cfg, llsp_params, queries, topk, cdists)
+    return cids.astype(jnp.int32), nprobe
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "dup_bound"))
+def _scan_streamed_jit(packed, packed_ids, remap, pmask, queries,
+                       cfg: SearchConfig, dup_bound: int = 8):
+    """Candidate-compressed scan over the STREAMED (packed) posting rows.
+
+    use_kernel: the fused Pallas kernel runs directly on the packed tensors
+    (remap plays the role of cids).  Oracle path: instead of re-gathering a
+    (B, P, L, D) probe tensor from rows we just streamed, distance the whole
+    packed payload against the batch with ONE matmul (rows are unique, so
+    this does no duplicate work), mask each query to its probed rows via a
+    scatter of the remap table, and top-k in the packed domain.  ``dup_bound``
+    caps how many closure replicas of one id can precede the k2-th unique
+    candidate (build-time max_replicas is 4; 8 = 2x headroom) so the dedup
+    runs on an O(k2·dup_bound) pre-selection, not on all R·L slots.
+    """
+    k2 = cfg.n_cand or _auto_ncand(cfg.k)
+    if cfg.use_kernel:
+        cd, ci = kops.ivf_scan_topk(packed, packed_ids, remap, pmask,
+                                    queries, k2=k2)
+    else:
+        r, l, dim = packed.shape
+        b = queries.shape[0]
+        d = squared_l2(queries, packed.reshape(r * l, dim))      # (B, R*L)
+        member = jnp.zeros((b, r), jnp.int32).at[
+            jnp.arange(b)[:, None], remap
+        ].add(pmask.astype(jnp.int32))                           # (B, R)
+        live = (member > 0)[:, :, None] & (packed_ids >= 0)[None, :, :]
+        d = jnp.where(live.reshape(b, r * l), d, jnp.inf)
+        ids = jnp.broadcast_to(packed_ids.reshape(1, r * l), (b, r * l))
+        m = min(k2 * dup_bound, r * l)
+        nd, pos = topk_smallest(d, m)
+        cd, ci = dedup_topk(nd, jnp.take_along_axis(ids, pos, axis=-1), k2)
+    return merge_candidate_topk(cd, ci, cfg.k)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _scan_resident_jit(index, queries, cids, pmask, cfg: SearchConfig):
+    return _scan_and_rank(index, queries, cids, pmask, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _scan_reference_jit(packed, packed_ids, remap, pmask, queries,
+                        cfg: SearchConfig):
+    """The PRE-runtime streamed scan (A/B baseline): the PR 1 reference
+    oracle on the packed tensors — re-gathers a (B, P, L, D) probe tensor
+    from the rows the tier just streamed, exactly what serving on the
+    streamed tier looked like before the packed-domain scan existed."""
+    from repro.kernels.ref import ivf_scan_topk_ref
+
+    k2 = cfg.n_cand or _auto_ncand(cfg.k)
+    cd, ci = ivf_scan_topk_ref(packed, packed_ids, remap, pmask, queries, k2)
+    return merge_candidate_topk(cd, ci, cfg.k)
+
+
+class PrefetchPipeline:
+    """Stage-structured streamed/resident serving over one index.
+
+    streamed (``tier`` given): postings live on host in ``tier``; each batch
+    streams only its probed-cluster union (§4.1 I/O path).  resident: the
+    index is fully device-resident and prefetch is a no-op (all-HBM path) —
+    the engine drives both through the same protocol.
+
+    ``pad_batch`` / ``row_bucket`` quantize the jit-visible shapes (padded
+    batch size, packed-row count) so long-running daemons compile a bounded
+    program set.  ``row_bucket`` trades padding bytes for compile count: a
+    coarse bucket wastes a few % of stream bandwidth on zero rows but keeps
+    the scan-program set to ~ceil(C / row_bucket) entries — under live
+    traffic (union size varies batch to batch) a fine bucket turns into a
+    compile storm that dwarfs the padding it saves.
+    """
+
+    def __init__(self, index, llsp_params, cfg: SearchConfig,
+                 tier: Optional[TieredPostings] = None, *,
+                 pad_batch: int = 16, row_bucket: int = 256):
+        self.index = index
+        self.llsp_params = llsp_params
+        self.cfg = cfg
+        self.tier = tier
+        self.pad_batch = pad_batch
+        self.row_bucket = row_bucket
+        self._gatherer = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="prefetch")
+
+    @property
+    def streamed(self) -> bool:
+        return self.tier is not None
+
+    # -- stages ------------------------------------------------------------
+    def plan(self, queries: np.ndarray, topk,
+             nprobe_cap: Optional[np.ndarray] = None) -> _Plan:
+        """Centroid scan + LLSP pruning; probe set resolved to host arrays.
+
+        ``nprobe_cap`` (b,) int32 caps per-query nprobe (0 = uncapped) —
+        the batcher's deadline-degradation hook."""
+        t = StageTimes(size=len(queries))
+        t.plan_start = time.perf_counter()
+        q = np.asarray(queries, np.float32)
+        tk = np.broadcast_to(np.asarray(topk, np.int32), (len(q),))
+        b = len(q)
+        bp = -(-b // self.pad_batch) * self.pad_batch
+        if bp != b:
+            q = np.concatenate([q, np.repeat(q[-1:], bp - b, axis=0)])
+            tk = np.concatenate([tk, np.repeat(tk[-1:], bp - b)])
+        qd = jnp.asarray(q)
+        cids, nprobe = _plan_jit(self.index.centroids, self.llsp_params,
+                                 qd, jnp.asarray(tk), self.cfg)
+        cids = np.asarray(cids)
+        nprobe = np.asarray(nprobe).copy()
+        if nprobe_cap is not None:
+            cap = np.zeros((bp,), np.int32)
+            cap[:b] = np.asarray(nprobe_cap, np.int32)
+            capped = cap > 0
+            nprobe[capped] = np.minimum(nprobe[capped], cap[capped])
+        nprobe[b:] = 0                     # padding rows probe nothing
+        pmask = (np.arange(cids.shape[1])[None, :] < nprobe[:, None]) \
+            & (cids >= 0)
+        t.plan_end = time.perf_counter()
+        return _Plan(qd, cids, pmask, nprobe, t)
+
+    def _gather(self, plan: _Plan):
+        packed, pids, remap = self.tier.fetch(
+            plan.cids, plan.pmask, bucket=self.row_bucket)
+        ev = self.tier.stats.events[-1]    # same thread as the fetch: safe
+        plan.times.gather_start = ev.gather_start
+        plan.times.gather_end = ev.gather_end
+        plan.times.stream_end = ev.stream_end
+        plan.times.rows = ev.rows
+        return packed, pids, remap
+
+    def prefetch(self, plan: _Plan) -> _Prep:
+        """Start the host gather + device stream on the worker thread."""
+        if not self.streamed:
+            return _Prep(plan, None)
+        return _Prep(plan, self._gatherer.submit(self._gather, plan))
+
+    def dispatch(self, prep: _Prep, *, reference: bool = False) -> _Inflight:
+        """Join the gather, launch the scan (async — returns immediately)."""
+        plan = prep.plan
+        t = plan.times
+        if self.streamed:
+            packed, pids, remap = prep.fut.result()
+            t.scan_dispatch = time.perf_counter()
+            scan = _scan_reference_jit if reference else _scan_streamed_jit
+            od, oi = scan(
+                packed, pids, remap, jnp.asarray(plan.pmask),
+                plan.queries_dev, self.cfg)
+        else:
+            t.scan_dispatch = time.perf_counter()
+            od, oi = _scan_resident_jit(
+                self.index, plan.queries_dev, jnp.asarray(plan.cids),
+                jnp.asarray(plan.pmask), self.cfg)
+        return _Inflight(od, oi, plan.nprobe, t, t.size)
+
+    def harvest(self, infl: _Inflight) -> BatchResult:
+        """Block on the scan outputs; truncate batch padding."""
+        ids = np.asarray(infl.out_i)[: infl.size]
+        dists = np.asarray(infl.out_d)[: infl.size]
+        infl.times.scan_done = time.perf_counter()
+        return BatchResult(ids, dists, infl.nprobe[: infl.size].copy(),
+                           infl.times)
+
+    def warmup(self, batch_sizes=(16, 32), max_rows: Optional[int] = None
+               ) -> int:
+        """Pre-compile every (padded batch, row-bucket) scan/plan shape a
+        live engine can hit, so traffic never pays a compile.  A cold
+        compile (~0.5-1 s) landing mid-trace queues hundreds of arrivals
+        past their deadline and the admission controller sheds them — the
+        warmup turns that cliff into a one-time startup cost.  Returns the
+        number of programs compiled."""
+        if not self.streamed:
+            for b in batch_sizes:
+                bp = -(-b // self.pad_batch) * self.pad_batch
+                self.serve_batch(np.zeros((bp, self.index.dim), np.float32),
+                                 10)
+            return len(batch_sizes)
+        c = self.tier.postings.shape[0]
+        l, d = self.tier.postings.shape[1], self.tier.postings.shape[2]
+        max_rows = max_rows or c + 1
+        max_rows = -(-max_rows // self.row_bucket) * self.row_bucket
+        n = 0
+        for b in batch_sizes:
+            bp = -(-b // self.pad_batch) * self.pad_batch
+            q = np.zeros((bp, d), np.float32)
+            qd = jnp.asarray(q)
+            _plan_jit(self.index.centroids, self.llsp_params, qd,
+                      jnp.full((bp,), 10, jnp.int32), self.cfg)
+            p = min(self.cfg.nprobe_max, c)
+            for rows in range(self.row_bucket, max_rows + 1, self.row_bucket):
+                _scan_streamed_jit(
+                    jnp.zeros((rows, l, d), jnp.float32),
+                    jnp.full((rows, l), -1, jnp.int32),
+                    jnp.zeros((bp, p), jnp.int32),
+                    jnp.zeros((bp, p), bool), qd, self.cfg)
+                n += 1
+        return n
+
+    # -- convenience drivers ----------------------------------------------
+    def serve_batch(self, queries, topk,
+                    nprobe_cap: Optional[np.ndarray] = None) -> BatchResult:
+        plan = self.plan(queries, topk, nprobe_cap=nprobe_cap)
+        return self.harvest(self.dispatch(self.prefetch(plan)))
+
+    def run_sequential(self, batches, *, reference: bool = False
+                       ) -> list[BatchResult]:
+        """Strictly serial stage chain per batch — the A/B baseline: host
+        idle during scan, device idle during gather.  ``reference=True``
+        additionally swaps in the pre-runtime reference scan (the full
+        pre-PR-2 loop); False isolates the overlap effect alone (identical
+        scan program, only the stage ordering differs vs run_pipelined)."""
+        out = []
+        for queries, topk in batches:
+            plan = self.plan(queries, topk)
+            prep = self.prefetch(plan)
+            if prep.fut is not None:
+                prep.fut.result()          # block: no overlap, by design
+            infl = self.dispatch(prep, reference=reference)
+            jax.block_until_ready(infl.out_d)
+            out.append(self.harvest(infl))
+        return out
+
+    def run_pipelined(self, batches) -> list[BatchResult]:
+        """Double-buffered: batch i+1 is planned before batch i's scan is
+        dispatched, then gathered/streamed while that scan is in flight."""
+        batches = list(batches)
+        if not batches:
+            return []
+        out = []
+        prep = self.prefetch(self.plan(*batches[0]))
+        for i in range(len(batches)):
+            nxt = self.plan(*batches[i + 1]) if i + 1 < len(batches) else None
+            infl = self.dispatch(prep)
+            if nxt is not None:
+                prep = self.prefetch(nxt)
+            out.append(self.harvest(infl))
+        return out
+
+
+def overlap_efficiency(times: list[StageTimes]) -> float:
+    """Fraction of gather+stream seconds hidden under the previous batch's
+    scan-in-flight window (0 = fully serial, ~1 = fully hidden)."""
+    tot = 0.0
+    hidden = 0.0
+    for prev, cur in zip(times, times[1:]):
+        g0, g1 = cur.gather_start, cur.stream_end
+        if g1 <= g0:
+            continue
+        tot += g1 - g0
+        s0, s1 = prev.scan_dispatch, prev.scan_done
+        hidden += max(0.0, min(g1, s1) - max(g0, s0))
+    return hidden / tot if tot > 0 else 0.0
+
+
+def latency_percentiles(lat_s: list[float]) -> dict:
+    if not lat_s:
+        return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+    a = np.asarray(lat_s) * 1e3
+    return {
+        "p50_ms": float(np.percentile(a, 50)),
+        "p99_ms": float(np.percentile(a, 99)),
+        "mean_ms": float(a.mean()),
+    }

@@ -7,4 +7,4 @@ from .layout import (
     make_replica_map,
     plan_striping,
 )
-from .host_tier import TieredPostings, TierStats
+from .host_tier import FetchEvent, TieredPostings, TierStats

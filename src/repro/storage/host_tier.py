@@ -15,11 +15,16 @@ Two modes:
   batch" per query batch).
 
 The byte counters feed the Fig.-18 bandwidth-utilization analogue: achieved
-bytes moved vs the tier's peak bandwidth.
+bytes moved vs the tier's peak bandwidth.  Per-fetch stage timestamps
+(``TierStats.events``) feed the serving-runtime overlap analysis
+(runtime/pipeline.py): they let the bench *measure* that batch i+1's
+gather/stream interval lands inside batch i's scan-in-flight interval
+instead of asserting it.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import numpy as np
@@ -28,17 +33,41 @@ import jax.numpy as jnp
 
 
 @dataclasses.dataclass
+class FetchEvent:
+    """Wall-clock stamps of one fetch: host gather, then device stream."""
+    gather_start: float
+    gather_end: float     # union gather materialized in host memory
+    stream_end: float     # packed tensors handed to the device (device_put)
+    rows: int             # packed rows streamed (incl. sentinel/pad rows)
+    bytes: int
+
+
+@dataclasses.dataclass
 class TierStats:
     bytes_streamed: int = 0
     batches: int = 0
     clusters_fetched: int = 0
     clusters_deduped: int = 0
+    gather_s: float = 0.0          # cumulative host union-gather seconds
+    stream_s: float = 0.0          # cumulative host->device stream seconds
+    events: list = dataclasses.field(default_factory=list)
+    max_events: int = 4096         # ring-bounded so serving daemons don't grow
 
     def reset(self) -> None:
         self.bytes_streamed = 0
         self.batches = 0
         self.clusters_fetched = 0
         self.clusters_deduped = 0
+        self.gather_s = 0.0
+        self.stream_s = 0.0
+        self.events.clear()
+
+    def record(self, ev: FetchEvent) -> None:
+        self.gather_s += ev.gather_end - ev.gather_start
+        self.stream_s += ev.stream_end - ev.gather_end
+        if len(self.events) >= self.max_events:
+            del self.events[: self.max_events // 2]
+        self.events.append(ev)
 
 
 class TieredPostings:
@@ -48,6 +77,11 @@ class TieredPostings:
         self.postings = np.ascontiguousarray(postings)
         self.posting_ids = np.ascontiguousarray(posting_ids)
         self.stats = TierStats()
+        # Remap LUT hoisted out of fetch(): one reusable O(n_clusters) buffer
+        # instead of a fresh allocation per call.  Only entries of the current
+        # union are ever read back (masked probes bypass the LUT entirely via
+        # the sentinel), so stale entries from earlier fetches are harmless.
+        self._lut = np.zeros(self.postings.shape[0], dtype=np.int64)
 
     @property
     def cluster_bytes(self) -> int:
@@ -56,36 +90,57 @@ class TieredPostings:
         )
 
     def fetch(
-        self, cids: np.ndarray, mask: Optional[np.ndarray] = None
+        self,
+        cids: np.ndarray,
+        mask: Optional[np.ndarray] = None,
+        pad_rows: Optional[int] = None,
+        bucket: int = 1,
     ) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Gather the union of probed clusters and stream them once.
 
         cids: (B, P) int32; mask: (B, P) bool.  Returns
-        (packed_postings (U, L, D), packed_ids (U, L), remap (B, P)) where
-        remap[b, p] indexes into the packed tensors (0 for masked probes,
-        whose ids are -1 in packed row 0 only if masked — callers must apply
-        the mask).  Duplicate clusters across queries are fetched once
+        (packed_postings (R, L, D), packed_ids (R, L), remap (B, P)) with
+        R = union size U plus one sentinel row, rounded up to a multiple of
+        ``bucket`` and to at least ``pad_rows`` when given — callers that
+        jit over the packed tensors quantize R to bound their compile
+        cache.  remap[b, p] indexes into the packed tensors; masked or
+        negative probes map to the SENTINEL row (all ids -1, zero payload)
+        so downstream id-masking drops them even if a caller forgets the
+        probe mask.  Duplicate clusters across queries are fetched once
         (the paper's burst-overlap observation, §6.2).
         """
+        t0 = time.perf_counter()
         cids = np.asarray(cids)
         if mask is None:
             mask = np.ones_like(cids, dtype=bool)
-        mask = np.asarray(mask)
-        wanted = np.unique(cids[mask])
-        wanted = wanted[wanted >= 0]
-        if wanted.size == 0:
-            wanted = np.zeros((1,), dtype=np.int64)
-        lut = np.zeros(self.postings.shape[0], dtype=np.int64)
-        lut[wanted] = np.arange(wanted.size)
-        remap = lut[np.clip(cids, 0, None)]
-        packed = self.postings[wanted]
-        packed_ids = self.posting_ids[wanted]
-        self.stats.bytes_streamed += int(packed.nbytes + packed_ids.nbytes)
-        self.stats.batches += 1
-        self.stats.clusters_fetched += int(mask.sum())
-        self.stats.clusters_deduped += int(wanted.size)
-        return (
-            jnp.asarray(packed),
-            jnp.asarray(packed_ids),
-            jnp.asarray(remap.astype(np.int32)),
+        live = np.asarray(mask) & (cids >= 0)
+        wanted = np.unique(cids[live])
+        u = int(wanted.size)
+        sentinel = u
+        rows = max(u + 1, int(pad_rows or 0))
+        rows = -(-rows // max(bucket, 1)) * max(bucket, 1)
+        lut = self._lut
+        lut[wanted] = np.arange(u)
+        remap = np.where(
+            live, lut[np.clip(cids, 0, self.postings.shape[0] - 1)], sentinel
         )
+        c, l, d = self.postings.shape
+        # single-copy gather: np.take writes straight into the packed buffer
+        # (no (U, L, D) temporary), and sentinel/pad payload rows stay
+        # uninitialized — their ids are -1, which every consumer masks on.
+        packed = np.empty((rows, l, d), dtype=self.postings.dtype)
+        np.take(self.postings, wanted, axis=0, out=packed[:u])
+        packed_ids = np.full((rows, l), -1, dtype=self.posting_ids.dtype)
+        np.take(self.posting_ids, wanted, axis=0, out=packed_ids[:u])
+        t1 = time.perf_counter()
+        dev_packed = jnp.asarray(packed)
+        dev_ids = jnp.asarray(packed_ids)
+        dev_remap = jnp.asarray(remap.astype(np.int32))
+        t2 = time.perf_counter()
+        nbytes = int(packed.nbytes + packed_ids.nbytes)
+        self.stats.bytes_streamed += nbytes
+        self.stats.batches += 1
+        self.stats.clusters_fetched += int(live.sum())
+        self.stats.clusters_deduped += u
+        self.stats.record(FetchEvent(t0, t1, t2, rows, nbytes))
+        return dev_packed, dev_ids, dev_remap

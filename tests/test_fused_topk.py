@@ -108,6 +108,21 @@ def test_plan_tile_probes_covers_union_once():
     assert (np.diff(tc[0]) >= 0).all()
 
 
+def test_plan_tile_probes_chunked_parity():
+    # tile-chunking only bounds the membership intermediate; the plan must
+    # be bit-identical for any chunk size (incl. the degenerate chunk=1)
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    cids = jax.random.randint(k1, (48, 16), -1, 30)
+    mask = jax.random.bernoulli(k2, 0.7, (48, 16))
+    tc0, qs0 = plan_tile_probes(cids, mask, bq=8, n_clusters=30)
+    for chunk in (1, 2, 5):
+        tc, qs = plan_tile_probes(cids, mask, bq=8, n_clusters=30,
+                                  tile_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(tc0), np.asarray(tc))
+        np.testing.assert_array_equal(np.asarray(qs0), np.asarray(qs))
+
+
 # -------------------------------------------------------------------------
 # merge edge cases
 # -------------------------------------------------------------------------

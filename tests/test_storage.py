@@ -109,3 +109,43 @@ def test_tiered_postings_fetch_dedup(rng):
             if mask[b, p_]:
                 np.testing.assert_array_equal(packed[remap[b, p_]],
                                               postings[cids[b, p_]])
+
+
+def test_tiered_postings_sentinel_and_lut_reuse(rng):
+    postings = rng.normal(size=(20, 4, 8)).astype(np.float32)
+    ids = rng.integers(0, 100, size=(20, 4)).astype(np.int32)
+    tier = TieredPostings(postings, ids)
+    cids = np.array([[2, 7, -1], [7, 9, 2]], dtype=np.int32)
+    mask = np.array([[True, False, True], [True, True, True]])
+    packed, packed_ids, remap = tier.fetch(cids, mask)
+    remap = np.asarray(remap)
+    packed_ids = np.asarray(packed_ids)
+    # masked / negative probes land on the sentinel row, whose ids are all
+    # -1 (NOT an arbitrary live row-0 alias)
+    sentinel = remap[0, 1]
+    assert remap[0, 2] == sentinel               # cid -1 while mask True
+    assert (packed_ids[sentinel] == -1).all()
+    assert sentinel == tier.stats.clusters_deduped  # first row past union
+    # the hoisted LUT must not leak state between fetches: a second fetch
+    # over a DIFFERENT union (overlapping the first) still remaps correctly
+    cids2 = np.array([[9, 4, 2], [4, 4, 9]], dtype=np.int32)
+    packed2, _, remap2 = tier.fetch(cids2, None)
+    packed2, remap2 = np.asarray(packed2), np.asarray(remap2)
+    for b in range(2):
+        for p_ in range(3):
+            np.testing.assert_array_equal(packed2[remap2[b, p_]],
+                                          postings[cids2[b, p_]])
+
+
+def test_tiered_postings_row_bucketing(rng):
+    postings = rng.normal(size=(20, 4, 8)).astype(np.float32)
+    ids = rng.integers(0, 100, size=(20, 4)).astype(np.int32)
+    tier = TieredPostings(postings, ids)
+    cids = np.array([[0, 1, 2]], dtype=np.int32)
+    packed, packed_ids, _ = tier.fetch(cids, bucket=8)
+    assert packed.shape[0] == 8                  # 3 + sentinel -> bucket
+    assert (np.asarray(packed_ids)[3:] == -1).all()
+    packed, _, _ = tier.fetch(cids, pad_rows=6, bucket=4)
+    assert packed.shape[0] == 8                  # max(4, 6) -> next bucket
+    ev = tier.stats.events[-1]
+    assert ev.rows == 8 and ev.stream_end >= ev.gather_end >= ev.gather_start
