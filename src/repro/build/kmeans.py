@@ -1,10 +1,23 @@
 """Accelerated k-means for construction stage 1 (paper Fig. 13 / 21a).
 
-The E-step dispatches through kernels/ops.kmeans_assign (the pairwise-L2
-Pallas kernel on TPU, its jnp oracle elsewhere); the M-step is a host-side
-scatter-add.  ``balanced_hierarchical_kmeans`` is the SPANN-style recursive
-splitter that bounds every leaf cluster at ``max_cluster_size`` so posting
-lists stay fixed-size (the serving layout's contract).
+Two E/M-step data paths, selected per call (``BuildConfig.fused_assign``
+routes the whole pipeline):
+
+* ``fused=True`` (default in the pipeline) — the Pallas fused
+  assign-and-accumulate kernel (kernels/kmeans_assign.py on TPU, its jnp
+  oracle elsewhere): one pass emits assignments + per-centroid sums/counts,
+  the (N, K) distance matrix stays in VMEM, and the M-step is a device
+  matmul instead of a host ``np.add.at`` scatter.
+* ``fused=False`` — the legacy A/B reference: kernels/ops.kmeans_assign
+  (argmin over the materialized distance tile) + host-side float64
+  scatter-add.
+
+Both paths share the empty-cluster reseeding rule (worst-served points), and
+their per-step assignments are bit-identical on the same inputs (the fused
+oracle argmins over the same pairwise_l2_ref distances).
+``balanced_hierarchical_kmeans`` is the SPANN-style recursive splitter that
+bounds every leaf cluster at ``max_cluster_size`` so posting lists stay
+fixed-size (the serving layout's contract).
 """
 from __future__ import annotations
 
@@ -15,8 +28,34 @@ import jax.numpy as jnp
 from repro.kernels import ops as kops
 
 
+def kmeans_assign_step(
+    x: np.ndarray, cents: np.ndarray, fused: bool = False
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """One Lloyd E+M data pass. Returns (assign (N,) i64, min_dist (N,) f32,
+    sums (K, D), counts (K,) i64).
+
+    Fused: a single device pass (kernel/oracle) returns everything; counts
+    come back exact (integer cross-chunk fold).  Unfused: device argmin +
+    host float64 scatter-add — the legacy reference the bench pairs against.
+    """
+    k, d = cents.shape
+    if fused:
+        a, md, sums, counts = kops.kmeans_assign_update(
+            jnp.asarray(x), jnp.asarray(cents))
+        return (np.asarray(a, np.int64), np.asarray(md),
+                np.asarray(sums, np.float64),
+                np.asarray(counts, np.int64))
+    a, md = kops.kmeans_assign(jnp.asarray(x), jnp.asarray(cents))
+    assign = np.asarray(a, np.int64)
+    sums = np.zeros((k, d), np.float64)
+    np.add.at(sums, assign, x)
+    counts = np.bincount(assign, minlength=k)
+    return assign, np.asarray(md), sums, counts
+
+
 def kmeans(
-    x: np.ndarray, k: int, iters: int = 10, seed: int = 0
+    x: np.ndarray, k: int, iters: int = 10, seed: int = 0,
+    fused: bool = False,
 ) -> tuple[np.ndarray, np.ndarray, float]:
     """Lloyd's algorithm. Returns (centroids (k, D), assign (N,), inertia)."""
     x = np.asarray(x, np.float32)
@@ -27,11 +66,7 @@ def kmeans(
     assign = np.zeros(n, np.int64)
     mind = np.zeros(n, np.float32)
     for _ in range(max(1, iters)):
-        a, md = kops.kmeans_assign(jnp.asarray(x), jnp.asarray(cents))
-        assign, mind = np.asarray(a, np.int64), np.asarray(md)
-        sums = np.zeros((k, d), np.float64)
-        np.add.at(sums, assign, x)
-        counts = np.bincount(assign, minlength=k)
+        assign, mind, sums, counts = kmeans_assign_step(x, cents, fused=fused)
         nonz = counts > 0
         cents[nonz] = (sums[nonz] / counts[nonz, None]).astype(np.float32)
         if (~nonz).any():  # reseed empty clusters at the worst-served points
@@ -46,6 +81,7 @@ def balanced_hierarchical_kmeans(
     iters: int = 8,
     seed: int = 0,
     branch: int = 8,
+    fused: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Recursive balanced clustering: split until every leaf fits the bound.
 
@@ -66,7 +102,7 @@ def balanced_hierarchical_kmeans(
             continue
         k = int(min(branch, max(2, -(-idxs.size // max_cluster_size))))
         task_seed += 1
-        _, a, _ = kmeans(x[idxs], k, iters=iters, seed=task_seed)
+        _, a, _ = kmeans(x[idxs], k, iters=iters, seed=task_seed, fused=fused)
         sizes = np.bincount(a, minlength=k)
         if (sizes == idxs.size).any():  # degenerate: force a median split
             dim = int(np.argmax(x[idxs].var(axis=0)))
@@ -93,6 +129,7 @@ def enforce_size_bound(
     bound: int,
     max_rounds: int = 20,
     seed: int = 0,
+    fused: bool = False,
 ) -> np.ndarray:
     """Split Voronoi cells larger than ``bound`` until none remain.
 
@@ -100,21 +137,30 @@ def enforce_size_bound(
     chunk, but the MERGED centroid set's global Voronoi cells can still
     exceed the posting-list capacity; any primary overflow would be silently
     truncated by the fixed-size posting build.  Each round reassigns all
-    points and 2-way-splits every oversized cell.
+    points and 2-way-splits every oversized cell.  The fused path reads the
+    cell sizes straight off the kernel's in-VMEM counts — no (N, K) matrix,
+    no host bincount.
     """
     x = np.asarray(x, np.float32)
     cents = np.asarray(centroids, np.float32).copy()
     for rnd in range(max_rounds):
-        a, _ = kops.kmeans_assign(jnp.asarray(x), jnp.asarray(cents))
-        a = np.asarray(a)
-        counts = np.bincount(a, minlength=cents.shape[0])
+        if fused:
+            a, _, _, counts = kops.kmeans_assign_update(
+                jnp.asarray(x), jnp.asarray(cents))
+            a = np.asarray(a)
+            counts = np.asarray(counts, np.int64)
+        else:
+            a, _ = kops.kmeans_assign(jnp.asarray(x), jnp.asarray(cents))
+            a = np.asarray(a)
+            counts = np.bincount(a, minlength=cents.shape[0])
         over = np.nonzero(counts > bound)[0]
         if over.size == 0:
             break
         new_rows = []
         for c in over:
             pts = x[a == c]
-            sub, _, _ = kmeans(pts, 2, iters=4, seed=seed + 131 * rnd + int(c))
+            sub, _, _ = kmeans(pts, 2, iters=4, seed=seed + 131 * rnd + int(c),
+                               fused=fused)
             cents[c] = sub[0]
             if sub.shape[0] > 1:
                 new_rows.append(sub[1])
@@ -123,12 +169,14 @@ def enforce_size_bound(
     return cents
 
 
-def kmeans_sharded_step(mesh, x, cents, k: int):
+def kmeans_sharded_step(mesh, x, cents, k: int, fused: bool = True):
     """One distributed Lloyd iteration (stage-1 build cell for dry-runs).
 
-    x sharded over the data axes, centroids replicated; per-shard one-hot
-    partial sums + counts are psum'd so every shard ends with the same new
-    centroids.
+    x sharded over the data axes, centroids replicated; per-shard partial
+    sums + counts are psum'd so every shard ends with the same new centroids.
+    ``fused`` routes the per-shard pass through the fused assign/update tile
+    (Pallas kernel on TPU) so the (N_local, K) distance matrix stays in VMEM;
+    the unfused branch keeps the original inline one-hot as the reference.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -137,11 +185,14 @@ def kmeans_sharded_step(mesh, x, cents, k: int):
     data_axes = tuple(n for n in mesh.axis_names if n != "model")
 
     def step(xl, c):
-        d = squared_l2(xl, c)
-        a = jnp.argmin(d, axis=1)
-        oh = jax.nn.one_hot(a, c.shape[0], dtype=jnp.float32)
-        sums = oh.T @ xl
-        counts = jnp.sum(oh, axis=0)
+        if fused:
+            _, _, sums, counts = kops.kmeans_assign_update_tile(xl, c)
+        else:
+            d = squared_l2(xl, c)
+            a = jnp.argmin(d, axis=1)
+            oh = jax.nn.one_hot(a, c.shape[0], dtype=jnp.float32)
+            sums = oh.T @ xl
+            counts = jnp.sum(oh, axis=0)
         for ax in data_axes:
             sums = jax.lax.psum(sums, ax)
             counts = jax.lax.psum(counts, ax)

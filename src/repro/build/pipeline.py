@@ -1,18 +1,28 @@
 """3-stage construction pipeline with checkpoint/resume (paper §5, Fig. 21a).
 
 Stage 1 — coarse clustering: the corpus is split into ``coarse_per_task``
-chunks; each task runs balanced hierarchical k-means (accelerated E-step) and
-the per-task centroid sets are concatenated.  Stage 2 — closure multi-cluster
-assignment (SPANN RNG rule) per chunk, persisted one file per task under
-``workdir/shards`` so a preempted pool resumes at task granularity, then the
+chunks; each task runs balanced hierarchical k-means and the per-task
+centroid sets are concatenated.  With ``cfg.fused_assign`` (default) every
+Lloyd E+M step goes through the fused Pallas assign-and-accumulate kernel
+(kernels/kmeans_assign.py on TPU, its jnp oracle elsewhere): the (N, K)
+distance matrix never reaches HBM and the M-step is a device matmul, not a
+host scatter-add.  Stage 2 — closure multi-cluster assignment (SPANN RNG
+rule) per shard.  With ``cfg.stream_stage2`` (default) the shards run
+through the double-buffered :class:`repro.build.stream.ShardAssignPipeline`
+— shard i+1's host load + device stream overlaps shard i's in-flight device
+assign, each stage wall-clock stamped (``report.shard_stamps``) — then the
 fixed-size posting build.  Stage 3 — LLSP training from logged queries.
 
 Every stage checkpoints its output under ``workdir``; rebuilding with the
-same config resumes instead of recomputing (report.resumed_stages).
+same config resumes instead of recomputing (report.resumed_stages), at
+SHARD granularity inside stage 2: a build preempted mid-stage-2 resumes
+from the finished shard files and produces a bit-identical index
+(``index_content_hash`` — asserted by benchmarks/bench_construction.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import time
 from typing import Optional
@@ -26,6 +36,7 @@ from repro.core.spann_rules import closure_assign
 
 from .elastic import run_tasks
 from .kmeans import balanced_hierarchical_kmeans, enforce_size_bound
+from .stream import ShardAssignPipeline, shard_overlap_efficiency
 
 
 @dataclasses.dataclass
@@ -39,6 +50,13 @@ class BuildConfig:
     kmeans_iters: int = 8
     seed: int = 0
     llsp: Optional[LLSPConfig] = None
+    fused_assign: bool = True     # fused Pallas assign/update for every
+                                  # k-means E+M step; False = legacy A/B
+                                  # reference (materialized distances + host
+                                  # float64 scatter-add)
+    stream_stage2: bool = True    # double-buffered shard-assign pipeline
+                                  # with stage stamps; False = the opaque
+                                  # elastic thread-pool tasks
 
 
 @dataclasses.dataclass
@@ -47,10 +65,23 @@ class BuildReport:
     replication: float            # mean posting slots per corpus vector
     stage_seconds: dict
     resumed_stages: list
+    shard_stamps: list = dataclasses.field(default_factory=list)
+    shard_overlap: float = 0.0    # measured load-under-assign fraction
 
 
 def _chunks(n: int, per_task: int) -> list[tuple[int, int]]:
     return [(s, min(s + per_task, n)) for s in range(0, n, per_task)]
+
+
+def index_content_hash(index: IVFIndex) -> str:
+    """Deterministic content hash of the serving index (resume invariant)."""
+    h = hashlib.sha256()
+    for arr in (index.centroids, index.postings, index.posting_ids):
+        a = np.ascontiguousarray(np.asarray(arr))
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 def build_index(
@@ -81,7 +112,7 @@ def build_index(
             def task():
                 cents, _ = balanced_hierarchical_kmeans(
                     x[lo:hi], cfg.max_cluster_size, iters=cfg.kmeans_iters,
-                    seed=cfg.seed + 1000 * i)
+                    seed=cfg.seed + 1000 * i, fused=cfg.fused_assign)
                 return cents
             return task
 
@@ -93,19 +124,34 @@ def build_index(
         # build would truncate primary assignments (replication < 1)
         centroids = enforce_size_bound(
             x, centroids, min(cfg.max_cluster_size, cfg.cluster_len),
-            seed=cfg.seed)
+            seed=cfg.seed, fused=cfg.fused_assign)
         np.save(c_path, centroids)
     n_clusters = centroids.shape[0]
     stage_seconds["stage1"] = time.perf_counter() - t0
 
-    # ---- stage 2: closure assignment per chunk + posting build -----------
+    # ---- stage 2: closure assignment per shard + posting build -----------
     t0 = time.perf_counter()
-    cj = jnp.asarray(centroids)
     shard_paths = [os.path.join(shards_dir, f"assign_{i:05d}.npz")
                    for i in range(len(spans))]
+    shard_stamps: list = []
+    shard_overlap = 0.0
     if all(os.path.exists(p) for p in shard_paths):
         resumed.append("stage2")
+    elif cfg.stream_stage2:
+        pipe = ShardAssignPipeline(
+            x, centroids, spans, shard_paths,
+            eps=cfg.closure_eps, max_replicas=cfg.max_replicas)
+        try:
+            stamps = pipe.run()
+        finally:
+            pipe.close()
+        shard_overlap = shard_overlap_efficiency(stamps)
+        shard_stamps = [t.asdict() for t in stamps]
+        if any(t.resumed for t in stamps):
+            resumed.append("stage2:partial")
     else:
+        cj = jnp.asarray(centroids)
+
         def mk_stage2(i, lo, hi, path):
             def task():
                 if os.path.exists(path):     # task-granular resume
@@ -140,7 +186,9 @@ def build_index(
 
     replication = float((posting_ids >= 0).sum()) / max(n, 1)
     report = BuildReport(n_clusters=n_clusters, replication=replication,
-                         stage_seconds=stage_seconds, resumed_stages=resumed)
+                         stage_seconds=stage_seconds, resumed_stages=resumed,
+                         shard_stamps=shard_stamps,
+                         shard_overlap=shard_overlap)
     return index, llsp, report
 
 

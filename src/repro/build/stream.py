@@ -1,0 +1,196 @@
+"""Streaming stage-2 shard assignment — the construction-side overlap
+pipeline (the build analogue of runtime/pipeline.py's §4.1 stage protocol).
+
+Stage 2 of ``build_index`` walks the corpus chunk by chunk and runs closure
+multi-cluster assignment per chunk on device.  The pre-PR-3 path ran those
+chunks as opaque thread-pool tasks: every task serialized its host slice,
+its host->device stream, and its device assign.  This module re-expresses
+stage 2 through the PR 2 stage protocol so the phases pipeline instead:
+
+  ``load``     -> host materialization of the shard's vector slice +
+                  ``device_put``, on a dedicated worker thread (the build
+                  side's SQ/DMA engine);
+  ``dispatch`` -> launch the jitted closure assignment (JAX async dispatch —
+                  returns immediately, assign in flight);
+  ``harvest``  -> block on the assignment, checkpoint the shard atomically
+                  (``.npz`` via os.replace, same task-granular resume
+                  contract as before).
+
+``run`` double-buffers: shard i+1's load is submitted right after shard i's
+assign is dispatched, so the next shard's slice/stream hides under the
+in-flight device assign.  Every stage is wall-clock stamped
+(:class:`ShardStageTimes`, mirroring runtime.pipeline.StageTimes) and
+:func:`shard_overlap_efficiency` measures — not infers — how much of shard
+i+1's load interval lands inside shard i's assign-in-flight window.
+
+Resumability: a shard whose checkpoint already exists short-circuits the
+whole chain (stamped ``resumed=True``), so a preempted build resumes at
+shard granularity with a bit-identical final index (asserted by the
+construction bench via index hash).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.spann_rules import closure_assign
+
+
+@dataclasses.dataclass
+class ShardStageTimes:
+    """Wall-clock stamps of one shard through the stage-2 pipeline."""
+    shard: int
+    rows: int = 0                  # vectors in this shard
+    resumed: bool = False          # checkpoint hit: no load/assign ran
+    load_start: float = 0.0
+    load_end: float = 0.0          # host slice materialized
+    stream_end: float = 0.0        # shard on device (device_put done)
+    assign_dispatch: float = 0.0
+    assign_done: float = 0.0
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "max_replicas"))
+def _closure_assign_jit(xc, cents, eps: float, max_replicas: int):
+    return closure_assign(xc, cents, eps=eps, max_replicas=max_replicas)
+
+
+@dataclasses.dataclass
+class _Loaded:
+    shard: int
+    path: str
+    dev: Optional[jax.Array]
+    times: ShardStageTimes
+
+
+class ShardAssignPipeline:
+    """Double-buffered closure-assignment over corpus shards.
+
+    ``x`` is the host-resident corpus (the paper's blob-store chunk source);
+    ``spans``/``paths`` define each shard's slice and checkpoint file;
+    centroids are streamed to device once and stay resident (the in-DRAM
+    tier).  ``run`` returns the per-shard stage stamps; the assignments land
+    in the checkpoint files, which ``build_index`` concatenates exactly as
+    before — the pipeline changes the schedule, not the artifact.
+    """
+
+    def __init__(self, x: np.ndarray, centroids: np.ndarray,
+                 spans: list, paths: list, *,
+                 eps: float, max_replicas: int):
+        self.x = x
+        self.spans = list(spans)
+        self.paths = list(paths)
+        self.eps = float(eps)
+        self.max_replicas = int(max_replicas)
+        self._cents_dev = jnp.asarray(np.asarray(centroids, np.float32))
+        self._loader = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="shard-load")
+
+    def close(self) -> None:
+        """Release the loader thread (builds are episodic, unlike serving —
+        don't leak one worker per rebuild in a long-lived daemon)."""
+        self._loader.shutdown(wait=True)
+
+    # -- stages ------------------------------------------------------------
+    def _load(self, i: int) -> _Loaded:
+        lo, hi = self.spans[i]
+        path = self.paths[i]
+        t = ShardStageTimes(shard=i, rows=hi - lo)
+        if os.path.exists(path):           # task-granular resume
+            t.resumed = True
+            return _Loaded(i, path, None, t)
+        t.load_start = time.perf_counter()
+        host = np.ascontiguousarray(self.x[lo:hi])   # the host "chunk read"
+        t.load_end = time.perf_counter()
+        dev = jnp.asarray(host)                      # host->device stream
+        t.stream_end = time.perf_counter()
+        return _Loaded(i, path, dev, t)
+
+    def _dispatch(self, prep: _Loaded):
+        """Launch the closure assign (async — returns with assign in flight)."""
+        if prep.times.resumed:
+            return None
+        prep.times.assign_dispatch = time.perf_counter()
+        return _closure_assign_jit(prep.dev, self._cents_dev,
+                                   self.eps, self.max_replicas)
+
+    def _harvest(self, prep: _Loaded, infl) -> ShardStageTimes:
+        """Block on the assign, checkpoint the shard atomically."""
+        if prep.times.resumed:
+            return prep.times
+        a = np.asarray(infl)               # blocks until the assign lands
+        prep.times.assign_done = time.perf_counter()
+        tmp = prep.path + ".tmp.npz"       # .npz suffix: savez won't append
+        np.savez(tmp, assign=a)
+        os.replace(tmp, prep.path)
+        return prep.times
+
+    # -- driver ------------------------------------------------------------
+    def run(self) -> list[ShardStageTimes]:
+        """Pipelined pass over all shards: dispatch shard i, then submit
+        shard i+1's load before harvesting i — load i+1 hides under the
+        in-flight assign of i."""
+        n = len(self.spans)
+        if n == 0:
+            return []
+        stamps: list[ShardStageTimes] = []
+        prep = self._loader.submit(self._load, 0).result()
+        for i in range(n):
+            infl = self._dispatch(prep)
+            nxt = (self._loader.submit(self._load, i + 1)
+                   if i + 1 < n else None)
+            stamps.append(self._harvest(prep, infl))
+            if nxt is not None:
+                prep = nxt.result()
+        return stamps
+
+    def run_sequential(self) -> list[ShardStageTimes]:
+        """Strictly serial chain (the A/B baseline: host idle during assign,
+        device idle during load)."""
+        stamps = []
+        for i in range(len(self.spans)):
+            prep = self._load(i)
+            infl = self._dispatch(prep)
+            if infl is not None:
+                jax.block_until_ready(infl)
+            stamps.append(self._harvest(prep, infl))
+        return stamps
+
+
+def _get(t, name):
+    return t[name] if isinstance(t, dict) else getattr(t, name)
+
+
+def pair_overlaps(stamps: list) -> list[float]:
+    """Per consecutive live shard pair: seconds of shard i+1's load+stream
+    interval that land inside shard i's assign-in-flight window (can be
+    negative when the intervals are disjoint — the gap).  Accepts
+    ShardStageTimes or their asdict() form; the single definition the
+    efficiency metric, the bench, and the tests all share."""
+    live = [t for t in stamps if not _get(t, "resumed")]
+    return [
+        min(_get(cur, "stream_end"), _get(prev, "assign_done"))
+        - max(_get(cur, "load_start"), _get(prev, "assign_dispatch"))
+        for prev, cur in zip(live, live[1:])
+    ]
+
+
+def shard_overlap_efficiency(stamps: list) -> float:
+    """Fraction of load+stream seconds hidden under the previous shard's
+    assign-in-flight window (0 = fully serial, ~1 = fully hidden).  Resumed
+    shards contribute nothing (they never loaded)."""
+    live = [t for t in stamps if not _get(t, "resumed")]
+    tot = sum(max(0.0, _get(c, "stream_end") - _get(c, "load_start"))
+              for c in live[1:])
+    hidden = sum(max(0.0, o) for o in pair_overlaps(stamps))
+    return hidden / tot if tot > 0 else 0.0

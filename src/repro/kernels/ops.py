@@ -41,9 +41,65 @@ def kmeans_assign(x, centroids, *, chunk: int = 16384):
     return jnp.concatenate(outs_a), jnp.concatenate(outs_d)
 
 
+_ASSIGN_VMEM_FLOATS = 1 << 21   # ~8 MiB f32 working set (half of v5e VMEM,
+                                # leaving headroom for grid double-buffering)
+_ASSIGN_BN = 512                # point-block rows per grid step
+
+
+def kmeans_assign_update_tile(x, centroids):
+    """Single-tile fused assign+accumulate (jittable; kernel on TPU, jnp
+    oracle elsewhere).  Returns (assign, min_dist, sums, counts) — the
+    building block of kmeans_assign_update and kmeans_sharded_step.
+
+    The kernel's per-step VMEM working set is the whole (Kp, Dp) centroid
+    block PLUS the revisited (Kp, Dp) sums accumulator PLUS the (BN, Kp)
+    distance and one-hot tiles and the (BN, Dp) point block (K-chunking is
+    impossible without a second pass: the argmin must be global before
+    accumulation).  Shapes whose estimate exceeds the budget fall back to
+    the jnp oracle instead of failing Mosaic compilation."""
+    k, d = centroids.shape
+    kp = ((k + 127) // 128) * 128
+    dp = ((d + 127) // 128) * 128
+    need = 2 * kp * dp + 2 * _ASSIGN_BN * kp + _ASSIGN_BN * dp
+    if jax.default_backend() == "tpu" and need <= _ASSIGN_VMEM_FLOATS:
+        from . import kmeans_assign as _km
+        return _km.kmeans_assign_update(x, centroids, bn=_ASSIGN_BN,
+                                        interpret=False)
+    return _ref_assign_tile(x, centroids)
+
+
+def kmeans_assign_update(x, centroids, *, chunk: int = 16384):
+    """Fused Lloyd iteration: E-step argmin + M-step accumulation in one pass.
+
+    Returns (assign (N,), min_dist (N,), sums (K, D) f32, counts (K,) i32).
+    Chunked over N like kmeans_assign; per-centroid partial sums/counts from
+    each chunk are folded on device, so the (N, K) distance matrix AND the
+    host scatter-add both disappear — only (K, D) + (K,) + 2*(N,) cross HBM.
+    Per-chunk counts are exact small integers in f32 (chunk <= 2^24); the
+    cross-chunk fold is integer, so counts stay exact at any corpus size.
+    """
+    n = x.shape[0]
+    outs_a, outs_m = [], []
+    sums = None
+    counts = None
+    for s in range(0, n, chunk):
+        a, md, ps, pc = kmeans_assign_update_tile(x[s:s + chunk], centroids)
+        pc = jnp.round(pc).astype(jnp.int32)
+        outs_a.append(a)
+        outs_m.append(md)
+        sums = ps if sums is None else sums + ps
+        counts = pc if counts is None else counts + pc
+    return (jnp.concatenate(outs_a), jnp.concatenate(outs_m), sums, counts)
+
+
 @jax.jit
 def _ref_tile(a, b):
     return ref.pairwise_l2_ref(a, b)
+
+
+@jax.jit
+def _ref_assign_tile(x, centroids):
+    return ref.kmeans_assign_update_ref(x, centroids)
 
 
 def ivf_scan(postings, cids, mask, queries):

@@ -14,6 +14,44 @@ def pairwise_l2_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.maximum(a2 - 2.0 * (a @ b.T) + b2, 0.0)
 
 
+def assign_distances_f64(x, centroids, assign):
+    """Float64 point-to-assigned-centroid squared distances (numpy).
+
+    The shared core of every tie-tolerant parity check: when two assign
+    paths disagree on a point, both picks must realize ~the same minimum —
+    callers compare assign_distances_f64(..., a) against (..., b) under
+    their own tolerance."""
+    import numpy as np
+
+    xf = np.asarray(x, np.float64)
+    cf = np.asarray(centroids, np.float64)
+    return ((xf - cf[np.asarray(assign)]) ** 2).sum(-1)
+
+
+def kmeans_assign_update_ref(
+    x: jax.Array,          # (N, D)
+    centroids: jax.Array,  # (K, D)
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused assign-and-accumulate kernel.
+
+    Returns (assign (N,) i32, min_dist (N,) f32, sums (K, D) f32,
+    counts (K,) f32) — the exact output contract of
+    kernels.kmeans_assign.kmeans_assign_update.  Distances go through
+    pairwise_l2_ref, so the argmin is bit-identical to the unfused
+    ops.kmeans_assign path on the same backend.
+    """
+    d = pairwise_l2_ref(x, centroids)                    # (N, K)
+    a = jnp.argmin(d, axis=1).astype(jnp.int32)
+    md = jnp.min(d, axis=1)
+    oh = jax.nn.one_hot(a, centroids.shape[0], dtype=jnp.float32)
+    sums = jax.lax.dot_general(                          # (K, D)
+        oh, x.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    counts = jnp.sum(oh, axis=0)
+    return a, md, sums, counts
+
+
 def ivf_scan_ref(
     postings: jax.Array,   # (C, L, D)
     cids: jax.Array,       # (B, P) int32 (clamped valid)

@@ -92,11 +92,17 @@ def deploy(arena: ChunkArena, name: str, spec, workdir: str,
     meta.save(os.path.join(workdir, f"{name}.meta.json"))
     tier = TieredPostings(np.asarray(index.postings),
                           np.asarray(index.posting_ids))
+    # dup_bound auto-derives from the build's realized replication, so a
+    # rebuilt index with a different max_replicas can never outrun the
+    # oracle's pre-selection (the ROADMAP dup_bound=8 hazard)
     pipeline = PrefetchPipeline(index, llsp, scfg, tier=tier)
     _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
     print(f"[deploy] {name}: {index.n_clusters} clusters, "
           f"{len({e.device for e in extents})} devices, "
-          f"arena free {arena.free_bytes >> 20} MiB")
+          f"arena free {arena.free_bytes >> 20} MiB, "
+          f"build overlap {report.shard_overlap:.2f} "
+          f"({len(report.shard_stamps)} shards), "
+          f"dup_bound {pipeline.dup_bound}")
     return Deployment(name, index, llsp, spec, meta, striping, rmap,
                       pipeline, q, np.asarray(t10))
 

@@ -37,5 +37,6 @@ from .pipeline import (
     PrefetchPipeline,
     StageTimes,
     latency_percentiles,
+    max_id_replicas,
     overlap_efficiency,
 )

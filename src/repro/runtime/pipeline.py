@@ -99,6 +99,21 @@ class _Inflight:
     size: int
 
 
+def max_id_replicas(posting_ids) -> int:
+    """Largest number of posting slots any single id occupies — the build's
+    REALIZED closure replication (<= BuildConfig.max_replicas, but measured
+    from the artifact rather than trusted from config).  This is the exact
+    bound on how many duplicates of one id can precede the k2-th unique
+    candidate, so it is the safe ``dup_bound`` for the oracle's
+    pre-selection: a hardcoded bound below it silently drops candidates on
+    high-replication builds (the ROADMAP dup_bound=8 hazard)."""
+    ids = np.asarray(posting_ids).ravel()
+    ids = ids[ids >= 0]
+    if ids.size == 0:
+        return 1
+    return int(np.bincount(ids).max())
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _plan_jit(centroids, llsp_params, queries, topk, cfg: SearchConfig):
     d = squared_l2(queries, centroids)
@@ -109,7 +124,7 @@ def _plan_jit(centroids, llsp_params, queries, topk, cfg: SearchConfig):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "dup_bound"))
 def _scan_streamed_jit(packed, packed_ids, remap, pmask, queries,
-                       cfg: SearchConfig, dup_bound: int = 8):
+                       cfg: SearchConfig, *, dup_bound: int):
     """Candidate-compressed scan over the STREAMED (packed) posting rows.
 
     use_kernel: the fused Pallas kernel runs directly on the packed tensors
@@ -119,8 +134,10 @@ def _scan_streamed_jit(packed, packed_ids, remap, pmask, queries,
     this does no duplicate work), mask each query to its probed rows via a
     scatter of the remap table, and top-k in the packed domain.  ``dup_bound``
     caps how many closure replicas of one id can precede the k2-th unique
-    candidate (build-time max_replicas is 4; 8 = 2x headroom) so the dedup
-    runs on an O(k2·dup_bound) pre-selection, not on all R·L slots.
+    candidate, so the dedup runs on an O(k2·dup_bound) pre-selection, not on
+    all R·L slots.  It is REQUIRED (no default on purpose): the bound must
+    cover the build's realized replication or candidates are silently lost —
+    PrefetchPipeline derives it from the posting table (max_id_replicas).
     """
     k2 = cfg.n_cand or _auto_ncand(cfg.k)
     if cfg.use_kernel:
@@ -180,13 +197,21 @@ class PrefetchPipeline:
 
     def __init__(self, index, llsp_params, cfg: SearchConfig,
                  tier: Optional[TieredPostings] = None, *,
-                 pad_batch: int = 16, row_bucket: int = 256):
+                 pad_batch: int = 16, row_bucket: int = 256,
+                 dup_bound: Optional[int] = None):
         self.index = index
         self.llsp_params = llsp_params
         self.cfg = cfg
         self.tier = tier
         self.pad_batch = pad_batch
         self.row_bucket = row_bucket
+        if dup_bound is None:
+            # derive the oracle's duplicate pre-selection bound from the
+            # build's realized replication (dup_bound=8 hazard: a bound
+            # below max replicas drops candidates on max_replicas>8 builds)
+            pids = tier.posting_ids if tier is not None else index.posting_ids
+            dup_bound = max_id_replicas(pids)
+        self.dup_bound = max(int(dup_bound), 1)
         self._gatherer = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="prefetch")
 
@@ -249,10 +274,14 @@ class PrefetchPipeline:
         if self.streamed:
             packed, pids, remap = prep.fut.result()
             t.scan_dispatch = time.perf_counter()
-            scan = _scan_reference_jit if reference else _scan_streamed_jit
-            od, oi = scan(
-                packed, pids, remap, jnp.asarray(plan.pmask),
-                plan.queries_dev, self.cfg)
+            if reference:
+                od, oi = _scan_reference_jit(
+                    packed, pids, remap, jnp.asarray(plan.pmask),
+                    plan.queries_dev, self.cfg)
+            else:
+                od, oi = _scan_streamed_jit(
+                    packed, pids, remap, jnp.asarray(plan.pmask),
+                    plan.queries_dev, self.cfg, dup_bound=self.dup_bound)
         else:
             t.scan_dispatch = time.perf_counter()
             od, oi = _scan_resident_jit(
@@ -299,7 +328,8 @@ class PrefetchPipeline:
                     jnp.zeros((rows, l, d), jnp.float32),
                     jnp.full((rows, l), -1, jnp.int32),
                     jnp.zeros((bp, p), jnp.int32),
-                    jnp.zeros((bp, p), bool), qd, self.cfg)
+                    jnp.zeros((bp, p), bool), qd, self.cfg,
+                    dup_bound=self.dup_bound)
                 n += 1
         return n
 

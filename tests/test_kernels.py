@@ -57,6 +57,68 @@ def test_ivf_scan_clustermajor_sweep(c, l, d, b, a_n):
                                rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("n,d,k,bn", [(300, 32, 17, 64), (1000, 24, 33, 128),
+                                      (37, 130, 5, 8), (8, 8, 8, 512),
+                                      (257, 48, 129, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_update_sweep(n, d, k, bn, dtype):
+    """Fused assign/update kernel (interpret) vs the jnp oracle: exact
+    assignments and counts, tolerance on the float accumulations."""
+    from repro.kernels.kmeans_assign import kmeans_assign_update
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + d + k))
+    x = jax.random.normal(k1, (n, d), dtype)
+    c = jax.random.normal(k2, (k, d), dtype)
+    a, md, s, cnt = kmeans_assign_update(x, c, bn=bn, interpret=True)
+    ar, mr, sr, cr = ref.kmeans_assign_update_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ar))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cr))
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(md), np.asarray(mr),
+                               rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               rtol=tol, atol=tol * 10)
+    # the set reduction is closed: every point lands in exactly one centroid
+    assert float(np.asarray(cnt).sum()) == n
+    np.testing.assert_allclose(np.asarray(s).sum(0),
+                               np.asarray(x, np.float32).sum(0),
+                               rtol=tol * 10, atol=tol * 100)
+
+
+def test_kmeans_assign_update_accumulates_across_blocks():
+    """Multi-block grids must fold partial sums into the SAME revisited
+    VMEM block — catch any init/flush bug by making every block contribute
+    to every centroid."""
+    from repro.kernels.kmeans_assign import kmeans_assign_update
+
+    n, d, k = 64, 16, 4
+    rng = np.random.default_rng(0)
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    x = np.repeat(c, n // k, axis=0) + 1e-3 * rng.normal(
+        size=(n, d)).astype(np.float32)
+    order = rng.permutation(n)            # interleave: all blocks hit all k
+    x = x[order]
+    a, _, s, cnt = kmeans_assign_update(
+        jnp.asarray(x), jnp.asarray(c), bn=8, interpret=True)
+    assert np.asarray(cnt).tolist() == [n // k] * k
+    want = np.stack([x[np.asarray(a) == j].sum(0) for j in range(k)])
+    np.testing.assert_allclose(np.asarray(s), want, rtol=1e-5, atol=1e-5)
+
+
+def test_kmeans_assign_update_chunked_wrapper_matches_single():
+    """ops.kmeans_assign_update chunking over N is invisible in the result."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (500, 20))
+    c = jax.random.normal(k2, (13, 20))
+    a0, m0, s0, c0 = ops.kmeans_assign_update(x, c, chunk=10_000)
+    a1, m1, s1, c1 = ops.kmeans_assign_update(x, c, chunk=64)
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_allclose(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+
+
 def test_kmeans_assign_matches_argmin():
     k1, k2 = jax.random.split(jax.random.PRNGKey(7))
     x = jax.random.normal(k1, (300, 32))

@@ -1,0 +1,211 @@
+"""Property tests (PR 3 satellite): numpy-oracle parity + invariances for
+the two merge/assign primitives every engine path leans on.
+
+* ``merge_candidate_topk`` — checked against a slow per-row numpy dedup
+  oracle on random shapes/ids/masks, plus permutation invariance of the
+  candidate axis (the merge must not care how shards interleave candidates).
+* ``kmeans_assign_update_ref`` — the fused assign kernel's reference oracle,
+  checked against a pure-numpy Lloyd step on random shapes/dtypes, plus
+  permutation equivariance over points (sums/counts are a set reduction).
+
+Runs through tests/_hypothesis_compat.py, so the whole module skips cleanly
+when hypothesis isn't installed.  ``derandomize=True`` keeps the generated
+cases a pure function of the test code — no flaky CI from a fresh random
+seed finding a tie the assertions don't model.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+
+    COMMON = dict(
+        max_examples=25, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+else:  # the shim's settings() ignores kwargs; keep the call sites uniform
+    COMMON = {}
+
+
+# -------------------------------------------------------------------------
+# numpy oracles
+# -------------------------------------------------------------------------
+def _np_dedup_topk(dists, ids, k):
+    """Slow per-row reference: ascending unique-by-id top-k, (inf, -1) pad."""
+    b, _ = dists.shape
+    out_d = np.full((b, k), np.inf, np.float32)
+    out_i = np.full((b, k), -1, np.int64)
+    for r in range(b):
+        order = np.argsort(dists[r], kind="stable")
+        seen = set()
+        slot = 0
+        for j in order:
+            i = int(ids[r, j])
+            dv = float(dists[r, j])
+            if i < 0 or not np.isfinite(dv) or i in seen:
+                continue
+            seen.add(i)
+            out_d[r, slot] = dv
+            out_i[r, slot] = i
+            slot += 1
+            if slot == k:
+                break
+    return out_d, out_i
+
+
+def _np_assign_update(x, cents):
+    """Pure-numpy Lloyd E+M step in float64."""
+    x64 = x.astype(np.float64)
+    c64 = cents.astype(np.float64)
+    d = ((x64[:, None, :] - c64[None, :, :]) ** 2).sum(-1)   # (N, K)
+    a = np.argmin(d, axis=1)
+    md = d[np.arange(x.shape[0]), a]
+    k = cents.shape[0]
+    sums = np.zeros((k, x.shape[1]), np.float64)
+    np.add.at(sums, a, x64)
+    counts = np.bincount(a, minlength=k).astype(np.float64)
+    return a, md, sums, counts
+
+
+def _mk_candidates(seed, b, n, id_range, mask_frac):
+    """Random candidate rows with UNIQUE finite distances (tie-free, so the
+    oracle comparison is exact), random ids incl. duplicates and -1 pads,
+    and a masked (inf) fraction."""
+    rng = np.random.default_rng(seed)
+    base = rng.permutation(b * n).astype(np.float32)         # all distinct
+    dists = (base.reshape(b, n) + 1.0) * 0.125
+    ids = rng.integers(-1, id_range, size=(b, n)).astype(np.int32)
+    masked = rng.random((b, n)) < mask_frac
+    dists = np.where(masked, np.inf, dists).astype(np.float32)
+    return dists, ids
+
+
+# -------------------------------------------------------------------------
+# merge_candidate_topk
+# -------------------------------------------------------------------------
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 6),
+    n=st.integers(1, 40),
+    k=st.integers(1, 24),
+    id_range=st.integers(1, 30),
+    mask_frac=st.floats(0.0, 0.9),
+)
+def test_merge_candidate_topk_matches_numpy_oracle(seed, b, n, k, id_range,
+                                                   mask_frac):
+    from repro.core.distance import merge_candidate_topk
+
+    dists, ids = _mk_candidates(seed, b, n, id_range, mask_frac)
+    vd, vi = merge_candidate_topk(jnp.asarray(dists), jnp.asarray(ids), k)
+    wd, wi = _np_dedup_topk(dists, ids, k)
+    np.testing.assert_allclose(np.asarray(vd), wd, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(vi), wi)
+
+
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 5),
+    n=st.integers(2, 32),
+    k=st.integers(1, 16),
+    id_range=st.integers(1, 20),
+)
+def test_merge_candidate_topk_permutation_invariant(seed, b, n, k, id_range):
+    """Shuffling the candidate axis (how shards/probes interleave) must not
+    change the merged top-k — distances are unique, so exactly invariant."""
+    from repro.core.distance import merge_candidate_topk
+
+    dists, ids = _mk_candidates(seed, b, n, id_range, mask_frac=0.2)
+    perm = np.random.default_rng(seed ^ 0x5EED).permutation(n)
+    vd0, vi0 = merge_candidate_topk(jnp.asarray(dists), jnp.asarray(ids), k)
+    vd1, vi1 = merge_candidate_topk(jnp.asarray(dists[:, perm]),
+                                    jnp.asarray(ids[:, perm]), k)
+    np.testing.assert_array_equal(np.asarray(vi0), np.asarray(vi1))
+    np.testing.assert_allclose(np.asarray(vd0), np.asarray(vd1))
+
+
+# -------------------------------------------------------------------------
+# fused assign/update oracle
+# -------------------------------------------------------------------------
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 120),
+    d=st.integers(1, 48),
+    k=st.integers(1, 33),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_assign_oracle_matches_numpy(seed, n, d, k, dtype):
+    from repro.kernels.ref import kmeans_assign_update_ref
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    cents = rng.normal(size=(k, d)).astype(np.float32)
+    xj = jnp.asarray(x).astype(dtype)
+    cj = jnp.asarray(cents).astype(dtype)
+    a, md, sums, counts = kmeans_assign_update_ref(xj, cj)
+    a = np.asarray(a)
+    wa, wmd, wsums, wcounts = _np_assign_update(
+        np.asarray(xj, np.float32), np.asarray(cj, np.float32))
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    # argmin may legitimately differ only where two centroids are
+    # numerically tied for a point — both picks must then realize ~the min
+    np.testing.assert_allclose(np.asarray(md), wmd, rtol=tol, atol=tol * 10)
+    flip = a != wa
+    if flip.any():
+        from repro.kernels.ref import assign_distances_f64
+        gap = np.abs(wmd[flip] - assign_distances_f64(
+            np.asarray(xj, np.float32)[flip], np.asarray(cj, np.float32),
+            a[flip]))
+        assert (gap <= tol * 10 * (1.0 + np.abs(wmd[flip]))).all()
+    else:
+        np.testing.assert_allclose(np.asarray(sums), wsums,
+                                   rtol=tol, atol=tol * 10)
+        np.testing.assert_array_equal(
+            np.round(np.asarray(counts)).astype(np.int64),
+            wcounts.astype(np.int64))
+    assert float(np.asarray(counts).sum()) == n     # every point lands once
+
+
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 100),
+    d=st.integers(1, 32),
+    k=st.integers(1, 20),
+)
+def test_assign_oracle_permutation_equivariant(seed, n, d, k):
+    """Permuting the points permutes the assignments and leaves the set
+    reductions (sums, counts) unchanged — chunk/shard order can never change
+    a Lloyd step.  The gemm may re-block under a different row order
+    (ULP-level distance noise), so the checks are tie-tolerant: an argmin
+    flip is accepted only where the two picks realize ~the same min."""
+    from repro.kernels.ref import kmeans_assign_update_ref
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    cents = rng.normal(size=(k, d)).astype(np.float32)
+    perm = rng.permutation(n)
+    a0, md0, s0, c0 = kmeans_assign_update_ref(jnp.asarray(x),
+                                               jnp.asarray(cents))
+    a1, md1, s1, c1 = kmeans_assign_update_ref(jnp.asarray(x[perm]),
+                                               jnp.asarray(cents))
+    a0p = np.asarray(a0)[perm]
+    a1 = np.asarray(a1)
+    np.testing.assert_allclose(np.asarray(md0)[perm], np.asarray(md1),
+                               rtol=1e-5, atol=1e-5)
+    flip = a0p != a1
+    if flip.any():
+        # both picks must be numerically tied for those points
+        from repro.kernels.ref import assign_distances_f64
+        np.testing.assert_allclose(
+            assign_distances_f64(x[perm][flip], cents, a0p[flip]),
+            assign_distances_f64(x[perm][flip], cents, a1[flip]),
+            rtol=1e-4, atol=1e-4)
+    else:
+        np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                                   rtol=1e-4, atol=1e-4)

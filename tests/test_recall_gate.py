@@ -1,0 +1,62 @@
+"""Tier-1 recall regression gate (PR 3 satellite).
+
+One cached small-corpus build, served END TO END through ``serve_leveled``
+on the candidate-compressed fused path — the exact production route:
+GBDT level routing -> per-level compiled centroid scan + LLSP pruning ->
+fused-topk candidate scan -> merge.  The gate asserts recall@10 >= 0.96 so
+a future kernel / merge / planner edit cannot silently trade recall for
+speed: any such regression fails tier-1, not a nightly bench.
+
+The build is module-cached (one build per test session) and seeded, so the
+gate is deterministic.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.build.pipeline import BuildConfig, build_index
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.llsp import LLSPConfig
+from repro.core.search import SearchConfig, serve_leveled
+
+RECALL_FLOOR = 0.96
+
+
+@pytest.fixture(scope="module")
+def gate_build(tmp_path_factory, small_corpus):
+    x, q, topk = small_corpus
+    wd = str(tmp_path_factory.mktemp("recall_gate"))
+    cfg = BuildConfig(
+        max_cluster_size=48, cluster_len=64, coarse_per_task=1000,
+        n_workers=2,
+        llsp=LLSPConfig(levels=(8, 16, 32, 48), recall_target=0.97,
+                        n_ratio_features=8, n_trees=30, max_depth=4),
+    )
+    idx, llsp, report = build_index(x, cfg, wd, queries=q,
+                                    query_topk=np.minimum(topk, 20))
+    _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+    return idx, llsp, report, x, q, np.asarray(t10)
+
+
+def test_recall_gate_serve_leveled_fused(gate_build):
+    idx, llsp, _, x, q, true10 = gate_build
+    assert llsp is not None
+    cfg = SearchConfig(k=10, nprobe_max=48, pruning="llsp", n_ratio=8,
+                       use_kernel=False, fused_topk=True)
+    out = serve_leveled(idx, llsp, q, np.full((q.shape[0],), 10, np.int32),
+                        cfg, pad=32)
+    r = recall_at_k(out["ids"], true10)
+    assert r >= RECALL_FLOOR, (
+        f"recall@10={r:.4f} fell below the {RECALL_FLOOR} gate on the fused "
+        f"serve_leveled path (levels used: {np.bincount(out['levels']).tolist()})")
+
+
+def test_recall_gate_fused_build_is_searchable(gate_build):
+    # the gate corpus was built on the DEFAULT (fused_assign + streamed
+    # stage 2) pipeline — sanity-pin that and the replication contract
+    idx, _, report, x, q, _ = gate_build
+    assert report.n_clusters > 10
+    assert report.replication >= 1.0
+    assert 0.0 <= report.shard_overlap <= 1.0
+    assert len(report.shard_stamps) >= 2    # streamed stage 2 actually ran

@@ -139,6 +139,67 @@ def test_nprobe_cap_degrades(streamed_pipeline, queries):
 
 
 # -------------------------------------------------------------------------
+# dup_bound: oracle pre-selection must cover the build's realized replication
+# -------------------------------------------------------------------------
+def _high_replication_index(max_replicas=12, n=20, c=16, d=8, seed=3):
+    """Index built at max_replicas=12: every vector lands in its 12 nearest
+    clusters (eps wide open, RNG rule off), so every id has exactly 12
+    posting slots — the regime the hardcoded dup_bound=8 silently broke."""
+    import jax.numpy as jnp
+    from repro.core.ivf import IVFIndex, build_postings
+    from repro.core.spann_rules import closure_assign
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    cents = rng.normal(size=(c, d)).astype(np.float32)
+    ca = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                   eps=1e6, max_replicas=max_replicas,
+                                   rng_rule=False))
+    assert (ca >= 0).all()                  # replication saturated the cap
+    postings, pids = build_postings(x, ca, c, cluster_len=32)
+    return x, IVFIndex(jnp.asarray(cents), jnp.asarray(postings),
+                       jnp.asarray(pids))
+
+
+def test_dup_bound_derived_from_build_replication():
+    """Regression for the ROADMAP dup_bound=8 hazard: at max_replicas=12 the
+    oracle's pre-selection must widen to the realized replication, or the
+    k2 frontier fills with closure duplicates and real neighbors drop out."""
+    from repro.runtime import max_id_replicas
+
+    x, index = _high_replication_index()
+    assert max_id_replicas(index.posting_ids) == 12
+    rng = np.random.default_rng(7)
+    q = rng.normal(size=(8, x.shape[1])).astype(np.float32)
+    # n_cand=12 == replication: with dup_bound=8 the top-96 pre-selection is
+    # exactly the 8 nearest ids' slots -> only 8 uniques survive for k=10
+    cfg = SearchConfig(k=10, nprobe_max=16, pruning="none", n_cand=12,
+                       use_kernel=False, fused_topk=True)
+    outs = {}
+    for use_kernel in (False, True):
+        c = SearchConfig(**{**cfg.__dict__, "use_kernel": use_kernel})
+        tier = TieredPostings(np.asarray(index.postings),
+                              np.asarray(index.posting_ids))
+        pipe = PrefetchPipeline(index, None, c, tier=tier,
+                                pad_batch=8, row_bucket=32)
+        assert pipe.dup_bound == 12          # derived, not hardcoded
+        outs[use_kernel] = pipe.serve_batch(q, 10)
+    # oracle == kernel, and every query fills all k slots with real ids
+    np.testing.assert_array_equal(outs[False].ids, outs[True].ids)
+    np.testing.assert_allclose(outs[False].dists, outs[True].dists,
+                               rtol=1e-5, atol=1e-5)
+    assert (outs[False].ids >= 0).all()
+    # the pre-fix behavior is reproducible on demand: a forced dup_bound=8
+    # pipeline starves the frontier (candidates lost to duplicates)
+    tier = TieredPostings(np.asarray(index.postings),
+                          np.asarray(index.posting_ids))
+    stale = PrefetchPipeline(index, None, cfg, tier=tier,
+                             pad_batch=8, row_bucket=32, dup_bound=8)
+    out8 = stale.serve_batch(q, 10)
+    assert (out8.ids < 0).any(), "dup_bound=8 should starve k=10 here"
+
+
+# -------------------------------------------------------------------------
 # engine: ordering, shedding determinism, fairness
 # -------------------------------------------------------------------------
 def test_engine_per_index_fifo(small_index, queries):
