@@ -1,0 +1,345 @@
+"""Freshness bench — mixed search+update load with a LIVE delta rebuild
+(paper §6.2/§6.3: the index as a living object under traffic).
+
+One open-loop experiment, three claims, all counter-asserted:
+
+1. **Mixed load** — a seeded Poisson search stream and a seeded Poisson
+   insert/delete stream replay together against the lifecycle engine
+   (search lane + update lane on the same poller).  Reported: achieved
+   q/s AND update ops/s, plus insert-to-visible p50/p99 **from stamps**
+   (submit -> first harvested search batch whose captured snapshot covers
+   the op — measured by the lane, not inferred from queue depths).
+2. **Live delta rebuild + atomic swap** — the scheduler triggers on
+   delta-fill mid-trace, rebuilds stage 2 in delta mode on a background
+   thread while the engine serves, and swaps epochs atomically.  Recall@10
+   is probed through the engine BEFORE the rebuild, DURING it (engine
+   serving from the old epoch + delta), and AFTER the swap, each against
+   fresh brute-force ground truth over the then-live vector set; the swap
+   drops zero batches (engine completed == submitted - rejected, old epoch
+   finalized with its batch count intact).
+3. **Delta-mode I/O cut** — stage 2 streams only dirty/new shards
+   (content-hash manifest); the ShardAssignPipeline byte counter must show
+   >= 2x less streaming than the full restream of the same corpus.
+
+``--smoke`` runs the scaled-down copy with the assertions on — wired into
+CI next to the serving and construction smokes.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses as dc
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from common import emit, save_result
+
+from repro.build.kmeans import balanced_hierarchical_kmeans
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.search import SearchConfig
+from repro.data import PAPER_DATASETS, make_queries, make_vectors
+from repro.lifecycle import (
+    CorpusStore,
+    LiveFreshState,
+    RebuildPolicy,
+    RebuildScheduler,
+    UpdateLane,
+    VersionManager,
+    delta_build,
+)
+from repro.runtime import (
+    BatchPolicy,
+    DynamicBatcher,
+    PrefetchPipeline,
+    ServeEngine,
+    latency_percentiles,
+    merge_timelines,
+    poisson_trace,
+    update_trace,
+)
+from repro.storage import TieredPostings
+
+
+def live_truth(corpus: CorpusStore, state: LiveFreshState,
+               probe_q: np.ndarray, k: int = 10) -> np.ndarray:
+    """Brute-force ground truth over the CURRENT live set: corpus rows +
+    live delta rows, tombstones dropped, deduped by global id (during a
+    rebuild the folded delta prefix exists in both corpus and delta — same
+    id, same payload)."""
+    with state.lock:
+        n = corpus.n
+        tomb = state.tombstone_bits()
+        dvecs, dids = state.delta_rows(0, state.fill)
+    x = corpus.view()
+    live_main = np.nonzero(~tomb[:n])[0]
+    keep = ~tomb[dids] if len(dids) else np.zeros((0,), bool)
+    vecs = np.concatenate([x[live_main], dvecs[keep]])
+    ids = np.concatenate([live_main, dids[keep]]).astype(np.int64)
+    uniq, first = np.unique(ids, return_index=True)
+    vecs, ids = vecs[first], uniq
+    _, pos = brute_force_topk(jnp.asarray(vecs), jnp.asarray(probe_q), k)
+    return ids[np.asarray(pos)]
+
+
+def probe_recall(engine: ServeEngine, lane: UpdateLane, corpus, state,
+                 probe_q: np.ndarray, index: str, k: int = 10,
+                 timeout: float = 30.0) -> dict:
+    """Recall@k measured THROUGH the engine against truth over the live
+    set.  Waits for the update SQ to drain first so the truth snapshot and
+    the engine's published view agree."""
+    deadline = time.monotonic() + timeout
+    while lane.qp.sq_len() > 0 and time.monotonic() < deadline:
+        time.sleep(0.002)
+    t0 = time.monotonic()
+    true = live_truth(corpus, state, probe_q, k)
+    want = {}
+    for i in range(len(probe_q)):
+        rid = engine.submit(probe_q[i], k, index=index, block=True)
+        if rid >= 0:
+            want[rid] = i
+    got: dict[int, np.ndarray] = {}
+    others = []
+    while len(got) < len(want) and time.monotonic() < deadline:
+        for c in engine.qp.poll():
+            if c.req_id in want and c.ids is not None:
+                got[c.req_id] = c.ids
+            elif c.req_id in want:
+                want.pop(c.req_id)
+            else:
+                others.append(c)
+        time.sleep(0.005)
+    if not got:                            # engine dead / all probes lost —
+        return {                           # surface it as recall 0, not a
+            "recall": 0.0,                 # stack crash masking the cause
+            "n_probes": 0,
+            "window_s": time.monotonic() - t0,
+            "stray_completions": others,
+        }
+    rows = [want[r] for r in got]
+    ids = np.stack([got[r][:k] for r in got])
+    return {
+        "recall": float(recall_at_k(ids, true[rows])),
+        "n_probes": len(got),
+        "window_s": time.monotonic() - t0,
+        "stray_completions": others,       # fed back into latency stats
+    }
+
+
+def run(args) -> dict:
+    if args.smoke:
+        n, dim, n_modes = 4000, 24, 16
+        per_task, max_cluster, cluster_len = 800, 48, 64
+        nprobe, duration = 16, 4.0
+        search_qps, ins_ops, del_ops = 150.0, 30.0, 10.0
+        capacity, fill_frac = 1024, 0.15
+    else:
+        n, dim, n_modes = 20_000, 32, 32
+        per_task, max_cluster, cluster_len = 2500, 96, 128
+        nprobe, duration = 24, 10.0
+        search_qps, ins_ops, del_ops = 300.0, 60.0, 20.0
+        capacity, fill_frac = 4096, 0.15
+    ins_batch, del_batch = 4, 2
+    k = 10
+    name = "live"
+
+    spec = dc.replace(PAPER_DATASETS["sift"], n=n, dim=dim, n_modes=n_modes)
+    x = make_vectors(spec)
+    q, _ = make_queries(spec, 512)
+    probe_q = q[:48]
+    reserve = make_vectors(dc.replace(spec, seed=spec.seed + 9))
+
+    import tempfile
+    workdir = tempfile.mkdtemp(prefix="bench_freshness_")
+    cents, _ = balanced_hierarchical_kmeans(
+        x, max_cluster_size=max_cluster, iters=8, fused=True)
+    corpus = CorpusStore(x)
+    t0 = time.perf_counter()
+    index, cold_stats = delta_build(
+        corpus.view(), cents, workdir, cluster_len=cluster_len, eps=0.2,
+        max_replicas=4, per_task=per_task)
+    cold_s = time.perf_counter() - t0
+
+    cfg = SearchConfig(k=k, nprobe_max=nprobe, pruning="none",
+                       use_kernel=False, fused_topk=True)
+    state = LiveFreshState(dim=dim, capacity=capacity, n_main=corpus.n)
+    lane = UpdateLane(state)
+
+    def make_pipeline(idx, st):
+        tier = TieredPostings(np.asarray(idx.postings),
+                              np.asarray(idx.posting_ids))
+        p = PrefetchPipeline(idx, None, cfg, tier=tier,
+                             fresh_source=st.snapshot)
+        p.warmup(batch_sizes=(16, 32))
+        return p
+
+    pipe = make_pipeline(index, state)
+    vm = VersionManager()
+    vm.deploy(name, pipe, fresh=state)
+    policy = BatchPolicy(max_batch=32, max_wait_s=0.004, update_quantum=64)
+    batcher = DynamicBatcher(policy, [name])
+    engine = ServeEngine({name: pipe}, batcher, update_lanes={name: lane})
+    vm.bind(engine)
+    sched = RebuildScheduler(
+        name=name, corpus=corpus, centroids=cents, workdir=workdir,
+        lane=lane, versions=vm, make_pipeline=make_pipeline,
+        cluster_len=cluster_len, policy=RebuildPolicy(
+            delta_fill_frac=fill_frac, tombstone_frac=0.9,
+            min_interval_s=10 * duration, per_task=per_task))
+
+    searches = poisson_trace(search_qps, duration, seed=args.seed,
+                             index=name, topk=(k, k), n_queries=len(q))
+    updates = update_trace(ins_ops, del_ops, duration,
+                           seed=args.seed, index=name)
+    # insert batch sizing rides the op count
+    timeline = merge_timelines(searches, updates)
+
+    engine.start()
+    lat: list[float] = []
+    probes: dict[str, dict] = {}
+    next_reserve = 0
+    n_del = 0
+    rng = np.random.default_rng(args.seed + 1)
+    wall0 = time.monotonic()
+    before_at = 0.25 * duration
+    try:
+        for arr in timeline:
+            lag = wall0 + arr.t - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            if "before" not in probes and arr.t >= before_at:
+                # the pre-swap probe gates the scheduler start, so the
+                # before/during/after ordering is deterministic even when
+                # the fill threshold is crossed early
+                probes["before"] = probe_recall(engine, lane, corpus, state,
+                                                probe_q, name, k)
+                sched.start(poll_s=0.02)
+            if "during" not in probes and sched.rebuilding.is_set():
+                probes["during"] = probe_recall(engine, lane, corpus, state,
+                                                probe_q, name, k)
+            if hasattr(arr, "qrow"):                       # search arrival
+                engine.submit(q[arr.qrow], k, index=name,
+                              deadline_s=arr.deadline_s)
+            elif arr.op == "insert":
+                lo = next_reserve
+                next_reserve += ins_batch
+                if next_reserve <= len(reserve):
+                    lane.submit_insert(reserve[lo:next_reserve])
+            else:
+                dead = rng.integers(0, x.shape[0], size=del_batch)
+                lane.submit_delete(dead)
+                n_del += del_batch
+            lat += [c.latency for c in engine.qp.poll()
+                    if c.status != "shed"]
+        # let any in-flight rebuild land, then the post-swap probe
+        deadline = time.monotonic() + 60
+        while (sched.rebuilding.is_set() or not sched.reports) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        probes["after"] = probe_recall(engine, lane, corpus, state,
+                                       probe_q, name, k)
+    finally:
+        sched.stop()
+        engine.stop(drain=True)
+    wall = time.monotonic() - wall0
+    for pr in probes.values():
+        lat += [c.latency for c in pr.pop("stray_completions", [])
+                if c.status != "shed"]
+    lat += [c.latency for c in engine.qp.poll() if c.status != "shed"]
+
+    st = engine.stats
+    ls = lane.stats
+    vis = lane.visibility_stats()
+    reports = [dc.asdict(r) for r in sched.reports]
+    epochs = [dc.asdict(r) for r in vm.history]
+    result = {
+        "mode": "smoke" if args.smoke else "full",
+        "corpus": {"n0": n, "dim": dim, "clusters": int(index.n_clusters),
+                   "cluster_len": cluster_len, "capacity": capacity},
+        "config": {"k": k, "nprobe_max": nprobe,
+                   "search_qps": search_qps, "insert_ops_s": ins_ops,
+                   "delete_ops_s": del_ops, "insert_batch": ins_batch,
+                   "delete_batch": del_batch, "duration_s": duration},
+        "cold_build": {"seconds": cold_s,
+                       "bytes_streamed": cold_stats["bytes_streamed"]},
+        "mixed_load": {
+            "wall_s": wall,
+            "achieved_qps": (st.completed - st.shed) / wall,
+            "update_ops_s": (ls.applied_inserts + ls.applied_deletes) / wall,
+            "applied_inserts": ls.applied_inserts,
+            "applied_deletes": ls.applied_deletes,
+            "search_latency": latency_percentiles(lat),
+            "insert_to_visible": vis["insert_to_visible"],
+            "delete_to_visible": vis["delete_to_visible"],
+            "n_visible": vis["n_visible"],
+        },
+        "recall_across_swap": {ph: {kk: v for kk, v in pr.items()}
+                               for ph, pr in probes.items()},
+        "rebuilds": reports,
+        "epochs": epochs,
+        "dropped_batches": st.submitted - st.rejected - st.completed,
+        "engine": {"submitted": st.submitted, "completed": st.completed,
+                   "rejected": st.rejected, "shed": st.shed,
+                   "batches": st.batches},
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down CI run with assertions")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    result = run(args)
+    save_result("bench_freshness", result)
+
+    ml = result["mixed_load"]
+    rec = result["recall_across_swap"]
+    reps = result["rebuilds"]
+    emit("freshness_mixed_load", 1e6 / max(ml["achieved_qps"], 1e-9),
+         f"qps={ml['achieved_qps']:.0f} "
+         f"update_ops={ml['update_ops_s']:.0f}/s "
+         f"vis_p50={ml['insert_to_visible']['p50_ms']:.0f}ms "
+         f"vis_p99={ml['insert_to_visible']['p99_ms']:.0f}ms")
+    for ph in ("before", "during", "after"):
+        if ph in rec:
+            print(f"[freshness] recall@10 {ph:>6} swap: "
+                  f"{rec[ph]['recall']:.3f} ({rec[ph]['n_probes']} probes)")
+    for r in reps:
+        print(f"[freshness] rebuild({r['trigger']}): "
+              f"{r['shards_streamed']}/{r['shards_total']} shards streamed, "
+              f"{r['bytes_streamed']}/{r['full_stream_bytes']} bytes "
+              f"({r['full_stream_bytes'] / max(r['bytes_streamed'], 1):.1f}x "
+              f"cut), folded +{r['folded_inserts']}/-{r['folded_deletes']}, "
+              f"carried {r['carried_ops']} ops, "
+              f"build {r['t_built'] - r['t_snapshot']:.2f}s")
+
+    # acceptance gates (ISSUE 4): live swap, zero drops, recall held,
+    # measured visibility, counter-asserted I/O cut
+    assert len(reps) >= 1, "no rebuild triggered during the trace"
+    assert result["dropped_batches"] == 0, "engine dropped admitted requests"
+    assert all(r["bytes_streamed"] * 2 <= r["full_stream_bytes"]
+               for r in reps), "delta rebuild saved < 2x stage-2 bytes"
+    assert ml["n_visible"] > 0 and ml["insert_to_visible"]["p99_ms"] > 0, \
+        "no stamped visibility measurements"
+    finalized = [e for e in result["epochs"] if e["retired_at"] > 0]
+    assert all(e["finalized_at"] > 0 for e in finalized), \
+        "a retired epoch never finalized (in-flight batch leaked)"
+    for ph in ("before", "during", "after"):
+        assert ph in rec, f"missing {ph}-swap recall probe"
+        assert rec[ph]["recall"] >= 0.96, \
+            f"recall@10 {ph} swap = {rec[ph]['recall']:.3f} < 0.96"
+    print(f"[{'smoke' if args.smoke else 'full'}] freshness OK: "
+          f"recall held {rec['before']['recall']:.3f}/"
+          f"{rec['during']['recall']:.3f}/{rec['after']['recall']:.3f} "
+          f"across a live swap, io_cut="
+          f"{reps[0]['full_stream_bytes'] / max(reps[0]['bytes_streamed'], 1):.1f}x, "
+          f"0 dropped")
+
+
+if __name__ == "__main__":
+    main()

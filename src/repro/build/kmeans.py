@@ -21,6 +21,8 @@ fixed-size (the serving layout's contract).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -55,14 +57,38 @@ def kmeans_assign_step(
 
 def kmeans(
     x: np.ndarray, k: int, iters: int = 10, seed: int = 0,
-    fused: bool = False,
+    fused: bool = False, device_mstep: Optional[bool] = None,
 ) -> tuple[np.ndarray, np.ndarray, float]:
-    """Lloyd's algorithm. Returns (centroids (k, D), assign (N,), inertia)."""
+    """Lloyd's algorithm. Returns (centroids (k, D), assign (N,), inertia).
+
+    ``device_mstep`` (default: follows ``fused``) finishes each iteration
+    with the fused M-step kernel — division + empty-cluster reseed stay on
+    device (kernels/kmeans_mstep.py), so a whole Lloyd iteration runs without
+    a host round trip: assign/accumulate kernel -> top-k worst-served gather
+    -> M-step kernel, all async-dispatched.  ``device_mstep=False`` is the
+    host reference path the parity tests pin the kernel against.
+    """
     x = np.asarray(x, np.float32)
     n, d = x.shape
     k = max(1, min(int(k), n))
+    if device_mstep is None:
+        device_mstep = fused
     rng = np.random.default_rng(seed)
     cents = x[rng.choice(n, size=k, replace=False)].astype(np.float32).copy()
+    if fused and device_mstep:
+        xd = jnp.asarray(x)
+        cd = jnp.asarray(cents)
+        a = jnp.zeros((n,), jnp.int32)
+        md = jnp.zeros((n,), jnp.float32)
+        for _ in range(max(1, iters)):
+            a, md, sums, counts = kops.kmeans_assign_update(xd, cd)
+            # worst-served candidates for however many clusters come up
+            # empty (ties resolve by lowest index — top_k order, the
+            # canonical semantics kmeans_mstep documents)
+            _, worst = jax.lax.top_k(md, k)
+            cd = kops.kmeans_mstep(sums, counts, xd[worst])
+        return (np.asarray(cd), np.asarray(a, np.int32),
+                float(np.asarray(md).sum()))
     assign = np.zeros(n, np.int64)
     mind = np.zeros(n, np.float32)
     for _ in range(max(1, iters)):
@@ -70,7 +96,9 @@ def kmeans(
         nonz = counts > 0
         cents[nonz] = (sums[nonz] / counts[nonz, None]).astype(np.float32)
         if (~nonz).any():  # reseed empty clusters at the worst-served points
-            far = np.argsort(mind)[::-1][: int((~nonz).sum())]
+            # descending with lowest-index-first ties: the same order as the
+            # device path's jax.lax.top_k, so the two M-steps stay parity
+            far = np.argsort(-mind, kind="stable")[: int((~nonz).sum())]
             cents[~nonz] = x[far]
     return cents, assign.astype(np.int32), float(mind.sum())
 

@@ -49,6 +49,7 @@ class ShardStageTimes:
     """Wall-clock stamps of one shard through the stage-2 pipeline."""
     shard: int
     rows: int = 0                  # vectors in this shard
+    bytes: int = 0                 # host slice bytes loaded + streamed
     resumed: bool = False          # checkpoint hit: no load/assign ran
     load_start: float = 0.0
     load_end: float = 0.0          # host slice materialized
@@ -92,6 +93,9 @@ class ShardAssignPipeline:
         self.paths = list(paths)
         self.eps = float(eps)
         self.max_replicas = int(max_replicas)
+        self.bytes_streamed = 0        # host slice bytes actually loaded —
+                                       # the delta-rebuild I/O counter
+                                       # (resumed/reused shards add nothing)
         self._cents_dev = jnp.asarray(np.asarray(centroids, np.float32))
         self._loader = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="shard-load")
@@ -114,6 +118,8 @@ class ShardAssignPipeline:
         t.load_end = time.perf_counter()
         dev = jnp.asarray(host)                      # host->device stream
         t.stream_end = time.perf_counter()
+        t.bytes = int(host.nbytes)
+        self.bytes_streamed += t.bytes
         return _Loaded(i, path, dev, t)
 
     def _dispatch(self, prep: _Loaded):
@@ -194,3 +200,96 @@ def shard_overlap_efficiency(stamps: list) -> float:
               for c in live[1:])
     hidden = sum(max(0.0, o) for o in pair_overlaps(stamps))
     return hidden / tot if tot > 0 else 0.0
+
+
+# --------------------------------------------------------------------------
+# delta mode — content-addressed shard reuse (paper §6.3 freshness rebuilds)
+# --------------------------------------------------------------------------
+# A closure assignment is a pure function of (shard slice, centroids), so a
+# rebuild only needs to restream the shards whose inputs changed: appended
+# corpus rows land in new/trailing spans, everything untouched reuses its
+# checkpoint byte-for-byte.  The manifest records each shard's slice hash +
+# the centroid-set hash; ``plan_delta_shards`` diffs it against the current
+# corpus and returns what must stream vs what is reusable — with byte
+# counts, so the I/O cut is counter-asserted, not assumed.
+
+def array_content_hash(a: np.ndarray) -> str:
+    import hashlib
+
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def make_shard_manifest(x: np.ndarray, spans: list, centroids: np.ndarray
+                        ) -> dict:
+    """Manifest of a completed stage 2: per-shard slice hashes + the
+    centroid hash they were assigned against (JSON-serializable)."""
+    return {
+        "centroid_hash": array_content_hash(centroids),
+        "shards": [
+            {"lo": int(lo), "hi": int(hi),
+             "hash": array_content_hash(x[lo:hi])}
+            for lo, hi in spans
+        ],
+    }
+
+
+@dataclasses.dataclass
+class DeltaShardPlan:
+    dirty: list                    # shard indices that must stream + assign
+    reused: list                   # shard indices whose checkpoints hold
+    bytes_dirty: int               # slice bytes the delta build will stream
+    bytes_reused: int              # slice bytes reuse avoids streaming
+    manifest: dict                 # manifest of the NEW build (all shards)
+
+
+def plan_delta_shards(x: np.ndarray, spans: list, paths: list,
+                      centroids: np.ndarray,
+                      prev_manifest: Optional[dict],
+                      trust_manifest: bool = True) -> DeltaShardPlan:
+    """Diff the corpus against the previous build's manifest.
+
+    A shard is reusable iff its span matches the manifest entry, the
+    centroid set is unchanged, and its checkpoint file exists.  Stale
+    checkpoints of dirty shards are REMOVED so the assign pipeline's
+    resume short-circuit cannot serve outdated assignments.
+
+    ``trust_manifest`` (default): a span-stable shard carries its STORED
+    hash forward without re-reading the slice — correct under the
+    lifecycle contract that the corpus is append-only and rows never move
+    (CorpusStore), and essential at scale: re-hashing every reused shard
+    would read the whole corpus per rebuild, which is exactly the I/O the
+    delta build exists to avoid.  Pass False to force content
+    verification (e.g. a corpus whose rows CAN mutate in place)."""
+    cent_hash = array_content_hash(centroids)
+    cents_ok = (prev_manifest is not None and
+                prev_manifest.get("centroid_hash") == cent_hash)
+    prev_shards = (prev_manifest or {}).get("shards", [])
+    dirty, reused, shard_ents = [], [], []
+    bytes_dirty = bytes_reused = 0
+    for i, ((lo, hi), path) in enumerate(zip(spans, paths)):
+        nbytes = int(x[lo:hi].nbytes)
+        prev = prev_shards[i] if cents_ok and i < len(prev_shards) else None
+        span_ok = (prev is not None and prev["lo"] == lo and prev["hi"] == hi
+                   and os.path.exists(path))
+        if span_ok and not trust_manifest:
+            span_ok = prev["hash"] == array_content_hash(x[lo:hi])
+        if span_ok:
+            shard_ents.append(prev)    # stored hash carried forward
+            reused.append(i)
+            bytes_reused += nbytes
+        else:
+            if os.path.exists(path):
+                os.remove(path)        # stale: resume must not pick it up
+            shard_ents.append({"lo": int(lo), "hi": int(hi),
+                               "hash": array_content_hash(x[lo:hi])})
+            dirty.append(i)
+            bytes_dirty += nbytes
+    return DeltaShardPlan(dirty=dirty, reused=reused,
+                          bytes_dirty=bytes_dirty, bytes_reused=bytes_reused,
+                          manifest={"centroid_hash": cent_hash,
+                                    "shards": shard_ents})

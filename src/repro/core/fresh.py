@@ -19,14 +19,45 @@ lives outside jit like any serving system's.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .distance import dedup_topk, squared_l2, topk_smallest
+from .distance import merge_candidate_topk, squared_l2, topk_smallest
 from .ivf import IVFIndex, search_flat
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_fresh(
+    main_d: jax.Array,      # (B, >=k) main-path candidate distances
+    main_i: jax.Array,      # (B, >=k) main-path candidate ids
+    queries: jax.Array,     # (B, D)
+    delta_vecs: jax.Array,  # (capacity, D) delta buffer payload
+    delta_ids: jax.Array,   # (capacity,) int32, -1 = empty slot
+    tombstone: jax.Array,   # (id_capacity,) bool
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """THE freshness merge (§6.2): main candidates + delta brute force,
+    tombstones filtered at the merge.  Single definition shared by
+    ``FreshIndex.search``, the serve_leveled merged path, and the serving
+    pipeline's delta-aware harvest — the three consumers cannot drift.
+
+    Over-fetches k from the delta side so tombstoned results cannot starve
+    the merge; ids outside the tombstone bitmap are clipped (guard, not a
+    path — every live id fits the epoch's id_capacity by construction)."""
+    d_delta = squared_l2(queries, delta_vecs)               # (B, cap)
+    live_slot = delta_ids >= 0
+    d_delta = jnp.where(live_slot[None, :], d_delta, jnp.inf)
+    dd, pos = topk_smallest(d_delta, min(k, delta_vecs.shape[0]))
+    di = delta_ids[pos]
+    alld = jnp.concatenate([main_d, dd], axis=1)
+    alli = jnp.concatenate([main_i, di], axis=1)
+    dead = tombstone[jnp.clip(alli, 0, tombstone.shape[0] - 1)] | (alli < 0)
+    alld = jnp.where(dead, jnp.inf, alld)
+    return merge_candidate_topk(alld, alli, k)
 
 
 @dataclasses.dataclass
@@ -78,16 +109,25 @@ class FreshIndex:
         Returns (dists (B,k), ids (B,k)).  Over-fetches k from each side so
         tombstoned results cannot starve the merge."""
         d_main, i_main = search_flat(self.main, queries, k, nprobe)
-        d_delta = squared_l2(queries, self.delta_vecs)          # (B, cap)
-        live_slot = self.delta_ids >= 0
-        d_delta = jnp.where(live_slot[None, :], d_delta, jnp.inf)
-        dd, pos = topk_smallest(d_delta, min(k, self.capacity))
-        di = self.delta_ids[pos]
-        alld = jnp.concatenate([d_main, dd], axis=1)
-        alli = jnp.concatenate([i_main, di], axis=1)
-        dead = self.tombstone[jnp.maximum(alli, 0)] | (alli < 0)
-        alld = jnp.where(dead, jnp.inf, alld)
-        return dedup_topk(alld, alli, k)
+        return merge_fresh(d_main, i_main, queries,
+                           self.delta_vecs, self.delta_ids, self.tombstone, k)
+
+    def search_leveled(self, llsp_params, queries, k: int, cfg, pad: int = 64):
+        """The production merged path: main candidates through
+        ``serve_leveled`` (GBDT routing + per-level compiled fused-topk
+        scan), then the same freshness merge as :meth:`search` — delta
+        results folded in, tombstoned main AND delta ids filtered at the
+        merge.  Returns (dists (B, k), ids (B, k)) numpy arrays."""
+        from .search import serve_leveled
+
+        out = serve_leveled(self.main, llsp_params, queries,
+                            np.full((len(queries),), k, np.int32), cfg,
+                            pad=pad)
+        d, i = merge_fresh(
+            jnp.asarray(out["dists"]), jnp.asarray(out["ids"]),
+            jnp.asarray(np.asarray(queries, np.float32)),
+            self.delta_vecs, self.delta_ids, self.tombstone, k)
+        return np.asarray(d), np.asarray(i)
 
     # -- rebuild (fold delta + drop tombstones, atomically swap) -------------
     def fold_corpus(self, x_main: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

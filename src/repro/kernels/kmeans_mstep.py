@@ -1,0 +1,102 @@
+"""Fused Lloyd M-step: centroid division + empty-cluster reseed, in-kernel.
+
+The assign-and-accumulate kernel (kernels/kmeans_assign.py) already keeps the
+(N, K) distance matrix in VMEM and emits per-centroid sums + counts — but the
+pre-PR-4 ``kmeans`` loop still pulled those to HOST to finish the iteration:
+a numpy division for the means and an argsort-based reseed of empty clusters.
+That readback forces a device->host->device round trip per Lloyd iteration
+and serializes the loop on the host.
+
+This kernel folds the remainder of the iteration on device:
+
+    new_cents[k] = sums[k] / counts[k]                     counts[k] > 0
+                 = reseed[rank(k)]                         counts[k] == 0
+
+where ``reseed`` holds the worst-served points (largest min-dist, the same
+rule as the host path) and ``rank(k)`` is k's position among the empty
+clusters — the e-th empty cluster takes the e-th worst-served point.
+
+Everything stays lane-oriented so no transposes hit Mosaic:
+
+* counts arrive as a (Kp, 1) column;
+* the exclusive count of preceding empties is a strict-lower-triangular
+  (Kp, Kp) x (Kp, 1) matmul (MXU, not a scan);
+* the reseed gather is a one-hot selection matmul sel @ reseed, exactly like
+  the assign kernel's one-hot M-step fold.
+
+Padding contract: padded K rows have count 0 but are masked out of ``empty``
+(they consume no reseed ranks and are sliced off); padded D columns are zero
+through the division and the selection matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(s_ref, cnt_ref, r_ref, o_ref, *, n_cents: int):
+    s = s_ref[...]                                      # (Kp, Dp) f32 sums
+    cnt = cnt_ref[...]                                  # (Kp, 1) f32 counts
+    r = r_ref[...]                                      # (Kp, Dp) f32 reseeds
+    kp = s.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (kp, 1), 0)
+    empty = (cnt <= 0.0) & (row < n_cents)              # (Kp, 1)
+    e = empty.astype(jnp.float32)
+    i = jax.lax.broadcasted_iota(jnp.int32, (kp, kp), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (kp, kp), 1)
+    ltri = (j < i).astype(jnp.float32)                  # ltri[k, j] = [j < k]
+    rank = jax.lax.dot_general(                         # (Kp, 1) — MXU, not a
+        ltri, e, (((1,), (0,)), ((), ())),              # sequential scan
+        preferred_element_type=jnp.float32,
+    )
+    sel = ((j == rank.astype(jnp.int32)) & empty).astype(jnp.float32)
+    reseeded = jax.lax.dot_general(                     # (Kp, Dp) one-hot gather
+        sel, r, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    mean = s / jnp.maximum(cnt, 1.0)
+    o_ref[...] = jnp.where(empty, reseeded, mean)
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kmeans_mstep(
+    sums: jax.Array,       # (K, D) f32 per-centroid sums
+    counts: jax.Array,     # (K,) f32/i32 per-centroid counts
+    reseed: jax.Array,     # (K, D) f32 reseed candidates, worst-served first
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Finish one Lloyd iteration on device; returns new centroids (K, D).
+
+    ``reseed`` must hold >= (number of empty clusters) rows ordered by
+    descending min-dist; passing the top-K worst-served points (one gather of
+    ``x[jax.lax.top_k(min_dist, K).indices]``) always satisfies that bound.
+    Ties in min-dist resolve by lowest point index (jax.lax.top_k order) —
+    the canonical semantics the host reference is tested against.
+    """
+    k, d = sums.shape
+    kp = _ceil_mult(k, 128)
+    dp = _ceil_mult(d, 128)
+    sp = jnp.pad(sums.astype(jnp.float32), ((0, kp - k), (0, dp - d)))
+    cp = jnp.pad(counts.astype(jnp.float32).reshape(k, 1), ((0, kp - k), (0, 0)))
+    rp = jnp.pad(reseed.astype(jnp.float32), ((0, kp - k), (0, dp - d)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_cents=k),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((kp, dp), lambda i: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i: (0, 0)),
+            pl.BlockSpec((kp, dp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((kp, dp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+        interpret=interpret,
+    )(sp, cp, rp)
+    return out[:k, :d]

@@ -92,6 +92,30 @@ def kmeans_assign_update(x, centroids, *, chunk: int = 16384):
     return (jnp.concatenate(outs_a), jnp.concatenate(outs_m), sums, counts)
 
 
+def kmeans_mstep(sums, counts, reseed):
+    """Fused M-step finisher: new centroids from (sums, counts) with empty
+    clusters reseeded at the worst-served points (kernel on TPU, jnp oracle
+    elsewhere — the same routing rule as kmeans_assign_update_tile).
+
+    The kernel's working set is three (Kp, Dp) blocks plus the (Kp, Kp)
+    rank/selection tiles; shapes whose estimate exceeds the VMEM budget fall
+    back to the oracle instead of failing Mosaic compilation.
+    """
+    k, d = sums.shape
+    kp = ((k + 127) // 128) * 128
+    dp = ((d + 127) // 128) * 128
+    need = 3 * kp * dp + 2 * kp * kp
+    if jax.default_backend() == "tpu" and need <= _ASSIGN_VMEM_FLOATS:
+        from . import kmeans_mstep as _km_mstep
+        return _km_mstep.kmeans_mstep(sums, counts, reseed, interpret=False)
+    return _ref_mstep_tile(sums, counts, reseed)
+
+
+@jax.jit
+def _ref_mstep_tile(sums, counts, reseed):
+    return ref.kmeans_mstep_ref(sums, counts, reseed)
+
+
 @jax.jit
 def _ref_tile(a, b):
     return ref.pairwise_l2_ref(a, b)

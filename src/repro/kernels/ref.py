@@ -52,6 +52,24 @@ def kmeans_assign_update_ref(
     return a, md, sums, counts
 
 
+def kmeans_mstep_ref(
+    sums: jax.Array,       # (K, D) f32
+    counts: jax.Array,     # (K,)
+    reseed: jax.Array,     # (K, D) worst-served points, descending min-dist
+) -> jax.Array:
+    """Oracle for the fused M-step kernel: division + empty-cluster reseed.
+
+    Empty cluster k takes reseed[rank(k)] where rank(k) counts the empty
+    clusters before k (the e-th empty cluster gets the e-th worst-served
+    point — the host reseed rule of build/kmeans.kmeans).
+    """
+    counts = counts.astype(jnp.float32)
+    empty = counts <= 0.0
+    rank = jnp.cumsum(empty.astype(jnp.int32)) - empty.astype(jnp.int32)
+    mean = sums.astype(jnp.float32) / jnp.maximum(counts, 1.0)[:, None]
+    return jnp.where(empty[:, None], reseed.astype(jnp.float32)[rank], mean)
+
+
 def ivf_scan_ref(
     postings: jax.Array,   # (C, L, D)
     cids: jax.Array,       # (B, P) int32 (clamped valid)

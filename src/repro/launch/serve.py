@@ -43,6 +43,7 @@ from repro.core.llsp import LLSPConfig
 from repro.core.search import SearchConfig
 from repro.data import PAPER_DATASETS, make_queries, make_vectors
 from repro.distributed import HeartbeatMonitor, plan_failover
+from repro.lifecycle import VersionManager
 from repro.runtime import (
     BatchPolicy,
     DynamicBatcher,
@@ -182,6 +183,14 @@ def main() -> None:
         batcher = DynamicBatcher(policy, names)
         engine = ServeEngine({n: d.pipeline for n, d in deps.items()},
                              batcher)
+        # epoch-tagged versions (lifecycle runtime): every batch routes to
+        # the current epoch at formation and carries it to harvest, so the
+        # mid-run rebuild below swaps atomically — in-flight batches finish
+        # on the old epoch, which retires only after its last harvest
+        vm = VersionManager()
+        for name in names:
+            vm.deploy(name, deps[name].pipeline)
+        vm.bind(engine)
         # compile off-clock: the batcher can release any partial size up to
         # max_batch, and the pipeline pads each to its own pad_batch
         # multiple — warm exactly that padded-shape set
@@ -256,11 +265,21 @@ def main() -> None:
                                os.path.join(root, f"{name_r}_r1"),
                                n_shards, scfg)
                 fresh.pipeline.warmup(batch_sizes=warm_sizes)
-                engine.swap_pipeline(name_r, fresh.pipeline)
-                undeploy(arena, old)
+                old_ep, new_ep = vm.swap(name_r, fresh.pipeline)
+                # reclaim the old extents ONLY after the old epoch's last
+                # in-flight batch harvests — freeing early is exactly the
+                # use-after-free the epoch protocol exists to prevent
+                retired = old_ep.finalized.wait(timeout=30.0)
+                if retired:
+                    undeploy(arena, old)
+                else:
+                    print(f"[swap] WARNING: epoch {old_ep.eid} still has "
+                          f"{old_ep.inflight} batch(es) in flight; leaking "
+                          f"its extents instead of freeing under a live scan")
                 deps[name_r] = fresh
-                print(f"[swap] {name_r} rebuilt and swapped in "
-                      f"(engine kept serving)")
+                print(f"[swap] {name_r} epoch {old_ep.eid} -> {new_ep.eid}: "
+                      f"{old_ep.record.batches} batches finished on the old "
+                      f"epoch, retired={retired} (engine kept serving)")
 
         for name, dep in deps.items():
             r = probe_recall(engine, dep, lat, name)

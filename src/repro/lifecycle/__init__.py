@@ -1,0 +1,42 @@
+"""Index lifecycle runtime — the index as a *living* object under traffic.
+
+The paper's deployment (§6.2–§6.3) serves from a periodically-rebuilt main
+index plus an in-memory delta and a tombstone bitmap.  This package wires
+that contract into the PR 2 serving runtime:
+
+=====================  ====================================================
+paper §6.2/§6.3 piece  lifecycle module
+=====================  ====================================================
+update stream beside   :mod:`repro.lifecycle.ingest` — a second bounded
+search traffic         SQ/CQ queue pair drained between search batches
+                       (budgeted, so storms can't starve search), applied
+                       to the live delta/tombstone state, with *measured*
+                       insert-to-visible stamps
+periodic delta-folding :mod:`repro.lifecycle.rebuild` — threshold-triggered
+rebuilds               background rebuilds that restream only changed/new
+                       shards (content-hash manifest) and fold tombstones
+                       at the posting build
+atomic version swap    :mod:`repro.lifecycle.version` — epoch-tagged index
+                       versions; in-flight batches finish on the old epoch,
+                       which retires (and frees its posting tier) when its
+                       last batch harvests
+=====================  ====================================================
+"""
+from .ingest import (
+    FreshSnapshot,
+    LiveFreshState,
+    UpdateCompletion,
+    UpdateLane,
+    UpdateLaneStats,
+    UpdateRequest,
+)
+from .rebuild import (
+    CorpusStore,
+    RebuildPolicy,
+    RebuildReport,
+    RebuildScheduler,
+    delta_build,
+    load_manifest,
+    save_manifest,
+)
+from .version import Epoch, EpochRecord, VersionManager

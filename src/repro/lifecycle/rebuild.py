@@ -1,0 +1,385 @@
+"""Delta-aware rebuild scheduler — the background half of the lifecycle
+runtime (paper §6.3: periodic rebuilds fold the delta + drop tombstones,
+*while serving*).
+
+The paper's billion-scale "(re)build within hours" claim only pays off when
+a rebuild (a) runs concurrently with traffic and (b) redoes only what
+changed.  Both live here:
+
+* :class:`CorpusStore` — the append-only global-id row store (row index ==
+  vector id).  Inserts land in the delta buffer first and are appended at
+  rebuild-snapshot time, so corpus rows never move: posting ids stay valid
+  across every rebuild and clients' ids survive swaps.  Deletes never
+  compact rows (that would shift every later shard's content); they are
+  masked out of the posting build instead, and a ``full`` rebuild remains
+  the compaction point — exactly the paper's delta/main split.
+* :func:`delta_build` — stage 2 through ``build/stream.ShardAssignPipeline``
+  in **delta mode**: ``plan_delta_shards`` diffs the corpus against the
+  previous build's content-hash manifest, only dirty/new shards stream +
+  assign, untouched shards reuse their checkpoints byte-for-byte.  The
+  pipeline's byte counter and the plan's reuse counter together prove the
+  I/O cut (the bench asserts the ratio, it does not infer it).
+* :class:`RebuildScheduler` — watches the live freshness state
+  (delta-fill / tombstone-ratio thresholds), runs the delta build on a
+  background thread, and performs the atomic swap: snapshot the delta under
+  the lane's lock, build, then (again under the lock) carry the ops that
+  arrived *during* the build into the new epoch's state and swap epochs via
+  the :class:`~repro.lifecycle.version.VersionManager` — in-flight batches
+  finish on the old epoch, zero batches dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.build.stream import (
+    ShardAssignPipeline, array_content_hash, plan_delta_shards,
+)
+from repro.core.ivf import IVFIndex, build_postings
+
+from .ingest import LiveFreshState, UpdateLane
+
+
+@dataclasses.dataclass(frozen=True)
+class RebuildPolicy:
+    delta_fill_frac: float = 0.5       # trigger: delta buffer this full
+    tombstone_frac: float = 0.25       # trigger: this share of ids dead
+    min_interval_s: float = 0.0        # rebuild rate limit
+    per_task: int = 5000               # stage-2 shard rows (span quantum)
+    capacity: Optional[int] = None     # next epoch's delta capacity
+                                       # (None = keep current)
+
+
+@dataclasses.dataclass
+class RebuildReport:
+    trigger: str
+    mode: str                          # "delta" | "full"
+    eid_old: int = -1
+    eid_new: int = -1
+    n_corpus: int = 0
+    n_clusters: int = 0
+    folded_inserts: int = 0
+    folded_deletes: int = 0
+    shards_total: int = 0
+    shards_streamed: int = 0
+    shards_reused: int = 0
+    bytes_streamed: int = 0            # stage-2 slice bytes actually moved
+    bytes_reused: int = 0              # slice bytes checkpoint reuse avoided
+    full_stream_bytes: int = 0         # what a full restream would move
+    t_snapshot: float = 0.0
+    t_built: float = 0.0
+    t_swapped: float = 0.0
+    carried_ops: int = 0               # delta rows applied during the build
+
+    @property
+    def io_cut_x(self) -> float:
+        return self.full_stream_bytes / max(self.bytes_streamed, 1)
+
+
+class CorpusStore:
+    """Append-only host corpus with stable global row ids.
+
+    Growth is amortized (capacity doubling); ``view()`` is a zero-copy
+    window of the live rows, safe to hand to the shard pipeline."""
+
+    def __init__(self, x0: np.ndarray):
+        x0 = np.ascontiguousarray(x0, dtype=np.float32)
+        self._n = x0.shape[0]
+        self._buf = x0
+        self.dim = x0.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    def view(self) -> np.ndarray:
+        return self._buf[: self._n]
+
+    def append(self, vecs: np.ndarray) -> tuple[int, int]:
+        vecs = np.asarray(vecs, np.float32).reshape(-1, self.dim)
+        lo = self._n
+        hi = lo + vecs.shape[0]
+        if hi > self._buf.shape[0]:
+            cap = max(hi, 2 * self._buf.shape[0])
+            grown = np.empty((cap, self.dim), np.float32)
+            grown[: self._n] = self._buf[: self._n]
+            self._buf = grown
+        self._buf[lo:hi] = vecs
+        self._n = hi
+        return lo, hi
+
+
+def _chunks(n: int, per_task: int) -> list[tuple[int, int]]:
+    return [(s, min(s + per_task, n)) for s in range(0, n, per_task)]
+
+
+def _manifest_path(workdir: str) -> str:
+    return os.path.join(workdir, "shard_manifest.json")
+
+
+def load_manifest(workdir: str) -> Optional[dict]:
+    p = _manifest_path(workdir)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def save_manifest(workdir: str, manifest: dict) -> None:
+    p = _manifest_path(workdir)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, p)
+
+
+def delta_build(
+    x: np.ndarray,
+    centroids: np.ndarray,
+    workdir: str,
+    *,
+    cluster_len: int,
+    eps: float,
+    max_replicas: int,
+    per_task: int = 5000,
+    tombstone: Optional[np.ndarray] = None,
+    use_manifest: bool = True,
+) -> tuple[IVFIndex, dict]:
+    """Stage 2 + posting build with content-hash shard reuse.
+
+    Returns (index, stats).  ``use_manifest=False`` forces a full restream
+    (the A/B baseline for the I/O-cut counters).  Tombstoned rows are
+    masked out of the posting build — the fold that drops deletes — but the
+    corpus keeps its rows so shard hashes stay stable.
+    """
+    os.makedirs(workdir, exist_ok=True)
+    shards_dir = os.path.join(workdir, "shards")
+    os.makedirs(shards_dir, exist_ok=True)
+    n = x.shape[0]
+    spans = _chunks(n, per_task)
+    paths = [os.path.join(shards_dir, f"assign_{i:05d}.npz")
+             for i in range(len(spans))]
+    prev = load_manifest(workdir) if use_manifest else None
+    plan = plan_delta_shards(x, spans, paths, centroids, prev)
+    pipe = ShardAssignPipeline(
+        x, centroids, [spans[i] for i in plan.dirty],
+        [paths[i] for i in plan.dirty],
+        eps=eps, max_replicas=max_replicas)
+    try:
+        stamps = pipe.run()
+    finally:
+        pipe.close()
+    assign = np.concatenate([np.load(p)["assign"] for p in paths], axis=0) \
+        if paths else np.zeros((0, max_replicas), np.int32)
+    folded_deletes = 0
+    if tombstone is not None:
+        dead = np.asarray(tombstone[:n], bool)
+        folded_deletes = int(dead.sum())
+        assign[dead] = -1              # the fold: tombstones leave postings
+    n_clusters = centroids.shape[0]
+    postings, posting_ids = build_postings(x, assign, n_clusters, cluster_len)
+    index = IVFIndex(jnp.asarray(np.asarray(centroids, np.float32)),
+                     jnp.asarray(postings), jnp.asarray(posting_ids))
+    save_manifest(workdir, plan.manifest)
+    stats = {
+        "shards_total": len(spans),
+        "shards_streamed": len(plan.dirty),
+        "shards_reused": len(plan.reused),
+        "bytes_streamed": int(pipe.bytes_streamed),
+        "bytes_reused": int(plan.bytes_reused),
+        "full_stream_bytes": int(x[:n].nbytes),
+        "folded_deletes": folded_deletes,
+        "shard_stamps": [t.asdict() for t in stamps],
+    }
+    return index, stats
+
+
+class RebuildScheduler:
+    """Threshold-triggered live rebuild + atomic epoch swap.
+
+    ``make_pipeline(index, fresh_state)`` builds (and warms) the serving
+    pipeline for a freshly built index — the deployment-specific part
+    (tier construction, SearchConfig, warmup shapes) stays with the
+    caller.  The scheduler owns *when* to rebuild, the snapshot/carry
+    protocol, and the swap ordering.
+    """
+
+    def __init__(
+        self,
+        *,
+        name: str,
+        corpus: CorpusStore,
+        centroids: np.ndarray,
+        workdir: str,
+        lane: UpdateLane,
+        versions,
+        make_pipeline: Callable,
+        cluster_len: int,
+        closure_eps: float = 0.2,
+        max_replicas: int = 4,
+        policy: RebuildPolicy = RebuildPolicy(),
+        clock=time.monotonic,
+    ):
+        self.name = name
+        self.corpus = corpus
+        self.centroids = np.asarray(centroids, np.float32)
+        self.workdir = workdir
+        self.lane = lane
+        self.versions = versions
+        self.make_pipeline = make_pipeline
+        self.cluster_len = int(cluster_len)
+        self.closure_eps = float(closure_eps)
+        self.max_replicas = int(max_replicas)
+        self.policy = policy
+        self.clock = clock
+        self.reports: list[RebuildReport] = []
+        self.failures: list[str] = []
+        self.rebuilding = threading.Event()
+        self._last_rebuild = -1e30
+        self._seen_rejected = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- trigger -----------------------------------------------------------
+    def due(self, now: Optional[float] = None) -> Optional[str]:
+        """Rebuild trigger reason, or None."""
+        now = self.clock() if now is None else now
+        if self.rebuilding.is_set():
+            return None
+        if now - self._last_rebuild < self.policy.min_interval_s:
+            return None
+        st = self.lane.state
+        if st.fill_frac >= self.policy.delta_fill_frac:
+            return "delta_fill"
+        if st.tombstone_frac >= self.policy.tombstone_frac:
+            return "tombstones"
+        if self.lane.stats.rejected_full > self._seen_rejected:
+            return "insert_rejected"
+        return None
+
+    # -- the rebuild + swap flow ------------------------------------------
+    def rebuild_and_swap(self, trigger: str = "manual",
+                         mode: str = "delta") -> RebuildReport:
+        """Fold the delta, rebuild stage 2 (delta mode), swap epochs.
+
+        Runs on the caller's thread (the background poller uses
+        ``start``).  The engine keeps serving throughout: only the two
+        snapshot/carry critical sections take the lane's state lock, and
+        the swap itself is the VersionManager's atomic publish."""
+        rep = RebuildReport(trigger=trigger, mode=mode)
+        self.rebuilding.set()
+        try:
+            return self._rebuild(rep)
+        finally:
+            self.rebuilding.clear()
+            self._last_rebuild = self.clock()
+            self._seen_rejected = self.lane.stats.rejected_full
+
+    def _rebuild(self, rep: RebuildReport) -> RebuildReport:
+        st = self.lane.state
+        # -- snapshot: fold the delta prefix into the corpus ---------------
+        with st.lock:
+            f0 = st.fill
+            vecs0, ids0 = st.delta_rows(0, f0)
+            tomb0 = st.tombstone_bits()
+            rep.t_snapshot = self.clock()
+        if f0:
+            # global-id invariant: delta ids were minted sequentially from
+            # corpus.n, so folding the prefix in order lands each vector at
+            # the row its id already names.  Idempotent against a prior
+            # FAILED rebuild attempt that already appended part (or all) of
+            # this prefix — fold only the rows the corpus doesn't have yet.
+            already = self.corpus.n - int(ids0[0])
+            if not 0 <= already <= f0:
+                raise RuntimeError(
+                    f"delta ids out of step with corpus rows "
+                    f"(corpus n={self.corpus.n}, delta ids "
+                    f"[{ids0[0]}, {ids0[-1]}])")
+            if already < f0:
+                self.corpus.append(vecs0[already:])
+            assert self.corpus.n == int(ids0[-1]) + 1
+        rep.folded_inserts = int(f0)
+        x = self.corpus.view()
+        index, bstats = delta_build(
+            x, self.centroids, self.workdir,
+            cluster_len=self.cluster_len, eps=self.closure_eps,
+            max_replicas=self.max_replicas, per_task=self.policy.per_task,
+            tombstone=tomb0, use_manifest=(rep.mode == "delta"))
+        rep.n_corpus = int(x.shape[0])
+        rep.n_clusters = int(index.n_clusters)
+        rep.folded_deletes = bstats["folded_deletes"]
+        for key in ("shards_total", "shards_streamed", "shards_reused",
+                    "bytes_streamed", "bytes_reused", "full_stream_bytes"):
+            setattr(rep, key, bstats[key])
+        rep.t_built = self.clock()
+
+        # -- next epoch's freshness state ----------------------------------
+        capacity = self.policy.capacity or st.capacity
+        new_state = LiveFreshState(
+            dim=self.corpus.dim, capacity=capacity, n_main=self.corpus.n,
+            next_id=None, seq0=st.seq)     # seq stays globally monotonic
+        pipeline = self.make_pipeline(index, new_state)
+
+        # -- atomic swap: carry the ops applied during the build -----------
+        with st.lock:
+            f1 = st.fill
+            carry_v, carry_i = st.delta_rows(f0, f1)
+            new_state.adopt(carry_v, carry_i, st.tombstone_bits())
+            # next_id continuity: ids minted during the build stay minted
+            new_state.next_id = st.next_id
+            # seq continuity must be re-synced HERE, not at construction:
+            # the old state kept publishing during the (slow) build, and a
+            # new epoch re-issuing already-used seqs would corrupt the
+            # visibility stamps (ops marked visible by batches whose
+            # snapshot never contained them)
+            new_state.seq = st.seq
+            new_state.publish()
+            self.lane.retarget(new_state)
+            old_ep, new_ep = self.versions.swap(self.name, pipeline,
+                                               fresh=new_state)
+        rep.carried_ops = int(f1 - f0)
+        rep.eid_old, rep.eid_new = old_ep.eid, new_ep.eid
+        rep.t_swapped = self.clock()
+        self.reports.append(rep)
+        return rep
+
+    # -- background poller -------------------------------------------------
+    def start(self, poll_s: float = 0.05) -> None:
+        assert self._thread is None, "scheduler already started"
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                reason = self.due()
+                if reason is not None:
+                    try:
+                        self.rebuild_and_swap(trigger=reason)
+                    except Exception as e:   # noqa: BLE001 — daemon must
+                        # survive a failed attempt: the fold is idempotent
+                        # (partial appends are detected and skipped on
+                        # retry) and a retry re-snapshots a LARGER prefix,
+                        # so e.g. a capacity overrun self-heals; dying here
+                        # would silently stop all future rebuilds while the
+                        # delta fills and inserts start bouncing
+                        self.failures.append(repr(e))
+                        print(f"[rebuild-sched] attempt failed, will retry: "
+                              f"{e!r}")
+                self._stop.wait(poll_s)
+
+        self._thread = threading.Thread(target=loop, name="rebuild-sched",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

@@ -28,9 +28,12 @@ from .engine import (
 from .loadgen import (
     Arrival,
     TenantSpec,
+    UpdateArrival,
     bursty_trace,
+    merge_timelines,
     multi_tenant_trace,
     poisson_trace,
+    update_trace,
 )
 from .pipeline import (
     BatchResult,

@@ -49,6 +49,11 @@ class BatchPolicy:
     overhead_s: float = 1e-3       # fixed per-batch cost (dispatch + merge)
     init_query_s: float = 1e-4     # prior per-query service estimate
     ewma: float = 0.3              # service-estimate smoothing
+    update_quantum: int = 64       # max update-lane ops the poller applies
+                                   # between search batches — bounds how much
+                                   # an update storm can delay the next
+                                   # micro-batch (storms back-pressure their
+                                   # own SQ instead of starving search)
 
 
 @dataclasses.dataclass

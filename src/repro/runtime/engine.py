@@ -149,7 +149,7 @@ class ServeEngine:
     """
 
     def __init__(self, pipelines: dict, batcher, qp: Optional[QueuePair] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, update_lanes: Optional[dict] = None):
         self.pipelines = dict(pipelines)
         self.batcher = batcher
         self.qp = qp or QueuePair()
@@ -160,6 +160,11 @@ class ServeEngine:
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._drain_on_stop = True
+        # index lifecycle hooks (repro.lifecycle): the update lane(s) the
+        # poller pumps between search batches, and the version manager that
+        # routes batches to epochs (set by VersionManager.bind)
+        self.update_lanes: dict = dict(update_lanes or {})
+        self.versions = None
 
     # -- client side -------------------------------------------------------
     def submit(self, query: np.ndarray, topk: int, index: Optional[str] = None,
@@ -191,9 +196,24 @@ class ServeEngine:
             self.pipelines[name] = pipeline
             self.batcher.add_index(name)
 
+    def add_update_lane(self, name: str, lane) -> None:
+        """Attach an update lane (lifecycle/ingest.py) for ``name``: the
+        poller drains it between search batches, update_quantum at a time."""
+        self.update_lanes = {**self.update_lanes, name: lane}
+
     def _pipeline(self, name: str):
         with self._swap_lock:
             return self.pipelines[name]
+
+    def _pump_updates(self, now: float, drain: bool = False) -> int:
+        """Apply a bounded quantum of pending update ops per lane (the
+        interleave point: called between search batches, never inside one).
+        ``drain=True`` flushes everything (shutdown path)."""
+        budget = 0 if drain else self.batcher.policy.update_quantum
+        n = 0
+        for lane in self.update_lanes.values():
+            n += lane.pump(now, budget)
+        return n
 
     # -- poller ------------------------------------------------------------
     def _drain_sq(self, now: float) -> None:
@@ -207,7 +227,7 @@ class ServeEngine:
             self.stats.completed += len(sheds)
             self.qp.complete(sheds)
 
-    def _complete_batch(self, mb, result, done: float) -> None:
+    def _complete_batch(self, mb, result, done: float, epoch=None) -> None:
         comps = []
         for i, req in enumerate(mb.requests):
             status = "degraded" if mb.degraded[i] else "ok"
@@ -220,6 +240,14 @@ class ServeEngine:
         self.stats.degraded += int(mb.degraded.sum())
         self.stats.completed += len(comps)
         self.stats.batches += 1
+        if epoch is not None:
+            self.versions.harvested(epoch)
+        if result.fresh_seq >= 0:
+            lane = self.update_lanes.get(mb.index)
+            if lane is not None:
+                # visibility stamp: every update op covered by this batch's
+                # snapshot now has a search response that could contain it
+                lane.mark_visible(result.fresh_seq, done)
         # marginal batch cost = its own stage durations, NOT wall span from
         # plan_start (in the pipelined steady state that span also covers
         # the previous batch's in-flight scan and would inflate the EWMA
@@ -232,7 +260,11 @@ class ServeEngine:
 
     def _form_and_plan(self, now: float, force: bool = False):
         """Form the next micro-batch and run its plan stage (device idle
-        here by construction — before the current batch's scan dispatch)."""
+        here by construction — before the current batch's scan dispatch).
+
+        Epoch routing happens HERE: the batch takes an in-flight reference
+        on the current epoch and carries it to harvest, so a concurrent
+        swap cannot re-route (or early-retire) a batch mid-flight."""
         mb, sheds = self.batcher.form(now, force=force)
         if sheds:
             self.stats.shed += len(sheds)
@@ -240,11 +272,14 @@ class ServeEngine:
             self.qp.complete(sheds)
         if mb is None:
             return None
-        pipe = self._pipeline(mb.index)
+        epoch = None
+        if self.versions is not None:
+            epoch = self.versions.route(mb.index)
+        pipe = epoch.pipeline if epoch is not None else self._pipeline(mb.index)
         queries = np.stack([r.query for r in mb.requests])
         topk = np.asarray([r.topk for r in mb.requests], np.int32)
         plan = pipe.plan(queries, topk, nprobe_cap=mb.nprobe_cap)
-        return mb, pipe, plan
+        return mb, pipe, plan, epoch
 
     def step(self, now: Optional[float] = None, force: bool = True) -> int:
         """Synchronous single-batch step (tests / virtual clock): drain the
@@ -253,11 +288,14 @@ class ServeEngine:
         now = self.clock() if now is None else now
         before = self.stats.completed
         self._drain_sq(now)
+        self._pump_updates(now)
         planned = self._form_and_plan(now, force=force)
         if planned is not None:
-            mb, pipe, plan = planned
+            mb, pipe, plan, epoch = planned
             result = pipe.harvest(pipe.dispatch(pipe.prefetch(plan)))
-            self._complete_batch(mb, result, self.clock() if now is None else now)
+            self._complete_batch(mb, result,
+                                 self.clock() if now is None else now,
+                                 epoch=epoch)
         return self.stats.completed - before
 
     def _serve_loop(self) -> None:
@@ -269,46 +307,50 @@ class ServeEngine:
         backend's in-order execution stream — this ordering is what makes
         the host gather actually land inside the scan-in-flight window.
         """
-        prep = None                    # (mb, pipe, prefetch-handle)
+        prep = None                    # (mb, pipe, prefetch-handle, epoch)
         while not self._stop.is_set():
             now = self.clock()
             self._drain_sq(now)
+            # update interleave point: BETWEEN batches, a bounded quantum —
+            # an update storm back-pressures its own SQ, search cadence holds
+            self._pump_updates(now)
             if prep is None:
                 planned = self._form_and_plan(now)
                 if planned is None:
                     self.qp.wait_submissions(
                         timeout=self.batcher.policy.max_wait_s)
                     continue
-                mb, pipe, plan = planned
-                prep = (mb, pipe, pipe.prefetch(plan))
+                mb, pipe, plan, epoch = planned
+                prep = (mb, pipe, pipe.prefetch(plan), epoch)
                 continue               # give the SQ one more drain pass
             # commit the prepared batch: plan the NEXT batch first (device
             # idle), dispatch scan, then gather the next batch under it.
             nxt = self._form_and_plan(now)
-            mb, pipe, h = prep
+            mb, pipe, h, epoch = prep
             infl = pipe.dispatch(h)
             prep = None
             if nxt is not None:
-                mb2, pipe2, plan2 = nxt
-                prep = (mb2, pipe2, pipe2.prefetch(plan2))
+                mb2, pipe2, plan2, epoch2 = nxt
+                prep = (mb2, pipe2, pipe2.prefetch(plan2), epoch2)
             result = pipe.harvest(infl)
-            self._complete_batch(mb, result, self.clock())
+            self._complete_batch(mb, result, self.clock(), epoch=epoch)
         # drain: finish anything still prepared or pending
         if prep is not None:
-            mb, pipe, h = prep
+            mb, pipe, h, epoch = prep
             result = pipe.harvest(pipe.dispatch(h))
-            self._complete_batch(mb, result, self.clock())
+            self._complete_batch(mb, result, self.clock(), epoch=epoch)
         while self._drain_on_stop:
             now = self.clock()
             self._drain_sq(now)
+            self._pump_updates(now, drain=True)
             planned = self._form_and_plan(now, force=True)
             if planned is None:
                 if self.batcher.pending() > 0:
                     continue          # a fully-shed batch is not "drained"
                 break
-            mb, pipe, plan = planned
+            mb, pipe, plan, epoch = planned
             result = pipe.harvest(pipe.dispatch(pipe.prefetch(plan)))
-            self._complete_batch(mb, result, self.clock())
+            self._complete_batch(mb, result, self.clock(), epoch=epoch)
 
     def start(self) -> None:
         assert self._thread is None, "engine already started"

@@ -119,6 +119,50 @@ def bursty_trace(
     return _draw_arrivals(rng, spec, duration_s, rate_fn)
 
 
+@dataclasses.dataclass(frozen=True)
+class UpdateArrival:
+    """One update-lane arrival (lifecycle ingest): an insert of ``n`` new
+    vectors or a delete of ``n`` live ids, at trace time ``t``."""
+    t: float
+    op: str                        # "insert" | "delete"
+    n: int = 1
+    index: str = "default"
+
+
+def update_trace(
+    insert_ops_s: float,
+    delete_ops_s: float,
+    duration_s: float,
+    seed: int = 0,
+    index: str = "default",
+    batch: int = 1,
+) -> list[UpdateArrival]:
+    """Open-loop update stream: independent Poisson insert/delete processes,
+    time-merged.  ``batch`` vectors/ids ride each op (the client-side
+    batching real ingest pipelines do).  Seeded per-op-type so changing one
+    rate does not perturb the other stream's arrivals."""
+    streams = []
+    for i, (op, rate) in enumerate((("insert", insert_ops_s),
+                                    ("delete", delete_ops_s))):
+        if rate <= 0:
+            continue
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 7, i]))
+        out, t = [], 0.0
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= duration_s:
+                break
+            out.append(UpdateArrival(t=float(t), op=op, n=batch, index=index))
+        streams.append(out)
+    return list(heapq.merge(*streams, key=lambda a: a.t))
+
+
+def merge_timelines(*traces):
+    """Time-merge heterogeneous arrival lists (search + update) into one
+    replayable stream — every element keeps its own type, sorted by .t."""
+    return list(heapq.merge(*traces, key=lambda a: a.t))
+
+
 def multi_tenant_trace(
     tenants: Sequence[TenantSpec],
     duration_s: float,

@@ -73,6 +73,8 @@ class BatchResult:
     dists: np.ndarray              # (b, k) float32
     nprobe: np.ndarray             # (b,) int32
     times: StageTimes
+    fresh_seq: int = -1            # freshness snapshot this batch scanned
+                                   # against (-1 = no fresh view attached)
 
 
 @dataclasses.dataclass
@@ -97,6 +99,7 @@ class _Inflight:
     nprobe: np.ndarray
     times: StageTimes
     size: int
+    fresh_seq: int = -1
 
 
 def max_id_replicas(posting_ids) -> int:
@@ -198,13 +201,23 @@ class PrefetchPipeline:
     def __init__(self, index, llsp_params, cfg: SearchConfig,
                  tier: Optional[TieredPostings] = None, *,
                  pad_batch: int = 16, row_bucket: int = 256,
-                 dup_bound: Optional[int] = None):
+                 dup_bound: Optional[int] = None,
+                 fresh_source=None):
         self.index = index
         self.llsp_params = llsp_params
         self.cfg = cfg
         self.tier = tier
         self.pad_batch = pad_batch
         self.row_bucket = row_bucket
+        # freshness hook (lifecycle/ingest.py): a zero-arg callable returning
+        # the current FreshSnapshot.  When set, dispatch captures one
+        # snapshot per batch and chains the §6.2 delta+tombstone merge onto
+        # the in-flight scan — delta brute force folded in, tombstoned main
+        # AND delta ids filtered, all before readback.  The scan stage then
+        # OVER-FETCHES (k -> n_cand-wide main candidates) so tombstoned
+        # slots cannot starve the final top-k — the paper's §6.2 compensation
+        # for serving under a growing tombstone set.
+        self.fresh_source = fresh_source
         if dup_bound is None:
             # derive the oracle's duplicate pre-selection bound from the
             # build's realized replication (dup_bound=8 hazard: a bound
@@ -214,6 +227,18 @@ class PrefetchPipeline:
         self.dup_bound = max(int(dup_bound), 1)
         self._gatherer = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="prefetch")
+
+    @property
+    def _scan_cfg(self) -> SearchConfig:
+        """Scan-stage config: with a fresh view attached the main scan keeps
+        n_cand-wide candidates (instead of k) so the post-scan tombstone
+        filter cannot starve the final merge."""
+        if self.fresh_source is None:
+            return self.cfg
+        k2 = self.cfg.n_cand or _auto_ncand(self.cfg.k)
+        # pin n_cand too: otherwise the scan derives a fresh auto width
+        # from the widened k (~2x wider in-kernel top-k + a redundant merge)
+        return dataclasses.replace(self.cfg, k=k2, n_cand=k2)
 
     @property
     def streamed(self) -> bool:
@@ -268,7 +293,12 @@ class PrefetchPipeline:
         return _Prep(plan, self._gatherer.submit(self._gather, plan))
 
     def dispatch(self, prep: _Prep, *, reference: bool = False) -> _Inflight:
-        """Join the gather, launch the scan (async — returns immediately)."""
+        """Join the gather, launch the scan (async — returns immediately).
+
+        With a ``fresh_source`` attached, the §6.2 freshness merge is
+        chained onto the scan on device: the snapshot is captured HERE (at
+        dispatch), so the batch's visibility point is exactly the state a
+        concurrent updater had published when the scan launched."""
         plan = prep.plan
         t = plan.times
         if self.streamed:
@@ -277,17 +307,28 @@ class PrefetchPipeline:
             if reference:
                 od, oi = _scan_reference_jit(
                     packed, pids, remap, jnp.asarray(plan.pmask),
-                    plan.queries_dev, self.cfg)
+                    plan.queries_dev, self._scan_cfg)
             else:
                 od, oi = _scan_streamed_jit(
                     packed, pids, remap, jnp.asarray(plan.pmask),
-                    plan.queries_dev, self.cfg, dup_bound=self.dup_bound)
+                    plan.queries_dev, self._scan_cfg,
+                    dup_bound=self.dup_bound)
         else:
             t.scan_dispatch = time.perf_counter()
             od, oi = _scan_resident_jit(
                 self.index, plan.queries_dev, jnp.asarray(plan.cids),
-                jnp.asarray(plan.pmask), self.cfg)
-        return _Inflight(od, oi, plan.nprobe, t, t.size)
+                jnp.asarray(plan.pmask), self._scan_cfg)
+        seq = -1
+        if self.fresh_source is not None:
+            snap = self.fresh_source()
+            if snap is not None:
+                from repro.core.fresh import merge_fresh
+
+                od, oi = merge_fresh(
+                    od, oi, plan.queries_dev, snap.delta_vecs,
+                    snap.delta_ids, snap.tombstone, self.cfg.k)
+                seq = snap.seq
+        return _Inflight(od, oi, plan.nprobe, t, t.size, fresh_seq=seq)
 
     def harvest(self, infl: _Inflight) -> BatchResult:
         """Block on the scan outputs; truncate batch padding."""
@@ -295,7 +336,7 @@ class PrefetchPipeline:
         dists = np.asarray(infl.out_d)[: infl.size]
         infl.times.scan_done = time.perf_counter()
         return BatchResult(ids, dists, infl.nprobe[: infl.size].copy(),
-                           infl.times)
+                           infl.times, fresh_seq=infl.fresh_seq)
 
     def warmup(self, batch_sizes=(16, 32), max_rows: Optional[int] = None
                ) -> int:
@@ -310,7 +351,7 @@ class PrefetchPipeline:
                 bp = -(-b // self.pad_batch) * self.pad_batch
                 self.serve_batch(np.zeros((bp, self.index.dim), np.float32),
                                  10)
-            return len(batch_sizes)
+            return len(batch_sizes) + self._warm_fresh(batch_sizes)
         c = self.tier.postings.shape[0]
         l, d = self.tier.postings.shape[1], self.tier.postings.shape[2]
         max_rows = max_rows or c + 1
@@ -328,9 +369,31 @@ class PrefetchPipeline:
                     jnp.zeros((rows, l, d), jnp.float32),
                     jnp.full((rows, l), -1, jnp.int32),
                     jnp.zeros((bp, p), jnp.int32),
-                    jnp.zeros((bp, p), bool), qd, self.cfg,
+                    jnp.zeros((bp, p), bool), qd, self._scan_cfg,
                     dup_bound=self.dup_bound)
                 n += 1
+        return n + self._warm_fresh(batch_sizes)
+
+    def _warm_fresh(self, batch_sizes) -> int:
+        """Pre-compile the freshness-merge program per padded batch size
+        (snapshot array shapes are epoch-constant, so one program each)."""
+        if self.fresh_source is None:
+            return 0
+        snap = self.fresh_source()
+        if snap is None:
+            return 0
+        from repro.core.fresh import merge_fresh
+
+        kw = self._scan_cfg.k              # over-fetched main-candidate width
+        n = 0
+        for b in batch_sizes:
+            bp = -(-b // self.pad_batch) * self.pad_batch
+            merge_fresh(
+                jnp.full((bp, kw), jnp.inf, jnp.float32),
+                jnp.full((bp, kw), -1, jnp.int32),
+                jnp.zeros((bp, self.index.dim), jnp.float32),
+                snap.delta_vecs, snap.delta_ids, snap.tombstone, self.cfg.k)
+            n += 1
         return n
 
     # -- convenience drivers ----------------------------------------------

@@ -71,17 +71,35 @@ class TierStats:
 
 
 class TieredPostings:
-    """Host-resident posting store with batched device streaming."""
+    """Host-resident posting store with batched device streaming.
 
-    def __init__(self, postings: np.ndarray, posting_ids: np.ndarray):
+    ``epoch`` tags the tier with the index version it backs (lifecycle
+    runtime): every epoch gets its own tier, and :meth:`release` frees the
+    host payload when the epoch retires — called only after the version
+    manager has seen the epoch's last in-flight batch harvest, so a live
+    gather can never race the free.
+    """
+
+    def __init__(self, postings: np.ndarray, posting_ids: np.ndarray,
+                 epoch: int = 0):
         self.postings = np.ascontiguousarray(postings)
         self.posting_ids = np.ascontiguousarray(posting_ids)
+        self.epoch = int(epoch)
+        self.released = False
         self.stats = TierStats()
         # Remap LUT hoisted out of fetch(): one reusable O(n_clusters) buffer
         # instead of a fresh allocation per call.  Only entries of the current
         # union are ever read back (masked probes bypass the LUT entirely via
         # the sentinel), so stale entries from earlier fetches are harmless.
         self._lut = np.zeros(self.postings.shape[0], dtype=np.int64)
+
+    def release(self) -> None:
+        """Drop the host payload (retired-epoch reclamation).  Idempotent;
+        a fetch after release is a routing bug and fails loudly."""
+        self.released = True
+        self.postings = None
+        self.posting_ids = None
+        self._lut = None
 
     @property
     def cluster_bytes(self) -> int:
@@ -109,6 +127,10 @@ class TieredPostings:
         probe mask.  Duplicate clusters across queries are fetched once
         (the paper's burst-overlap observation, §6.2).
         """
+        if self.released:
+            raise RuntimeError(
+                f"fetch on released tier (epoch {self.epoch}): a batch was "
+                f"routed to a retired index version")
         t0 = time.perf_counter()
         cids = np.asarray(cids)
         if mask is None:

@@ -70,3 +70,82 @@ def test_rebuild_folds_delta_and_drops_tombstones(fresh, rng, tmp_path):
     _, ti = brute_force_topk(jnp.asarray(vecs), q, 5)
     _, i = new_fi.search(q, k=5, nprobe=16)
     assert recall_at_k(np.asarray(i), np.asarray(ti)) > 0.8
+
+
+# -------------------------------------------------------------------------
+# edge cases (PR 4 satellite)
+# -------------------------------------------------------------------------
+def test_insert_exactly_at_capacity(fresh, rng):
+    """An exact-fit insert must succeed (the boundary is > capacity, not
+    >=); only the NEXT insert signals rebuild-due, and the rejected batch
+    must not partially land."""
+    fi, x = fresh
+    vecs = rng.normal(size=(fi.capacity, x.shape[1])).astype(np.float32)
+    ids = fi.insert(vecs)                    # fills the buffer exactly
+    assert fi.fill == fi.capacity
+    assert len(ids) == fi.capacity
+    with pytest.raises(BufferError):
+        fi.insert(vecs[:1])
+    assert fi.fill == fi.capacity            # rejected insert left no trace
+    # every slot is live and findable
+    _, i = fi.search(jnp.asarray(vecs[-2:]), k=1, nprobe=8)
+    assert np.asarray(i)[:, 0].tolist() == ids[-2:].tolist()
+
+
+def test_delete_then_reinsert_same_vector(fresh, rng):
+    """Delete-then-reinsert: the reinserted vector gets a FRESH id (the id
+    space is append-only — tombstones are never resurrected), the old id
+    stays filtered, and the new copy is findable."""
+    fi, x = fresh
+    vec = rng.normal(loc=6.0, size=(1, x.shape[1])).astype(np.float32)
+    (id0,) = fi.insert(vec)
+    fi.delete(np.asarray([id0]))
+    (id1,) = fi.insert(vec)                  # same payload, after the delete
+    assert id1 != id0                        # never reuses a tombstoned id
+    d, i = fi.search(jnp.asarray(vec), k=3, nprobe=8)
+    row = np.asarray(i)[0].tolist()
+    assert id1 in row and id0 not in row
+    assert float(np.asarray(d)[0, 0]) < 1e-3   # exact self-match survives
+
+
+def test_tombstoned_delta_ids_filtered_through_serve_leveled(
+        small_corpus, small_index, rng):
+    """The production merge path: main candidates via serve_leveled (GBDT
+    routing + per-level compiled fused scan) merged with the delta buffer —
+    tombstoned DELTA ids must be filtered at that merge, not just in the
+    brute-force search_flat path."""
+    from repro.core.llsp import LLSPConfig, train_llsp
+    from repro.core.distance import squared_l2_chunked, topk_smallest
+    from repro.core.ivf import search_flat
+    from repro.core.search import SearchConfig
+
+    x, q, topk = small_corpus
+    fi = FreshIndex(main=small_index, capacity=64, n_total=x.shape[0])
+    # tiny LLSP trained exactly like tests/test_llsp.py's fixture
+    lcfg = LLSPConfig(levels=(4, 8, 16, 32), recall_target=0.9,
+                      n_ratio_features=8, n_trees=30, max_depth=4)
+    qj = jnp.asarray(q)
+    cd = squared_l2_chunked(qj, small_index.centroids)
+    cdists, cid_order = topk_smallest(cd, 32)
+    kmax = int(topk.max())
+    _, true_ids = search_flat(small_index, qj, kmax, nprobe=32)
+    true_ids = np.asarray(true_ids)
+    col = np.arange(kmax)[None, :]
+    true_ids = np.where(col < topk[:, None], true_ids, -1)
+    params = train_llsp(lcfg, q, topk, np.asarray(cid_order),
+                        np.asarray(cdists), true_ids,
+                        np.asarray(small_index.posting_ids), x.shape[0])
+
+    probe = rng.normal(loc=8.0, size=(2, x.shape[1])).astype(np.float32)
+    ids = fi.insert(probe)                   # two delta vectors by the probe
+    fi.delete(ids[:1])                       # tombstone one of them
+    cfg = SearchConfig(k=5, nprobe_max=32, pruning="llsp", n_ratio=8,
+                       use_kernel=False, fused_topk=True)
+    d, i = fi.search_leveled(params, probe, 5, cfg, pad=8)
+    for row in i:
+        assert ids[0] not in row.tolist()    # tombstoned delta id filtered
+    assert i[1][0] == ids[1]                 # live delta id wins its query
+    assert d[1][0] < 1e-3
+    # and the merge agrees with the brute-force reference path
+    _, i_ref = fi.search(jnp.asarray(probe), k=5, nprobe=32)
+    assert i[1].tolist()[:3] == np.asarray(i_ref)[1].tolist()[:3]

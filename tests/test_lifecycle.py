@@ -1,0 +1,328 @@
+"""Index lifecycle runtime tests: update lane, freshness merge in the
+serving pipeline, epoch swap protocol, delta-aware rebuilds.
+
+Engine tests drive ``ServeEngine.step`` synchronously (virtual clock) so
+every pump/route/merge decision is deterministic; the one threaded test
+pins the live rebuild+swap contract end to end.
+"""
+import dataclasses as dc
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.search import SearchConfig
+from repro.lifecycle import (
+    CorpusStore,
+    LiveFreshState,
+    RebuildPolicy,
+    RebuildScheduler,
+    UpdateLane,
+    VersionManager,
+    delta_build,
+    load_manifest,
+)
+from repro.runtime import BatchPolicy, DynamicBatcher, PrefetchPipeline, ServeEngine
+from repro.storage import TieredPostings
+
+CFG = SearchConfig(k=5, nprobe_max=8, pruning="none", use_kernel=False,
+                   fused_topk=True)
+
+
+def _mk_state(small_corpus, capacity=64):
+    x, _, _ = small_corpus
+    return LiveFreshState(dim=x.shape[1], capacity=capacity,
+                          n_main=x.shape[0]), x
+
+
+def _mk_pipe(small_index, state, **kw):
+    tier = TieredPostings(np.asarray(small_index.postings),
+                          np.asarray(small_index.posting_ids))
+    return PrefetchPipeline(small_index, None, CFG, tier=tier, pad_batch=8,
+                            row_bucket=32, fresh_source=state.snapshot, **kw)
+
+
+def _mk_engine(pipe, state, clock=None):
+    lane = UpdateLane(state, clock=clock or (lambda: 0.0))
+    policy = BatchPolicy(max_batch=16, max_wait_s=0.001, pad=8,
+                         update_quantum=4)
+    batcher = DynamicBatcher(policy, ["idx"])
+    eng = ServeEngine({"idx": pipe}, batcher, clock=clock or (lambda: 0.0),
+                      update_lanes={"idx": lane})
+    return eng, lane
+
+
+# -------------------------------------------------------------------------
+# LiveFreshState
+# -------------------------------------------------------------------------
+def test_state_mints_sequential_global_ids(small_corpus):
+    st, x = _mk_state(small_corpus)
+    n = x.shape[0]
+    ids = st.insert(np.zeros((3, x.shape[1])))
+    assert ids.tolist() == [n, n + 1, n + 2]
+    with pytest.raises(BufferError):
+        st.insert(np.zeros((st.capacity, x.shape[1])))
+    assert st.fill == 3 and st.next_id == n + 3
+
+
+def test_state_publish_is_monotonic_and_immutable(small_corpus):
+    st, x = _mk_state(small_corpus)
+    s0 = st.snapshot()
+    st.insert(np.ones((1, x.shape[1])))
+    assert st.snapshot() is s0            # not visible until publish
+    st.publish()
+    s1 = st.snapshot()
+    assert s1.seq > s0.seq and s1.fill == 1
+    assert int(np.asarray(s0.delta_ids[0])) == -1   # old snapshot frozen
+
+
+def test_state_delete_ignores_unminted_ids(small_corpus):
+    st, x = _mk_state(small_corpus)
+    n = x.shape[0]
+    assert st.delete(np.asarray([0, 5, n + 50])) == 2   # future id ignored
+    assert st.delete(np.asarray([5])) == 0              # already dead
+    assert st.n_tombstoned == 2
+    assert 0 < st.tombstone_frac < 1
+
+
+# -------------------------------------------------------------------------
+# update lane through the engine: interleave, visibility, backpressure
+# -------------------------------------------------------------------------
+def test_inserts_become_visible_through_search(small_corpus, small_index):
+    st, x = _mk_state(small_corpus)
+    pipe = _mk_pipe(small_index, st)
+    eng, lane = _mk_engine(pipe, st)
+    far = np.full((2, x.shape[1]), 7.5, np.float32)     # away from the data
+    rid = lane.submit_insert(far)
+    assert rid > 0
+    for i in range(4):
+        eng.submit(far[0], 5, index="idx")
+    eng.step(now=1.0)
+    comps = eng.qp.poll()
+    assert len(comps) == 4
+    n = x.shape[0]
+    for c in comps:
+        assert c.ids[0] == n                  # nearest = the inserted vector
+    vis = lane.visibility_stats()
+    assert vis["n_visible"] == 1 and vis["n_pending"] == 0
+    # stamped, not inferred: the interval is harvest_time - submit_time
+    _, op, dt = lane.visible_log[0]
+    assert op == "insert" and dt == 1.0 - 0.0
+
+
+def test_tombstoned_main_and_delta_ids_filtered(small_corpus, small_index):
+    st, x = _mk_state(small_corpus)
+    pipe = _mk_pipe(small_index, st)
+    eng, lane = _mk_engine(pipe, st)
+    n = x.shape[0]
+    far = np.full((2, x.shape[1]), 7.5, np.float32)
+    lane.submit_insert(far)                   # ids n, n+1
+    eng.submit(far[0], 5, index="idx")
+    eng.step(now=0.5)
+    (c0,) = eng.qp.poll()
+    assert c0.ids[0] == n and n + 1 in c0.ids.tolist()
+    victim_main = int(c0.ids[2])              # best main-index hit
+    lane.submit_delete(np.asarray([n, victim_main]))
+    eng.submit(far[0], 5, index="idx")
+    eng.step(now=1.0)
+    (c1,) = eng.qp.poll()
+    ids1 = c1.ids.tolist()
+    assert n not in ids1                      # tombstoned DELTA id filtered
+    assert victim_main not in ids1            # tombstoned MAIN id filtered
+    assert n + 1 == ids1[0]                   # surviving delta id promoted
+
+
+def test_update_storm_cannot_starve_search(small_corpus, small_index):
+    """update_quantum bounds per-cycle update work: with a storm of queued
+    ops, each step still serves its search batch while the storm drains a
+    quantum at a time."""
+    st, x = _mk_state(small_corpus, capacity=512)
+    pipe = _mk_pipe(small_index, st)
+    eng, lane = _mk_engine(pipe, st)
+    for _ in range(40):                       # 40 single-vector inserts
+        lane.submit_insert(np.zeros((1, x.shape[1])))
+    served = 0
+    for i in range(5):
+        eng.submit(x[i], 5, index="idx")
+        served += eng.step(now=float(i))
+    assert served == 5                        # search never starved
+    q = lane.stats
+    assert q.applied_inserts == 4 * 5         # quantum=4 per step, 5 steps
+    assert lane.qp.sq_len() == 20             # storm still draining
+
+
+def test_full_buffer_rejects_with_rebuild_due(small_corpus, small_index):
+    st, x = _mk_state(small_corpus, capacity=4)
+    pipe = _mk_pipe(small_index, st)
+    eng, lane = _mk_engine(pipe, st)
+    lane.submit_insert(np.zeros((3, x.shape[1])))
+    lane.submit_insert(np.zeros((2, x.shape[1])))     # overflows capacity 4
+    eng.step(now=0.0)
+    comps = lane.qp.poll()
+    assert [c.status for c in comps] == ["ok", "rebuild_due"]
+    assert lane.stats.rejected_full == 1
+    assert st.fill == 3                       # partial batch never applied
+
+
+# -------------------------------------------------------------------------
+# epoch swap protocol
+# -------------------------------------------------------------------------
+def test_epoch_retires_only_after_last_inflight_harvest(small_corpus,
+                                                        small_index):
+    st, _ = _mk_state(small_corpus)
+    pipe_a = _mk_pipe(small_index, st)
+    pipe_b = _mk_pipe(small_index, st)
+    vm = VersionManager(clock=lambda: 0.0)
+    ep_a = vm.deploy("idx", pipe_a, fresh=st)
+    held = vm.route("idx")                    # an in-flight batch
+    assert held is ep_a and ep_a.inflight == 1
+    old, new = vm.swap("idx", pipe_b, fresh=st)
+    assert old is ep_a and old.retired
+    assert not old.finalized.is_set()         # batch still in flight
+    assert not pipe_a.tier.released
+    assert vm.route("idx") is new             # new batches -> new epoch
+    new.release()
+    vm.harvested(held)                        # last old batch harvests
+    assert old.finalized.is_set()
+    assert pipe_a.tier.released               # tier freed at retirement
+    with pytest.raises(RuntimeError):
+        pipe_a.tier.fetch(np.zeros((1, 2), np.int32))
+    assert not pipe_b.tier.released
+
+
+def test_engine_routes_through_version_manager(small_corpus, small_index):
+    st, x = _mk_state(small_corpus)
+    pipe = _mk_pipe(small_index, st)
+    eng, lane = _mk_engine(pipe, st)
+    vm = VersionManager(clock=lambda: 0.0)
+    vm.deploy("idx", pipe, fresh=st)
+    vm.bind(eng)
+    for i in range(3):
+        eng.submit(x[i], 5, index="idx")
+    assert eng.step(now=0.0) == 3
+    ep = vm.current("idx")
+    assert ep.record.batches == 1 and ep.inflight == 0
+
+
+# -------------------------------------------------------------------------
+# delta-aware rebuild
+# -------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def built(small_corpus, tmp_path_factory):
+    from repro.build.kmeans import balanced_hierarchical_kmeans
+
+    x, _, _ = small_corpus
+    wd = str(tmp_path_factory.mktemp("lifecycle_build"))
+    cents, _ = balanced_hierarchical_kmeans(x, max_cluster_size=48, iters=8)
+    corpus = CorpusStore(x)
+    index, stats = delta_build(corpus.view(), cents, wd, cluster_len=64,
+                               eps=0.2, max_replicas=4, per_task=1000)
+    return corpus, cents, wd, index, stats
+
+
+def test_delta_build_reuses_clean_shards(built, small_corpus, rng):
+    corpus, cents, wd, index0, stats0 = built
+    x, _, _ = small_corpus
+    assert stats0["shards_reused"] == 0       # cold build streams everything
+    assert stats0["bytes_streamed"] == stats0["full_stream_bytes"]
+    assert load_manifest(wd) is not None
+    # append one shard's worth of new rows; old shards must hold
+    new = rng.normal(size=(120, x.shape[1])).astype(np.float32)
+    corpus.append(new)
+    index1, stats1 = delta_build(corpus.view(), cents, wd, cluster_len=64,
+                                 eps=0.2, max_replicas=4, per_task=1000)
+    assert stats1["shards_streamed"] == 1     # only the new trailing shard
+    assert stats1["shards_reused"] == stats0["shards_total"]
+    assert stats1["shards_total"] == stats0["shards_total"] + 1
+    assert stats1["bytes_streamed"] * 2 <= stats1["full_stream_bytes"]
+    # the reuse is exact: a forced full restream builds the same index
+    from repro.build.pipeline import index_content_hash
+
+    index_full, stats_full = delta_build(
+        corpus.view(), cents, wd, cluster_len=64, eps=0.2, max_replicas=4,
+        per_task=1000, use_manifest=False)
+    assert stats_full["shards_reused"] == 0
+    assert index_content_hash(index1) == index_content_hash(index_full)
+
+
+def test_delta_build_folds_tombstones(built):
+    corpus, cents, wd, index0, _ = built
+    tomb = np.zeros((corpus.n,), bool)
+    dead = np.asarray([0, 1, 2, 50, 51])
+    tomb[dead] = True
+    index, stats = delta_build(corpus.view(), cents, wd, cluster_len=64,
+                               eps=0.2, max_replicas=4, per_task=1000,
+                               tombstone=tomb)
+    assert stats["folded_deletes"] == len(dead)
+    pids = np.asarray(index.posting_ids)
+    assert not np.isin(pids[pids >= 0], dead).any()
+    # masking at the posting build does NOT dirty the shards
+    assert stats["shards_streamed"] == 0
+
+
+def test_live_rebuild_swap_zero_dropped(small_corpus, small_index,
+                                        tmp_path, rng):
+    """The acceptance flow in miniature, threaded: searches + updates live,
+    a delta rebuild triggers on fill, swaps atomically; every admitted
+    request completes, inserted ids stay findable across the swap."""
+    import time
+
+    from repro.build.kmeans import balanced_hierarchical_kmeans
+
+    x, q, _ = small_corpus
+    wd = str(tmp_path)
+    cents, _ = balanced_hierarchical_kmeans(x, max_cluster_size=48, iters=8)
+    corpus = CorpusStore(x)
+    index, _ = delta_build(corpus.view(), cents, wd, cluster_len=64,
+                           eps=0.2, max_replicas=4, per_task=1000)
+    st = LiveFreshState(dim=x.shape[1], capacity=64, n_main=corpus.n)
+    lane = UpdateLane(st)
+
+    def mk(index, state):
+        tier = TieredPostings(np.asarray(index.postings),
+                              np.asarray(index.posting_ids))
+        p = PrefetchPipeline(index, None, CFG, tier=tier, pad_batch=8,
+                             row_bucket=32, fresh_source=state.snapshot)
+        p.warmup(batch_sizes=(8,))
+        return p
+
+    pipe = mk(index, st)
+    vm = VersionManager()
+    ep0 = vm.deploy("idx", pipe, fresh=st)
+    batcher = DynamicBatcher(
+        BatchPolicy(max_batch=16, max_wait_s=0.002, pad=8), ["idx"])
+    eng = ServeEngine({"idx": pipe}, batcher, update_lanes={"idx": lane})
+    vm.bind(eng)
+    sched = RebuildScheduler(
+        name="idx", corpus=corpus, centroids=cents, workdir=wd, lane=lane,
+        versions=vm, make_pipeline=mk, cluster_len=64,
+        policy=RebuildPolicy(delta_fill_frac=0.5, per_task=1000))
+    eng.start()
+    try:
+        far = rng.normal(loc=6.0, size=(40, x.shape[1])).astype(np.float32)
+        lane.submit_insert(far)               # 40/64 -> over the threshold
+        for i in range(32):
+            eng.submit(q[i], 5, index="idx")
+        deadline = time.monotonic() + 10
+        while sched.due() is None and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert sched.due() == "delta_fill"
+        rep = sched.rebuild_and_swap(trigger="test")
+        assert rep.folded_inserts == 40 and rep.shards_reused >= 4
+        assert rep.bytes_streamed * 2 <= rep.full_stream_bytes
+        # inserted ids survive the swap (now in the main index)
+        want = {}
+        for i in range(8):
+            rid = eng.submit(far[i], 5, index="idx")
+            want[rid] = x.shape[0] + i
+    finally:
+        eng.stop(drain=True)
+    assert ep0.finalized.wait(5)              # old epoch fully drained
+    comps = eng.qp.poll()
+    hits = [c for c in comps
+            if c.req_id in want and want[c.req_id] in c.ids.tolist()]
+    assert len(hits) == 8
+    st_e = eng.stats
+    assert st_e.completed == st_e.submitted   # zero dropped across the swap
+    assert vm.history[0].finalized_at > 0

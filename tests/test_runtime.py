@@ -267,9 +267,9 @@ def test_multi_index_fairness(small_index, queries):
         eng.submit(q[i % 64], 5, index=f"idx{i % 3}")
     orig = eng._complete_batch
 
-    def spy(mb, result, done):
+    def spy(mb, result, done, epoch=None):
         served.append(mb.index)
-        orig(mb, result, done)
+        orig(mb, result, done, epoch=epoch)
 
     eng._complete_batch = spy
     while eng.step(now=1.0):
