@@ -155,6 +155,12 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=10_000)
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request deadline (0 = best-effort)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="in-flight batch window (1 = PR 2 double buffer)")
+    ap.add_argument("--grouping", choices=("locality", "fifo"),
+                    default="locality",
+                    help="micro-batch formation: probe-overlap grouping "
+                         "or arrival order")
     ap.add_argument("--rebuild", action="store_true",
                     help="rebuild + swap index 0 mid-run (freshness flow)")
     ap.add_argument("--fail-shard", type=int, default=-1,
@@ -172,17 +178,20 @@ def main() -> None:
     names = list(PAPER_DATASETS)[: args.indexes]
     deadline_s = args.deadline_ms * 1e-3 or None
     deps: dict[str, Deployment] = {}
+    tiers_seen: list = []          # every deployed tier, incl. swapped-out
     with tempfile.TemporaryDirectory() as root:
         for name in names:
             spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
             deps[name] = deploy(arena, name, spec,
                                 os.path.join(root, name), n_shards, scfg)
+            tiers_seen.append(deps[name].pipeline.tier)
 
         policy = BatchPolicy(max_batch=args.batch, max_wait_s=0.05,
-                             shed="degrade", degrade_nprobe=8)
+                             shed="degrade", degrade_nprobe=8,
+                             grouping=args.grouping)
         batcher = DynamicBatcher(policy, names)
         engine = ServeEngine({n: d.pipeline for n, d in deps.items()},
-                             batcher)
+                             batcher, depth=args.depth)
         # epoch-tagged versions (lifecycle runtime): every batch routes to
         # the current epoch at formation and carries it to harvest, so the
         # mid-run rebuild below swaps atomically — in-flight batches finish
@@ -264,6 +273,7 @@ def main() -> None:
                 fresh = deploy(arena, name_r + "_r1", spec,
                                os.path.join(root, f"{name_r}_r1"),
                                n_shards, scfg)
+                tiers_seen.append(fresh.pipeline.tier)
                 fresh.pipeline.warmup(batch_sizes=warm_sizes)
                 old_ep, new_ep = vm.swap(name_r, fresh.pipeline)
                 # reclaim the old extents ONLY after the old epoch's last
@@ -295,6 +305,17 @@ def main() -> None:
               f"p50={pct['p50_ms']:.0f}ms p99={pct['p99_ms']:.0f}ms, "
               f"shed={st.shed} degraded={st.degraded} "
               f"rejected={st.rejected}")
+        bs = batcher.stats
+        # released tiers keep their stats (release drops only the payload),
+        # so a retired epoch's pre-swap gather traffic still counts here
+        union_mib = sum(t.stats.union_bytes_streamed
+                        for t in tiers_seen if t is not None) / 2**20
+        print(f"[batcher] grouping={args.grouping} depth={args.depth}: "
+              f"{bs.batches} batches ({bs.locality_batches} locality-"
+              f"formed, {bs.aged_seeds} aged seeds), "
+              f"max queue wait {bs.max_queue_wait_s * 1e3:.1f}ms "
+              f"(bound {policy.max_wait_s * 1e3:.0f}ms), "
+              f"gather union {union_mib:.1f} MiB")
         if failed:
             # live shards keep beating through shutdown so the monitor can
             # cross its miss threshold on the silent one

@@ -129,6 +129,18 @@ class LiveFreshState:
             )
             return self.seq
 
+    def already_covered(self, ids: np.ndarray) -> bool:
+        """True when a delete of ``ids`` is fully covered by existing
+        tombstones: it names at least one minted id and every minted id in
+        it is already dead (a newer tombstone covers it — the update lane
+        drops such deletes instead of re-applying them).  A delete naming
+        no minted ids at all is NOT covered: it takes the normal apply
+        path (a no-op there) so its completion stays "ok", as before."""
+        ids = np.asarray(ids, np.int64).ravel()
+        with self.lock:
+            ids = ids[(ids >= 0) & (ids < self.next_id)]
+            return ids.size > 0 and bool(self._tombstone[ids].all())
+
     # -- readers -----------------------------------------------------------
     def snapshot(self) -> FreshSnapshot:
         return self._snapshot
@@ -172,18 +184,25 @@ class LiveFreshState:
 
 @dataclasses.dataclass
 class UpdateRequest:
-    """One update op submitted to the lane's SQ."""
+    """One update op submitted to the lane's SQ.  ``deadline`` (absolute
+    clock time, None = best-effort) mirrors the search lane's admission
+    control: an op the poller reaches past its deadline is shed, not
+    applied late — freshness SLOs fail fast under storms instead of
+    silently applying minutes-stale ops."""
     req_id: int
     op: str                            # "insert" | "delete"
     vecs: Optional[np.ndarray]         # (n, D) for insert
     ids: Optional[np.ndarray]          # (n,) for delete
     arrival: float = 0.0
+    deadline: Optional[float] = None   # absolute; None = best-effort
 
 
 @dataclasses.dataclass
 class UpdateCompletion:
     """CQ entry.  status: "ok" | "rebuild_due" (insert rejected, buffer
-    full — resubmit after the swap)."""
+    full — resubmit after the swap) | "shed" (deadline passed before the
+    poller reached the op) | "covered" (delete dropped: every id was
+    already tombstoned by a newer delete)."""
     req_id: int
     op: str
     status: str
@@ -200,6 +219,8 @@ class UpdateLaneStats:
     applied_inserts: int = 0           # vectors, not requests
     applied_deletes: int = 0
     rejected_full: int = 0             # delta buffer full (rebuild due)
+    shed_deadline: int = 0             # ops past deadline at pump time
+    covered_deletes: int = 0           # deletes dropped (already tombstoned)
     pumps: int = 0
     publishes: int = 0
     visible: int = 0                   # ops stamped visible by a harvest
@@ -229,16 +250,24 @@ class UpdateLane:
         self._vis_cap = 1 << 16                # ring-bounded for daemons
 
     # -- client side -------------------------------------------------------
-    def submit_insert(self, vecs: np.ndarray, block: bool = False) -> int:
+    def submit_insert(self, vecs: np.ndarray, block: bool = False,
+                      deadline_s: Optional[float] = None) -> int:
+        now = self.clock()
         req = UpdateRequest(req_id=next(self._req_ids), op="insert",
                             vecs=np.asarray(vecs, np.float32), ids=None,
-                            arrival=self.clock())
+                            arrival=now,
+                            deadline=None if deadline_s is None
+                            else now + deadline_s)
         return self._submit(req, block)
 
-    def submit_delete(self, ids: np.ndarray, block: bool = False) -> int:
+    def submit_delete(self, ids: np.ndarray, block: bool = False,
+                      deadline_s: Optional[float] = None) -> int:
+        now = self.clock()
         req = UpdateRequest(req_id=next(self._req_ids), op="delete",
                             vecs=None, ids=np.asarray(ids, np.int64),
-                            arrival=self.clock())
+                            arrival=now,
+                            deadline=None if deadline_s is None
+                            else now + deadline_s)
         return self._submit(req, block)
 
     def _submit(self, req: UpdateRequest, block: bool) -> int:
@@ -273,6 +302,26 @@ class UpdateLane:
         try:
             seq_next = st.seq + 1              # the publish these ops join
             for req in ops:
+                if req.deadline is not None and now > req.deadline:
+                    # deadline admission, mirroring the search lane: an op
+                    # the poller reached too late is failed fast — the
+                    # client learns its freshness SLO broke instead of the
+                    # op applying arbitrarily late
+                    self.stats.shed_deadline += 1
+                    comps.append(UpdateCompletion(
+                        req_id=req.req_id, op=req.op, status="shed",
+                        ids=None, seq=-1,
+                        submitted=req.arrival, applied=now))
+                    continue
+                if req.op == "delete" and st.already_covered(req.ids):
+                    # a newer tombstone already covers every id: dropping
+                    # the delete is semantically free and saves a publish
+                    self.stats.covered_deletes += 1
+                    comps.append(UpdateCompletion(
+                        req_id=req.req_id, op=req.op, status="covered",
+                        ids=req.ids, seq=st.seq,
+                        submitted=req.arrival, applied=now))
+                    continue
                 if req.op == "insert":
                     try:
                         ids = st.insert(req.vecs)

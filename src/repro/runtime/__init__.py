@@ -7,14 +7,19 @@ paper §4.1 component   runtime module
 =====================  ====================================================
 SQ/CQ queue pairs,     :mod:`repro.runtime.engine` — bounded submission /
 doorbells, polling     completion queues, doorbell conditions, poller thread
-SSD-read / scan        :mod:`repro.runtime.pipeline` — double-buffered
-overlap                plan/prefetch/dispatch/harvest stages; gather of
-                       batch i+1 overlaps the in-flight scan of batch i
+SSD-read / scan        :mod:`repro.runtime.pipeline` — N-deep prefetch
+overlap                window over plan/prefetch/dispatch/harvest stages;
+                       the next batches' gathers overlap the in-flight
+                       scans (depth=1 is the PR 2 double buffer)
 request coalescing,    :mod:`repro.runtime.batcher` — dynamic micro-batching
-overload control       with deadline-aware shed/degrade admission control
-                       and round-robin fairness across co-resident indexes
+overload control,      with probe-overlap (locality) grouped formation on
+locality grouping      admission-time routes, deadline-aware shed/degrade
+                       admission control iterated to a fixed point on the
+                       kept set, and round-robin fairness across
+                       co-resident indexes
 production traffic     :mod:`repro.runtime.loadgen` — seeded Poisson /
-                       bursty / multi-tenant arrival traces
+                       bursty / multi-tenant / locality-skewed /
+                       hot-cluster arrival traces
 =====================  ====================================================
 """
 from .batcher import BatchPolicy, BatcherStats, DynamicBatcher, MicroBatch
@@ -22,6 +27,7 @@ from .engine import (
     Completion,
     EngineStats,
     QueuePair,
+    RoutePlan,
     SearchRequest,
     ServeEngine,
 )
@@ -30,6 +36,8 @@ from .loadgen import (
     TenantSpec,
     UpdateArrival,
     bursty_trace,
+    hot_cluster_trace,
+    locality_skewed_trace,
     merge_timelines,
     multi_tenant_trace,
     poisson_trace,
@@ -39,6 +47,7 @@ from .pipeline import (
     BatchResult,
     PrefetchPipeline,
     StageTimes,
+    inflight_depth,
     latency_percentiles,
     max_id_replicas,
     overlap_efficiency,

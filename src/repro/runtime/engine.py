@@ -34,6 +34,26 @@ import numpy as np
 
 
 @dataclasses.dataclass
+class RoutePlan:
+    """Admission-time probe routing for one request (§4.3-compatible: only
+    pre-search features — the centroid scan + LLSP level decision the plan
+    stage would run anyway, computed once when the request leaves the SQ).
+
+    ``probe_set`` is the locality signature the batcher groups on;
+    ``source`` tags the pipeline whose centroids produced the route, so a
+    batch formed after an epoch swap detects the stale route and replans
+    instead of scanning the new index with the old cluster ids."""
+    cids: np.ndarray                # (P,) int32 probed clusters, -1 padded
+    nprobe: int
+    probe_set: frozenset            # {cluster id} — the grouping signature
+    source: object                  # pipeline that routed (staleness tag)
+    bits: Optional[np.ndarray] = None   # (max probed id + 1,) bool cache,
+                                        # built lazily by the batcher so
+                                        # formation never redoes the
+                                        # set -> bitset conversion per pool
+
+
+@dataclasses.dataclass
 class SearchRequest:
     """One query submitted to the SQ (the paper's NVMe-command analogue)."""
     req_id: int
@@ -42,6 +62,7 @@ class SearchRequest:
     topk: int
     deadline: Optional[float]       # absolute clock time, None = best-effort
     arrival: float = 0.0
+    route: Optional[RoutePlan] = None   # set by the poller at SQ drain
 
 
 @dataclasses.dataclass
@@ -129,6 +150,42 @@ class QueuePair:
             return self._cq_ready.wait_for(lambda: len(self._cq) >= n, timeout)
 
 
+def make_route_plan(cids_row: np.ndarray, nprobe: int, source) -> RoutePlan:
+    """THE RoutePlan constructor — one definition of the probe signature
+    (live cluster ids among the first ``nprobe`` routed), shared by the
+    engine and by benches that pre-route a query pool, so the formation
+    input measured offline is byte-for-byte what the engine feeds form."""
+    n = int(nprobe)
+    return RoutePlan(
+        cids=cids_row, nprobe=n,
+        probe_set=frozenset(int(c) for c in cids_row[:n] if c >= 0),
+        source=source)
+
+
+def route_requests(reqs: list, pipe, chunk: int = 0) -> None:
+    """Tag each request with its RoutePlan from ``pipe`` in batched
+    centroid+LLSP calls.  Requests already routed by this pipe are skipped
+    (routing runs at most once per request per index version); a stale
+    route from a swapped-out pipeline is recomputed against the live one.
+
+    ``chunk`` (0 = everything at once) slices the call into warmed jit
+    shapes: callers pass the batcher's max_batch so a deep pending pool
+    never triggers a one-off compile of a pool-sized plan program mid-
+    traffic — the cliff the pipeline warmup exists to prevent."""
+    todo = [r for r in reqs
+            if r.route is None or r.route.source is not pipe]
+    if not todo:
+        return
+    step = len(todo) if chunk <= 0 else chunk
+    for lo in range(0, len(todo), step):
+        part = todo[lo:lo + step]
+        qs = np.stack([r.query for r in part])
+        tk = np.asarray([r.topk for r in part], np.int32)
+        cids, nprobe = pipe.route(qs, tk)
+        for i, r in enumerate(part):
+            r.route = make_route_plan(cids[i], nprobe[i], pipe)
+
+
 @dataclasses.dataclass
 class EngineStats:
     submitted: int = 0
@@ -141,19 +198,30 @@ class EngineStats:
 
 
 class ServeEngine:
-    """SQ -> batcher -> prefetch pipeline -> CQ, with one-deep overlap.
+    """SQ -> batcher -> prefetch pipeline -> CQ, with an N-deep window.
 
     ``pipelines`` maps index name -> PrefetchPipeline (the §4.2 multi-index
     node).  The engine itself is pipeline-agnostic: it only needs the
-    ``plan / prefetch / dispatch / harvest`` stage protocol.
+    ``plan / prefetch / dispatch / harvest`` stage protocol (and, optionally,
+    ``route`` for admission-time locality tagging).
+
+    ``depth`` is the in-flight window: how many dispatched-but-unharvested
+    batches the poller keeps on the device stream before blocking on the
+    oldest readback.  depth=1 is the PR 2 double buffer (gather i+1 hides
+    under scan i); deeper windows matter in the scan ≪ gather regime (TPU:
+    the scan is device-fast, the host gather is the long pole), where one
+    in-flight scan finishes long before the next union is gathered and the
+    device sits idle unless more batches are queued behind it.
     """
 
     def __init__(self, pipelines: dict, batcher, qp: Optional[QueuePair] = None,
-                 clock=time.monotonic, update_lanes: Optional[dict] = None):
+                 clock=time.monotonic, update_lanes: Optional[dict] = None,
+                 depth: int = 1):
         self.pipelines = dict(pipelines)
         self.batcher = batcher
         self.qp = qp or QueuePair()
         self.clock = clock
+        self.depth = max(int(depth), 1)
         self.stats = EngineStats()
         self._req_ids = iter(range(1 << 62))
         self._swap_lock = threading.Lock()
@@ -165,6 +233,8 @@ class ServeEngine:
         # routes batches to epochs (set by VersionManager.bind)
         self.update_lanes: dict = dict(update_lanes or {})
         self.versions = None
+        for name in self.pipelines:
+            self._register_router(name)
 
     # -- client side -------------------------------------------------------
     def submit(self, query: np.ndarray, topk: int, index: Optional[str] = None,
@@ -195,6 +265,7 @@ class ServeEngine:
         with self._swap_lock:
             self.pipelines[name] = pipeline
             self.batcher.add_index(name)
+        self._register_router(name)
 
     def add_update_lane(self, name: str, lane) -> None:
         """Attach an update lane (lifecycle/ingest.py) for ``name``: the
@@ -216,12 +287,66 @@ class ServeEngine:
         return n
 
     # -- poller ------------------------------------------------------------
+    def _routing_pipeline(self, name: str):
+        """Pipeline whose centroids route admissions for ``name`` — the
+        current epoch's when versions are bound (no in-flight ref taken:
+        routing is advisory, the batch takes its epoch at formation)."""
+        if self.versions is not None:
+            try:
+                return self.versions.current(name).pipeline
+            except KeyError:
+                pass
+        return self._pipeline(name)
+
+    def _register_router(self, name: str) -> None:
+        """Expose the index's probe router to the batcher.  Routing runs at
+        most once per request, but WHERE it runs is amortization-driven:
+        a burst drained off the SQ is routed immediately (one batched
+        centroid+LLSP call), while trickle arrivals are left for the
+        batcher to route in one pooled call at formation time — per-query
+        routing cost identical to the PR 2 per-batch plan, never a
+        per-arrival jit dispatch.
+
+        ``route`` is optional in the stage protocol, so a swap to a
+        route-less pipeline DEREGISTERS the router, and the closure
+        re-checks the live pipeline every call — the poller must degrade
+        to FIFO-style replanning, never crash, when an epoch swap changes
+        the pipeline's capabilities mid-traffic."""
+        routers = {**getattr(self.batcher, "routers", {})}
+        pipe = self._routing_pipeline(name)
+        if getattr(pipe, "route", None) is None:
+            routers.pop(name, None)
+            self.batcher.routers = routers
+            return
+
+        def router(reqs: list) -> None:
+            live = self._routing_pipeline(name)
+            if getattr(live, "route", None) is None:
+                return
+            route_requests(reqs, live, chunk=self.batcher.policy.max_batch)
+
+        routers[name] = router
+        self.batcher.routers = routers
+
     def _drain_sq(self, now: float) -> None:
-        sheds = []
+        sheds, by_index = [], {}
         for req in self.qp.pop_submissions():
             c = self.batcher.add(req, now)
             if c is not None:
                 sheds.append(c)
+            else:
+                by_index.setdefault(req.index, []).append(req)
+        for name, group in by_index.items():
+            # eager admission routing only when formation will use it AND
+            # the drained group already amortizes the call (a burst);
+            # trickles are routed in one pooled call at formation
+            # (batcher.routers), fifo mode plans per batch as before
+            if (self.batcher.policy.grouping == "locality"
+                    and len(group) >= self.batcher.policy.pad):
+                pipe = self._routing_pipeline(name)
+                if getattr(pipe, "route", None) is not None:
+                    route_requests(group, pipe,
+                                   chunk=self.batcher.policy.max_batch)
         if sheds:
             self.stats.shed += len(sheds)
             self.stats.completed += len(sheds)
@@ -278,7 +403,16 @@ class ServeEngine:
         pipe = epoch.pipeline if epoch is not None else self._pipeline(mb.index)
         queries = np.stack([r.query for r in mb.requests])
         topk = np.asarray([r.topk for r in mb.requests], np.int32)
-        plan = pipe.plan(queries, topk, nprobe_cap=mb.nprobe_cap)
+        # reuse the admission-time routing when every request in the batch
+        # was routed by THIS pipeline; a stale route (epoch swapped between
+        # admission and formation) replans against the live centroids
+        routed = None
+        routes = [r.route for r in mb.requests]
+        if all(rt is not None and rt.source is pipe for rt in routes):
+            routed = (np.stack([rt.cids for rt in routes]),
+                      np.asarray([rt.nprobe for rt in routes], np.int32))
+        plan = pipe.plan(queries, topk, nprobe_cap=mb.nprobe_cap,
+                         routed=routed)
         return mb, pipe, plan, epoch
 
     def step(self, now: Optional[float] = None, force: bool = True) -> int:
@@ -298,16 +432,28 @@ class ServeEngine:
                                  epoch=epoch)
         return self.stats.completed - before
 
-    def _serve_loop(self) -> None:
-        """Overlapped poller: while batch i scans on device, batch i+1 is
-        formed, planned, and its cluster union gathered/streamed on host.
+    def _harvest_head(self, inflight) -> None:
+        mb, pipe, infl, epoch = inflight.popleft()
+        result = pipe.harvest(infl)
+        self._complete_batch(mb, result, self.clock(), epoch=epoch)
 
-        The plan stage of batch i+1 runs BEFORE batch i's scan dispatch so
-        its (small) device work is not queued behind the (large) scan on the
-        backend's in-order execution stream — this ordering is what makes
-        the host gather actually land inside the scan-in-flight window.
+    def _serve_loop(self) -> None:
+        """Overlapped poller: while up to ``depth`` batches scan on device,
+        the next batch is formed, planned, and its cluster union gathered /
+        streamed on host.
+
+        The plan stage of the next batch runs BEFORE the prepared batch's
+        scan dispatch so its (small) device work is not queued behind the
+        (large) scan on the backend's in-order execution stream — this
+        ordering is what makes the host gather actually land inside the
+        scan-in-flight window.  The in-flight deque holds dispatched,
+        unharvested batches; the poller only blocks on the OLDEST readback,
+        and only when the window is full or there is nothing left to prep —
+        so with depth >= 2 a short scan finishing early never idles the
+        device while the next gather is still on the host.
         """
         prep = None                    # (mb, pipe, prefetch-handle, epoch)
+        inflight = collections.deque() # (mb, pipe, scan-handle, epoch)
         while not self._stop.is_set():
             now = self.clock()
             self._drain_sq(now)
@@ -316,29 +462,35 @@ class ServeEngine:
             self._pump_updates(now)
             if prep is None:
                 planned = self._form_and_plan(now)
-                if planned is None:
-                    self.qp.wait_submissions(
-                        timeout=self.batcher.policy.max_wait_s)
+                if planned is not None:
+                    mb, pipe, plan, epoch = planned
+                    prep = (mb, pipe, pipe.prefetch(plan), epoch)
+                    continue           # give the SQ one more drain pass
+                if inflight:
+                    self._harvest_head(inflight)
                     continue
-                mb, pipe, plan, epoch = planned
-                prep = (mb, pipe, pipe.prefetch(plan), epoch)
-                continue               # give the SQ one more drain pass
+                self.qp.wait_submissions(
+                    timeout=self.batcher.policy.max_wait_s)
+                continue
+            if len(inflight) >= self.depth:
+                self._harvest_head(inflight)
+                continue
             # commit the prepared batch: plan the NEXT batch first (device
-            # idle), dispatch scan, then gather the next batch under it.
+            # idle for it), dispatch the scan into the in-flight window,
+            # then gather the next batch under the window's scans.
             nxt = self._form_and_plan(now)
             mb, pipe, h, epoch = prep
-            infl = pipe.dispatch(h)
+            inflight.append((mb, pipe, pipe.dispatch(h), epoch))
             prep = None
             if nxt is not None:
                 mb2, pipe2, plan2, epoch2 = nxt
                 prep = (mb2, pipe2, pipe2.prefetch(plan2), epoch2)
-            result = pipe.harvest(infl)
-            self._complete_batch(mb, result, self.clock(), epoch=epoch)
-        # drain: finish anything still prepared or pending
+        # drain: finish anything still prepared or in flight
         if prep is not None:
             mb, pipe, h, epoch = prep
-            result = pipe.harvest(pipe.dispatch(h))
-            self._complete_batch(mb, result, self.clock(), epoch=epoch)
+            inflight.append((mb, pipe, pipe.dispatch(h), epoch))
+        while inflight:
+            self._harvest_head(inflight)
         while self._drain_on_stop:
             now = self.clock()
             self._drain_sq(now)

@@ -12,7 +12,19 @@ deterministic, seeded versions of both:
                          flash-crowd shape of Fig. 1 traffic);
 * ``multi_tenant_trace`` — superposition of per-index traces for the §4.2
                          multi-index node (each tenant its own rate, top-k
-                         range, and deadline budget).
+                         range, and deadline budget);
+* ``locality_skewed_trace`` — ``concurrency`` independent user streams, each
+                         pinned (with slow Markov drift) to one contiguous
+                         GROUP of the query pool; arrivals from different
+                         groups interleave in time, so arrival-order
+                         batching mixes groups while locality-aware
+                         formation can unmix them (the FIFO-vs-locality
+                         A/B's worst case for FIFO, and the shape of real
+                         traffic: many concurrent users, each on a topic);
+* ``hot_cluster_trace`` — a hot subset of the query pool takes most of the
+                         traffic (hot-cluster / celebrity-item skew): the
+                         batch union is dominated by a few clusters that
+                         every batch re-gathers.
 
 Traces are plain lists of :class:`Arrival` sorted by time — the engine tests
 replay them against a virtual clock, so every admission/shedding decision is
@@ -117,6 +129,79 @@ def bursty_trace(
         return (burst_qps if in_burst else base_qps) / peak
 
     return _draw_arrivals(rng, spec, duration_s, rate_fn)
+
+
+def locality_skewed_trace(
+    rate_qps: float,
+    duration_s: float,
+    n_queries: int,
+    n_groups: int = 16,
+    concurrency: int = 8,
+    switch_p: float = 0.02,
+    seed: int = 0,
+    index: str = "default",
+    topk: tuple[int, int] = (10, 100),
+    deadline_s: Optional[float] = None,
+) -> list[Arrival]:
+    """Locality-skewed open-loop arrivals: ``concurrency`` independent
+    Poisson user streams (rate_qps split evenly), each drawing qrows from
+    ONE of ``n_groups`` contiguous slices of the query pool and switching to
+    a fresh random group with probability ``switch_p`` per arrival (slow
+    topic drift).  Callers that want qrow-contiguity to mean probe-locality
+    sort their query pool by nearest centroid first — then each group is a
+    tight probed-cluster neighborhood, and the merged timeline interleaves
+    ~``concurrency`` neighborhoods at any instant.  Each stream draws from
+    its own derived seed, but note the total rate is split evenly, so
+    changing ``concurrency`` reshapes every stream's arrival times (hold it
+    fixed across paired A/B runs)."""
+    if n_groups <= 0 or n_queries < n_groups:
+        raise ValueError(f"need n_queries >= n_groups ({n_queries} < {n_groups})")
+    group_size = n_queries // n_groups
+    streams = []
+    for s in range(max(int(concurrency), 1)):
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 11, s]))
+        spec = TenantSpec(index, rate_qps / max(int(concurrency), 1),
+                          topk[0], topk[1], deadline_s, n_queries)
+        raw = _draw_arrivals(rng, spec, duration_s)
+        g = int(rng.integers(0, n_groups))
+        out = []
+        for a in raw:
+            if rng.uniform() < switch_p:
+                g = int(rng.integers(0, n_groups))
+            qrow = g * group_size + int(rng.integers(0, group_size))
+            out.append(dataclasses.replace(a, qrow=qrow))
+        streams.append(out)
+    return list(heapq.merge(*streams, key=lambda a: a.t))
+
+
+def hot_cluster_trace(
+    rate_qps: float,
+    duration_s: float,
+    n_queries: int,
+    hot_frac: float = 0.05,
+    hot_weight: float = 0.9,
+    seed: int = 0,
+    index: str = "default",
+    topk: tuple[int, int] = (10, 100),
+    deadline_s: Optional[float] = None,
+) -> list[Arrival]:
+    """Hot-cluster skew: ``hot_weight`` of the traffic draws qrows from the
+    first ``hot_frac`` slice of the query pool, the rest uniformly from the
+    whole pool.  With a centroid-sorted pool the hot slice maps to a handful
+    of clusters — the celebrity-item regime where most batches should share
+    most of their gather union."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 13]))
+    spec = TenantSpec(index, rate_qps, topk[0], topk[1], deadline_s, n_queries)
+    raw = _draw_arrivals(rng, spec, duration_s)
+    n_hot = max(int(n_queries * hot_frac), 1)
+    out = []
+    for a in raw:
+        if rng.uniform() < hot_weight:
+            qrow = int(rng.integers(0, n_hot))
+        else:
+            qrow = int(rng.integers(0, n_queries))
+        out.append(dataclasses.replace(a, qrow=qrow))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,6 +31,7 @@ scan dispatch would serialize the whole pipeline behind the scan.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -61,6 +62,12 @@ class StageTimes:
     stream_end: float = 0.0        # packed tensors on device
     scan_dispatch: float = 0.0
     scan_done: float = 0.0
+    routed: bool = False           # plan reused an admission-time RoutePlan
+    clusters_requested: int = 0    # probe slots across the batch (pre-dedup)
+    union_clusters: int = 0        # deduped gather-union size (real clusters)
+    union_bytes: int = 0           # payload bytes of the union (measured at
+                                   # fetch, excludes pad/sentinel rows) — the
+                                   # locality-grouping objective, per batch
 
     @property
     def total(self) -> float:
@@ -245,14 +252,11 @@ class PrefetchPipeline:
         return self.tier is not None
 
     # -- stages ------------------------------------------------------------
-    def plan(self, queries: np.ndarray, topk,
-             nprobe_cap: Optional[np.ndarray] = None) -> _Plan:
-        """Centroid scan + LLSP pruning; probe set resolved to host arrays.
-
-        ``nprobe_cap`` (b,) int32 caps per-query nprobe (0 = uncapped) —
-        the batcher's deadline-degradation hook."""
-        t = StageTimes(size=len(queries))
-        t.plan_start = time.perf_counter()
+    def _padded_inputs(self, queries, topk):
+        """Pad (queries, topk) to the jit batch quantum by repeating the
+        last row; returns (q (bp, D), tk (bp,), true b).  The ONE copy of
+        the pad idiom: route() and plan() must agree bit-for-bit on it or
+        admission-route reuse silently drifts from replanning."""
         q = np.asarray(queries, np.float32)
         tk = np.broadcast_to(np.asarray(topk, np.int32), (len(q),))
         b = len(q)
@@ -260,11 +264,52 @@ class PrefetchPipeline:
         if bp != b:
             q = np.concatenate([q, np.repeat(q[-1:], bp - b, axis=0)])
             tk = np.concatenate([tk, np.repeat(tk[-1:], bp - b)])
-        qd = jnp.asarray(q)
+        return q, tk, b
+
+    def route(self, queries: np.ndarray, topk
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """Admission-time probe routing: the plan stage's centroid scan +
+        LLSP level decision ONLY (cheap pre-search features, §4.3), returned
+        as host arrays ``(cids (b, P), nprobe (b,))``.
+
+        This is bit-identical to what :meth:`plan` computes (same padded
+        inputs, same jit program), so the engine tags each drained request
+        with its row and ``plan(routed=...)`` reuses it verbatim — the
+        centroid scan moves to admission (where the batcher needs the
+        probe signature to group by locality), it is not run twice."""
+        q, tk, b = self._padded_inputs(queries, topk)
         cids, nprobe = _plan_jit(self.index.centroids, self.llsp_params,
-                                 qd, jnp.asarray(tk), self.cfg)
-        cids = np.asarray(cids)
-        nprobe = np.asarray(nprobe).copy()
+                                 jnp.asarray(q), jnp.asarray(tk), self.cfg)
+        return np.asarray(cids)[:b], np.asarray(nprobe)[:b].astype(np.int32)
+
+    def plan(self, queries: np.ndarray, topk,
+             nprobe_cap: Optional[np.ndarray] = None,
+             routed: Optional[tuple] = None) -> _Plan:
+        """Centroid scan + LLSP pruning; probe set resolved to host arrays.
+
+        ``nprobe_cap`` (b,) int32 caps per-query nprobe (0 = uncapped) —
+        the batcher's deadline-degradation hook.  ``routed`` is the
+        admission-time probe plan ``(cids (b, P), nprobe (b,))`` from
+        :meth:`route`: when given, the centroid scan is skipped and the
+        plan stage is pure host bookkeeping (pad + mask)."""
+        t = StageTimes(size=len(queries))
+        t.plan_start = time.perf_counter()
+        q, tk, b = self._padded_inputs(queries, topk)
+        bp = len(q)
+        qd = jnp.asarray(q)
+        if routed is not None:
+            rcids, rnp = routed
+            rcids = np.asarray(rcids, np.int32)
+            cids = np.full((bp, rcids.shape[1]), -1, np.int32)
+            cids[:b] = rcids
+            nprobe = np.zeros((bp,), np.int32)
+            nprobe[:b] = np.asarray(rnp, np.int32)
+            t.routed = True
+        else:
+            cids, nprobe = _plan_jit(self.index.centroids, self.llsp_params,
+                                     qd, jnp.asarray(tk), self.cfg)
+            cids = np.asarray(cids)
+            nprobe = np.asarray(nprobe).copy()
         if nprobe_cap is not None:
             cap = np.zeros((bp,), np.int32)
             cap[:b] = np.asarray(nprobe_cap, np.int32)
@@ -284,6 +329,9 @@ class PrefetchPipeline:
         plan.times.gather_end = ev.gather_end
         plan.times.stream_end = ev.stream_end
         plan.times.rows = ev.rows
+        plan.times.clusters_requested = ev.clusters_requested
+        plan.times.union_clusters = ev.clusters_union
+        plan.times.union_bytes = ev.union_bytes
         return packed, pids, remap
 
     def prefetch(self, plan: _Plan) -> _Prep:
@@ -420,21 +468,49 @@ class PrefetchPipeline:
             out.append(self.harvest(infl))
         return out
 
-    def run_pipelined(self, batches) -> list[BatchResult]:
-        """Double-buffered: batch i+1 is planned before batch i's scan is
-        dispatched, then gathered/streamed while that scan is in flight."""
+    def run_pipelined(self, batches, *, depth: int = 1) -> list[BatchResult]:
+        """N-deep pipelining: the next batch is planned before the prepared
+        batch's scan is dispatched, then gathered/streamed while up to
+        ``depth`` scans are in flight.  depth=1 is the PR 2 double buffer;
+        deeper windows keep the device fed when scan ≪ gather (the harvest
+        of batch i is deferred until the window is full, so batch i+1's —
+        and i+2's — scans launch behind it without blocking on readback)."""
         batches = list(batches)
         if not batches:
             return []
-        out = []
+        depth = max(int(depth), 1)
+        out: list[BatchResult] = []
+        inflight: collections.deque = collections.deque()
         prep = self.prefetch(self.plan(*batches[0]))
-        for i in range(len(batches)):
-            nxt = self.plan(*batches[i + 1]) if i + 1 < len(batches) else None
-            infl = self.dispatch(prep)
-            if nxt is not None:
-                prep = self.prefetch(nxt)
-            out.append(self.harvest(infl))
+        i = 1
+        while prep is not None or inflight:
+            if prep is not None and len(inflight) < depth:
+                nxt = self.plan(*batches[i]) if i < len(batches) else None
+                i += 1
+                inflight.append(self.dispatch(prep))
+                prep = self.prefetch(nxt) if nxt is not None else None
+            else:
+                out.append(self.harvest(inflight.popleft()))
         return out
+
+
+def inflight_depth(times: list[StageTimes]) -> int:
+    """Peak number of batches simultaneously in flight on the device stream,
+    measured from the stage stamps: a batch is in flight from its scan
+    dispatch to its harvest.  The N-deep-window evidence is this value
+    (>= 2 means a second scan was dispatched before the first's readback),
+    not an inference from throughput."""
+    events: list[tuple[float, int]] = []
+    for t in times:
+        if t.scan_done > t.scan_dispatch:
+            events.append((t.scan_dispatch, 1))
+            events.append((t.scan_done, -1))
+    events.sort()                  # (-1 sorts before +1 at equal stamps:
+    cur = peak = 0                 # touching intervals don't count as deep)
+    for _, d in events:
+        cur += d
+        peak = max(peak, cur)
+    return peak
 
 
 def overlap_efficiency(times: list[StageTimes]) -> float:

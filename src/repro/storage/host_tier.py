@@ -34,17 +34,26 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass
 class FetchEvent:
-    """Wall-clock stamps of one fetch: host gather, then device stream."""
+    """Wall-clock stamps + union accounting of one fetch: host gather, then
+    device stream.  ``union_bytes`` counts the payload of the REAL union
+    rows only (no sentinel, no bucket padding) — the per-batch quantity
+    locality-aware batch formation minimizes, measured where the gather
+    happens rather than inferred from probe counts upstream."""
     gather_start: float
     gather_end: float     # union gather materialized in host memory
     stream_end: float     # packed tensors handed to the device (device_put)
     rows: int             # packed rows streamed (incl. sentinel/pad rows)
     bytes: int
+    clusters_requested: int = 0   # live probe slots across the batch
+    clusters_union: int = 0       # after cross-query dedup (= gather rows)
+    union_bytes: int = 0          # payload bytes of the deduped union
 
 
 @dataclasses.dataclass
 class TierStats:
     bytes_streamed: int = 0
+    union_bytes_streamed: int = 0  # sum of per-fetch union_bytes (excludes
+                                   # pad/sentinel rows — the locality metric)
     batches: int = 0
     clusters_fetched: int = 0
     clusters_deduped: int = 0
@@ -55,6 +64,7 @@ class TierStats:
 
     def reset(self) -> None:
         self.bytes_streamed = 0
+        self.union_bytes_streamed = 0
         self.batches = 0
         self.clusters_fetched = 0
         self.clusters_deduped = 0
@@ -160,9 +170,15 @@ class TieredPostings:
         dev_remap = jnp.asarray(remap.astype(np.int32))
         t2 = time.perf_counter()
         nbytes = int(packed.nbytes + packed_ids.nbytes)
+        requested = int(live.sum())
+        union_bytes = u * self.cluster_bytes
         self.stats.bytes_streamed += nbytes
+        self.stats.union_bytes_streamed += union_bytes
         self.stats.batches += 1
-        self.stats.clusters_fetched += int(live.sum())
+        self.stats.clusters_fetched += requested
         self.stats.clusters_deduped += u
-        self.stats.record(FetchEvent(t0, t1, t2, rows, nbytes))
+        self.stats.record(FetchEvent(t0, t1, t2, rows, nbytes,
+                                     clusters_requested=requested,
+                                     clusters_union=u,
+                                     union_bytes=union_bytes))
         return dev_packed, dev_ids, dev_remap

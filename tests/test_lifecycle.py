@@ -165,6 +165,75 @@ def test_full_buffer_rejects_with_rebuild_due(small_corpus, small_index):
     assert st.fill == 3                       # partial batch never applied
 
 
+def test_update_lane_deadline_admission_and_covered_deletes(small_corpus):
+    """The update lane mirrors the search lane's admission control: ops the
+    poller reaches past their deadline are shed (not applied stale), and a
+    delete whose ids are all already tombstoned is dropped as covered."""
+    st, x = _mk_state(small_corpus)
+    d = x.shape[1]
+    vt = [0.0]
+    lane = UpdateLane(st, clock=lambda: vt[0])
+    # 1) expired at pump time -> shed, nothing applied, nothing published
+    lane.submit_insert(np.ones((1, d)), deadline_s=0.005)
+    vt[0] = 0.02
+    assert lane.pump(vt[0]) == 0
+    c = lane.qp.poll()[0]
+    assert c.status == "shed" and lane.stats.shed_deadline == 1
+    assert st.fill == 0 and lane.stats.publishes == 0
+    # 2) in-deadline op applies normally
+    lane.submit_insert(np.ones((2, d)), deadline_s=0.05)
+    assert lane.pump(vt[0]) == 1
+    ok = lane.qp.poll()[0]
+    assert ok.status == "ok" and st.fill == 2
+    # 3) first delete applies; an identical one is covered by the newer
+    #    tombstone: dropped without a publish
+    lane.submit_delete(ok.ids)
+    lane.pump(vt[0])
+    assert lane.qp.poll()[0].status == "ok"
+    pubs = lane.stats.publishes
+    lane.submit_delete(ok.ids)
+    lane.pump(vt[0])
+    c2 = lane.qp.poll()[0]
+    assert c2.status == "covered"
+    assert lane.stats.covered_deletes == 1
+    assert lane.stats.publishes == pubs       # no-op saved the device_put
+    # 4) a PARTIALLY covered delete still applies (one id newly dead)
+    ids2 = st.insert(np.ones((1, d)))
+    st.publish()
+    lane.submit_delete(np.concatenate([ok.ids[:1], ids2]))
+    lane.pump(vt[0])
+    assert lane.qp.poll()[0].status == "ok"
+    assert st.n_tombstoned == 3
+
+
+def test_update_deadline_shed_counted_under_storm(small_corpus, small_index):
+    """Deadline admission composes with the quantum drain: ops that expire
+    while queued behind a storm are shed when the poller reaches them,
+    and the shed shows up in stats, not as a late apply."""
+    st, x = _mk_state(small_corpus, capacity=512)
+    vt = [0.0]
+    pipe = _mk_pipe(small_index, st)
+    lane = UpdateLane(st, clock=lambda: vt[0])
+    policy = BatchPolicy(max_batch=16, max_wait_s=0.001, pad=8,
+                         update_quantum=4)
+    batcher = DynamicBatcher(policy, ["idx"])
+    eng = ServeEngine({"idx": pipe}, batcher, clock=lambda: vt[0],
+                      update_lanes={"idx": lane})
+    for _ in range(12):
+        lane.submit_insert(np.zeros((1, x.shape[1])), deadline_s=0.5)
+    # first quantum lands in time; then the clock jumps past the deadline
+    eng.submit(x[0], 5, index="idx")
+    eng.step(now=0.0)
+    vt[0] = 1.0
+    eng.submit(x[1], 5, index="idx")
+    eng.step(now=1.0)
+    eng.submit(x[2], 5, index="idx")
+    eng.step(now=1.0)
+    assert lane.stats.applied_inserts == 4    # the in-deadline quantum
+    assert lane.stats.shed_deadline == 8      # the stale remainder
+    assert st.fill == 4
+
+
 # -------------------------------------------------------------------------
 # epoch swap protocol
 # -------------------------------------------------------------------------

@@ -17,9 +17,13 @@ from repro.runtime import (
     DynamicBatcher,
     PrefetchPipeline,
     QueuePair,
+    RoutePlan,
     SearchRequest,
     ServeEngine,
     bursty_trace,
+    hot_cluster_trace,
+    inflight_depth,
+    locality_skewed_trace,
     multi_tenant_trace,
     overlap_efficiency,
     poisson_trace,
@@ -46,7 +50,7 @@ def streamed_pipeline(small_index):
                             pad_batch=8, row_bucket=32)
 
 
-def _mk_engine(small_index, n_indexes=2, policy=None, clock=None):
+def _mk_engine(small_index, n_indexes=2, policy=None, clock=None, depth=1):
     pipes = {}
     for i in range(n_indexes):
         tier = TieredPostings(np.asarray(small_index.postings),
@@ -55,7 +59,8 @@ def _mk_engine(small_index, n_indexes=2, policy=None, clock=None):
                                             pad_batch=8, row_bucket=32)
     policy = policy or BatchPolicy(max_batch=16, max_wait_s=0.001, pad=8)
     batcher = DynamicBatcher(policy, list(pipes))
-    return ServeEngine(pipes, batcher, clock=clock or (lambda: 0.0))
+    return ServeEngine(pipes, batcher, clock=clock or (lambda: 0.0),
+                       depth=depth)
 
 
 # -------------------------------------------------------------------------
@@ -200,6 +205,135 @@ def test_dup_bound_derived_from_build_replication():
 
 
 # -------------------------------------------------------------------------
+# batcher: deadline-estimate fixed point, shared due predicate, locality
+# -------------------------------------------------------------------------
+def _req(i, deadline, t=0.0, index="a", route=None):
+    return SearchRequest(req_id=i, index=index,
+                         query=np.zeros(4, np.float32), topk=5,
+                         deadline=deadline, arrival=t, route=route)
+
+
+def _routed_req(i, clusters, t=0.0, index="a"):
+    cids = np.full(8, -1, np.int32)
+    cids[: len(clusters)] = clusters
+    return _req(i, None, t=t, index=index,
+                route=RoutePlan(cids=cids, nprobe=len(clusters),
+                                probe_set=frozenset(clusters), source=None))
+
+
+def test_form_estimates_recomputed_on_kept_set():
+    """Regression for the pre-shed estimate bug: ``form`` judged every
+    request against ``est = overhead + est_query_s * len(reqs)`` computed
+    BEFORE shedding, so a survivor was shed/degraded because of peers that
+    were themselves just shed.  With overhead 1ms and 10ms/query: the
+    pre-shed batch of 4 estimates 41ms full / 21ms degraded, which sheds
+    S2 (13ms budget) and degrades S1 (25ms budget) — but once the two
+    doomed 7ms requests are dropped, the kept batch of 2 runs in 21ms full
+    / 11ms degraded, so S2 fits degraded and S1 fits at FULL quality."""
+    policy = BatchPolicy(max_batch=8, max_wait_s=0.0, shed="degrade",
+                         degrade_nprobe=2, degrade_speedup=2.0,
+                         overhead_s=1e-3, init_query_s=10e-3, ewma=0.0)
+    b = DynamicBatcher(policy, ["a"])
+    for i, dl in enumerate((0.007, 0.007, 0.013, 0.025)):
+        assert b.add(_req(i, dl), now=0.0) is None   # all pass admission
+    mb, sheds = b.form(0.0)
+    assert sorted(c.req_id for c in sheds) == [0, 1]   # truly doomed
+    assert [r.req_id for r in mb.requests] == [2, 3]   # survivors KEPT
+    assert mb.degraded.tolist() == [True, False]       # S1 at full quality
+    assert mb.nprobe_cap.tolist() == [2, 0]
+    assert b.stats.shed_deadline == 2 and b.stats.degraded == 1
+
+
+def test_ready_and_form_share_due_predicate():
+    policy = BatchPolicy(max_batch=4, max_wait_s=0.01, shed="none")
+    b = DynamicBatcher(policy, ["a", "b"])
+    b.add(_req(1, None, t=0.0), now=0.0)
+    # young + underfull: not due — ready and form must agree (shared helper)
+    assert not b.ready(0.005)
+    assert b.form(0.005) == (None, [])
+    # head-of-line aged: both flip together
+    assert b.ready(0.011)
+    mb, _ = b.form(0.011)
+    assert mb is not None and len(mb.requests) == 1
+    # fullness triggers regardless of age
+    for i in range(4):
+        b.add(_req(10 + i, None, t=0.02), now=0.02)
+    assert b.ready(0.02)
+    mb, _ = b.form(0.02)
+    assert len(mb.requests) == 4
+    # force drain: both queues drain, round-robin, deterministically
+    b.add(_req(20, None, t=0.03), now=0.03)
+    b.add(_req(21, None, t=0.03, index="b"), now=0.03)
+    assert not b.ready(0.03)
+    first, _ = b.form(0.03, force=True)
+    second, _ = b.form(0.03, force=True)
+    assert {first.index, second.index} == {"a", "b"}
+    assert b.form(0.03, force=True) == (None, [])
+
+
+def test_locality_grouping_packs_by_probe_overlap():
+    import dataclasses as _dc
+    policy = BatchPolicy(max_batch=4, max_wait_s=10.0, shed="none",
+                         grouping="locality")
+    ga, gb = (1, 2, 3), (7, 8, 9)
+    b = DynamicBatcher(policy, ["a"])
+    # interleaved arrivals from two disjoint probe neighborhoods
+    for i in range(8):
+        b.add(_routed_req(i, ga if i % 2 == 0 else gb), now=0.0)
+    mb1, _ = b.form(0.0)
+    mb2, _ = b.form(0.0)
+    assert [r.req_id for r in mb1.requests] == [0, 2, 4, 6]   # unmixed,
+    assert [r.req_id for r in mb2.requests] == [1, 3, 5, 7]   # FIFO inside
+    assert mb1.probe_union == frozenset(ga)
+    assert mb2.probe_union == frozenset(gb)
+    assert b.stats.locality_batches == 2
+    # FIFO mode on the same arrivals mixes both groups (the A/B baseline)
+    bf = DynamicBatcher(_dc.replace(policy, grouping="fifo"), ["a"])
+    for i in range(8):
+        bf.add(_routed_req(i, ga if i % 2 == 0 else gb), now=0.0)
+    mbf, _ = bf.form(0.0)
+    assert [r.req_id for r in mbf.requests] == [0, 1, 2, 3]
+    assert mbf.probe_union == frozenset(ga) | frozenset(gb)
+
+
+def test_locality_aging_guard_seeds_skipped_requests():
+    policy = BatchPolicy(max_batch=4, max_wait_s=0.01, shed="none")
+    hot, cold = (1, 2, 3), (40, 41)
+    b = DynamicBatcher(policy, ["a"])
+    b.add(_routed_req(0, hot, t=0.0), now=0.0)
+    b.add(_routed_req(1, hot, t=0.0), now=0.0)
+    b.add(_routed_req(2, cold, t=0.0), now=0.0)       # the outlier
+    for i in range(3, 9):
+        b.add(_routed_req(i, hot, t=0.001), now=0.001)
+    # due by fullness at t=1ms: nothing aged yet, locality skips the outlier
+    mb, _ = b.form(0.001)
+    assert 2 not in [r.req_id for r in mb.requests]
+    assert mb.probe_union == frozenset(hot)
+    # by t=11ms the outlier has aged past max_wait_s: it MUST seed the next
+    # batch even though it shares no clusters with anyone
+    for i in range(9, 12):
+        b.add(_routed_req(i, hot, t=0.011), now=0.011)
+    mb2, _ = b.form(0.011)
+    assert 2 in [r.req_id for r in mb2.requests]
+    assert frozenset(cold) <= mb2.probe_union
+    assert b.stats.aged_seeds > 0
+
+
+def test_union_growth_cap_releases_tight_partial_batches():
+    policy = BatchPolicy(max_batch=4, max_wait_s=10.0, shed="none",
+                         union_growth_cap=1)
+    b = DynamicBatcher(policy, ["a"])
+    b.add(_routed_req(0, (1, 2, 3)), now=0.0)
+    b.add(_routed_req(1, (1, 2, 3)), now=0.0)
+    b.add(_routed_req(2, (50, 51, 52)), now=0.0)      # would add 3 clusters
+    b.add(_routed_req(3, (1, 2, 4)), now=0.0)         # adds just 1
+    mb, _ = b.form(0.0)
+    assert [r.req_id for r in mb.requests] == [0, 1, 3]   # outlier deferred
+    mb2, _ = b.form(10.5)                              # ages, then releases
+    assert [r.req_id for r in mb2.requests] == [2]
+
+
+# -------------------------------------------------------------------------
 # engine: ordering, shedding determinism, fairness
 # -------------------------------------------------------------------------
 def test_engine_per_index_fifo(small_index, queries):
@@ -295,6 +429,161 @@ def test_engine_threaded_drain(small_index, queries):
     comps = eng.qp.poll()
     assert len(comps) == n == eng.stats.completed
     assert all(c.status == "ok" for c in comps)
+
+
+def test_engine_deep_window_threaded_drain(small_index, queries):
+    """depth=3: the poller keeps several batches in flight; every admitted
+    request still completes exactly once, per-index FIFO preserved (fifo
+    grouping — locality may legitimately reorder across batches, so the
+    order assert would race the wall clock under it)."""
+    q, _ = queries
+    import time as _time
+    policy = BatchPolicy(max_batch=16, max_wait_s=0.001, pad=8,
+                         grouping="fifo")
+    eng = _mk_engine(small_index, policy=policy, clock=None, depth=3)
+    eng.clock = _time.monotonic
+    eng.start()
+    n = 0
+    for i in range(60):
+        n += eng.submit(q[i % 64], 5, index=f"idx{i % 2}") >= 0
+    eng.stop(drain=True)
+    comps = eng.qp.poll()
+    assert len(comps) == n == eng.stats.completed
+    assert all(c.status == "ok" for c in comps)
+    for name in ("idx0", "idx1"):
+        seq = [c.req_id for c in comps if c.index == name]
+        assert seq == sorted(seq)
+
+
+def test_engine_routes_at_admission(small_index, queries):
+    """Requests carry a RoutePlan whose probe signature is exactly what the
+    pipeline's plan stage would compute: bursts are routed eagerly at SQ
+    drain (group >= pad amortizes the call), trickles in one pooled call
+    at formation — either way, at most once per request."""
+    q, _ = queries
+    eng = _mk_engine(small_index, n_indexes=1)
+    pipe = eng.pipelines["idx0"]
+    # burst path: drained group of 8 >= pad=8 -> routed at admission
+    for i in range(8):
+        eng.submit(q[i], 5, index="idx0")
+    eng._drain_sq(0.0)
+    reqs = list(eng.batcher._pending["idx0"])
+    assert len(reqs) == 8
+    assert all(r.route is not None for r in reqs)
+    cids, npb = pipe.route(q[:8], np.full(8, 5, np.int32))
+    for i, r in enumerate(reqs):
+        want = frozenset(int(c) for c in cids[i, : int(npb[i])] if c >= 0)
+        assert r.route.probe_set == want and len(want) > 0
+        assert r.route.source is pipe
+    while eng.step(now=1.0):
+        pass
+    comps = eng.qp.poll()
+    assert len(comps) == 8 and all(c.status == "ok" for c in comps)
+    # trickle path: below-pad drains stay unrouted until formation pools
+    # them into one routing call
+    for i in range(3):
+        eng.submit(q[i], 5, index="idx0")
+        eng._drain_sq(0.0)
+    reqs = list(eng.batcher._pending["idx0"])
+    assert all(r.route is None for r in reqs)
+    mb, _ = eng.batcher.form(1.0, force=False)     # head aged -> due
+    assert mb is not None and len(mb.requests) == 3
+    assert all(r.route is not None and r.route.source is pipe
+               for r in mb.requests)
+
+
+def test_route_reuse_matches_replan(streamed_pipeline, queries):
+    """plan(routed=...) must be bit-identical to plan() recomputing the
+    centroid scan — the admission-time routing is moved, not approximated."""
+    q, topk = queries
+    cids, nprobe = streamed_pipeline.route(q[:16], topk[:16])
+    plan_r = streamed_pipeline.plan(q[:16], topk[:16],
+                                    routed=(cids, nprobe))
+    assert plan_r.times.routed
+    out_r = streamed_pipeline.harvest(streamed_pipeline.dispatch(
+        streamed_pipeline.prefetch(plan_r)))
+    out = streamed_pipeline.serve_batch(q[:16], topk[:16])
+    np.testing.assert_array_equal(out.ids, out_r.ids)
+    np.testing.assert_allclose(out.dists, out_r.dists)
+    np.testing.assert_array_equal(out.nprobe, out_r.nprobe)
+
+
+def test_run_pipelined_depth(streamed_pipeline, queries):
+    q, topk = queries
+    batches = [(q[i * 8:(i + 1) * 8], topk[i * 8:(i + 1) * 8])
+               for i in range(6)]
+    base = streamed_pipeline.run_sequential(batches)
+    deep = streamed_pipeline.run_pipelined(batches, depth=3)
+    for s, p in zip(base, deep):
+        np.testing.assert_array_equal(s.ids, p.ids)
+    # stamp evidence: >= 2 scans in flight at once with a deep window,
+    # never more than 1 in the sequential and 1-deep drivers
+    assert inflight_depth([r.times for r in deep]) >= 2
+    assert inflight_depth([r.times for r in base]) == 1
+    shallow = streamed_pipeline.run_pipelined(batches, depth=1)
+    assert inflight_depth([r.times for r in shallow]) == 1
+    for s, p in zip(base, shallow):
+        np.testing.assert_array_equal(s.ids, p.ids)
+
+
+def test_multi_tenant_starvation_guard_under_locality(small_index, queries):
+    """A hot-cluster tenant must not delay a cold tenant's head-of-line
+    request past max_wait_s under locality grouping (seeded trace, virtual
+    clock — the decision sequence replays bit-for-bit)."""
+    from repro.runtime import merge_timelines
+    q, _ = queries
+    policy = BatchPolicy(max_batch=8, max_wait_s=0.002, pad=8, shed="none",
+                         grouping="locality")
+    hot = poisson_trace(3000.0, 0.1, seed=5, index="idx0")
+    cold = poisson_trace(80.0, 0.1, seed=6, index="idx1")
+    trace = merge_timelines(hot, cold)
+    assert any(a.index == "idx1" for a in trace)
+    logs = []
+    for _ in range(2):
+        vt = [0.0]
+        eng = _mk_engine(small_index, policy=policy, clock=lambda: vt[0])
+        log = []
+        for arr in trace:
+            vt[0] = arr.t
+            eng.submit(q[arr.qrow % 64], 5, index=arr.index)
+            eng.step(now=arr.t, force=False)   # drain SQ, form if due
+            while eng.batcher.ready(arr.t):    # both tenants due: form all
+                eng.step(now=arr.t, force=False)
+            log += [(c.req_id, c.index) for c in eng.qp.poll()]
+        vt[0] = trace[-1].t + policy.max_wait_s + 1e-4
+        while eng.step(now=vt[0], force=False):
+            pass
+        log += [(c.req_id, c.index) for c in eng.qp.poll()]
+        assert eng.batcher.pending() == 0
+        # the aging bound: formation opportunities in this replay exist
+        # only at arrival times, so no request (either tenant) may wait
+        # past max_wait_s plus the largest inter-arrival gap
+        slack = max(y.t - x.t for x, y in zip(trace, trace[1:])) + 2e-4
+        assert eng.batcher.stats.max_queue_wait_s \
+            <= policy.max_wait_s + slack
+        assert len(log) == len(trace)
+        logs.append(log)
+    assert logs[0] == logs[1]                 # deterministic replay
+
+
+# -------------------------------------------------------------------------
+# loadgen: locality-skewed + hot-cluster traces
+# -------------------------------------------------------------------------
+def test_locality_traces_deterministic_and_skewed():
+    kw = dict(n_queries=640, n_groups=8, concurrency=4, seed=2)
+    a = locality_skewed_trace(500, 1.0, **kw)
+    assert a == locality_skewed_trace(500, 1.0, **kw)
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+    gs = 640 // 8
+    assert len({arr.qrow // gs for arr in a}) > 1   # interleaved groups
+    # within a stream, group persistence: consecutive same-group arrivals
+    # dominate (switch_p is small), so short windows are locality-skewed
+    h = hot_cluster_trace(500, 1.0, n_queries=640, hot_frac=0.05,
+                          hot_weight=0.9, seed=3)
+    assert h == hot_cluster_trace(500, 1.0, n_queries=640, hot_frac=0.05,
+                                  hot_weight=0.9, seed=3)
+    n_hot = sum(1 for arr in h if arr.qrow < 32)
+    assert n_hot > 0.7 * len(h)               # hot slice carries the mass
 
 
 # -------------------------------------------------------------------------
