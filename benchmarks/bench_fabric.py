@@ -1,0 +1,267 @@
+"""Sharded-fabric bench — scaling sweep + the kill-a-shard drill (PR 6).
+
+Two experiments against the replicated serving fabric
+(``repro.distributed.ShardedFabric``), both seeded and replayable:
+
+1. **Scaling sweep** — the same query stream through S = 1/2/4/8 simulated
+   shards.  The container is ONE core, so S worker threads time-share it
+   and wall q/s cannot scale; what IS measured per shard is scan-busy
+   seconds from per-task service stamps, and the bottleneck-shard model
+   ``virtual_qps = n_queries / max_s(busy_s[s])`` gives the throughput an
+   S-host deployment would see (each host runs its shard's measured work
+   in parallel; the fan-out is embarrassingly parallel and the merge is
+   on the router).  Wall q/s is reported alongside, unmodeled.  The gate:
+   merged top-k BIT-EQUAL to S=1 at every S (equal recall by construction),
+   and near-linear virtual scaling to S=8.
+2. **Kill-a-shard drill** — shard-skewed live traffic through ServeEngine,
+   a seeded FaultInjector kills the hot shard mid-trace.  Gates: ZERO
+   dropped queries (every submission completes "ok" — the hot shard's
+   primaries are R=2-replicated, so failover loses nothing), recall@10
+   parity within 0.002 before/after failover, and a bounded p99 over the
+   failover cohort (queries in flight around the kill), reported as the
+   failover gap.
+
+``--smoke`` is the scaled-down CI copy with every gate asserted.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from common import emit, save_result
+
+from repro.build.kmeans import balanced_hierarchical_kmeans
+from repro.core.distance import recall_at_k
+from repro.core.ivf import IVFIndex, brute_force_topk, build_postings
+from repro.core.search import SearchConfig
+from repro.core.spann_rules import closure_assign
+from repro.data import PAPER_DATASETS, make_queries, make_vectors
+from repro.distributed import FaultInjector, ShardedFabric
+from repro.runtime import (
+    BatchPolicy,
+    DynamicBatcher,
+    ServeEngine,
+    latency_percentiles,
+    shard_skewed_trace,
+)
+
+import dataclasses as dc
+
+
+def build_corpus(smoke: bool):
+    if smoke:
+        n, dim, n_modes, max_cluster, clen, nq = 4000, 24, 16, 48, 64, 256
+    else:
+        n, dim, n_modes, max_cluster, clen, nq = 20_000, 32, 32, 96, 128, 512
+    spec = dc.replace(PAPER_DATASETS["sift"], n=n, dim=dim, n_modes=n_modes)
+    x = make_vectors(spec)
+    q, _ = make_queries(spec, nq)
+    cents, _ = balanced_hierarchical_kmeans(x, max_cluster_size=max_cluster,
+                                            iters=8, fused=True)
+    ca = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                   eps=0.2, max_replicas=4))
+    postings, pids = build_postings(x, ca, cents.shape[0], clen)
+    index = IVFIndex(jnp.asarray(cents), jnp.asarray(postings),
+                     jnp.asarray(pids))
+    _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+    return index, q.astype(np.float32), np.asarray(t10)
+
+
+def run_batches(fab: ShardedFabric, q: np.ndarray, k: int,
+                batch: int = 32, passes: int = 2):
+    """Drive the live stage protocol batch by batch; returns (ids, wall)."""
+    out = []
+    t0 = time.perf_counter()
+    for _ in range(passes):
+        for lo in range(0, len(q), batch):
+            plan = fab.plan(q[lo:lo + batch], k)
+            res = fab.harvest(fab.dispatch(fab.prefetch(plan)))
+            out.append(res.ids)
+    wall = time.perf_counter() - t0
+    return np.concatenate(out[:len(out) // passes]), wall
+
+
+def scaling_sweep(index, q, true10, shard_counts, k: int = 10) -> list[dict]:
+    n_clusters = int(np.asarray(index.postings).shape[0])
+    cfg = SearchConfig(k=k, nprobe_max=16, pruning="none",
+                      use_kernel=False, fused_topk=True)
+    rows, ref_ids, base_vqps = [], None, None
+    passes = 2
+    for s in shard_counts:
+        fab = ShardedFabric(index, None, cfg, n_shards=s,
+                            hot_clusters=np.arange(n_clusters))
+        fab.warmup()
+        fab.start()
+        try:
+            ids, wall = run_batches(fab, q, k, passes=passes)
+        finally:
+            fab.stop()
+        n_served = len(q) * passes
+        busy = fab.stats.busy_s
+        virtual_qps = n_served / float(busy.max())
+        if ref_ids is None:
+            ref_ids, base_vqps = ids, virtual_qps
+        rows.append({
+            "shards": s,
+            "wall_qps": n_served / wall,
+            "virtual_qps": virtual_qps,
+            "speedup_vs_s1": virtual_qps / base_vqps,
+            "busy_s_per_shard": busy.tolist(),
+            "busy_imbalance": float(busy.max() / max(busy.mean(), 1e-12)),
+            "tasks_per_shard": fab.stats.tasks_per_shard.tolist(),
+            "bit_equal_vs_s1": bool(np.array_equal(ids, ref_ids)),
+            "recall_at_10": float(recall_at_k(ids[:, :10], true10)),
+        })
+        print(f"[fabric] S={s}: virtual {virtual_qps:7.0f} q/s "
+              f"(x{rows[-1]['speedup_vs_s1']:.2f}), wall "
+              f"{rows[-1]['wall_qps']:5.0f} q/s, imbalance "
+              f"{rows[-1]['busy_imbalance']:.2f}, "
+              f"bit_equal={rows[-1]['bit_equal_vs_s1']}", flush=True)
+    return rows
+
+
+def kill_drill(index, q, true10, n_shards: int, smoke: bool,
+               seed: int, k: int = 10) -> dict:
+    cfg = SearchConfig(k=k, nprobe_max=16, pruning="none",
+                      use_kernel=False, fused_topk=True)
+    victim = 1
+    rate, duration, kill_at = (300.0, 1.0, 0.3) if smoke \
+        else (500.0, 2.0, 0.8)
+    probe = ShardedFabric(index, None, cfg, n_shards=n_shards)
+    hot = np.nonzero(probe.rmap0.replicas[:, 0] == victim)[0]
+    inj = FaultInjector(seed=seed).kill(kill_at, shard=victim)
+    fab = ShardedFabric(index, None, cfg, n_shards=n_shards,
+                        hot_clusters=hot, injector=inj,
+                        hedge_after_s=0.05, tick_s=0.02)
+    fab.warmup()
+    rec_before = float(recall_at_k(
+        fab.scan_sync(q, k).ids[:, :10], true10))
+    fab.start()
+    eng = ServeEngine({"default": fab},
+                      DynamicBatcher(BatchPolicy(max_batch=16,
+                                                 max_wait_s=0.004),
+                                     ["default"]))
+    eng.start()
+    hot_rows = np.nonzero(fab.query_shards(q) == victim)[0]
+    trace = shard_skewed_trace(rate, duration, len(q), hot_rows, seed=seed)
+    t0 = time.monotonic()
+    inj.arm(t0)
+    try:
+        for a in trace:
+            lag = t0 + a.t - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            eng.submit(q[a.qrow], k)
+    finally:
+        eng.stop(drain=True)
+        fab.stop()
+    comps = eng.qp.poll()
+    rec_after = float(recall_at_k(
+        fab.scan_sync(q, k).ids[:, :10], true10))
+    lat = [c.latency for c in comps]
+    kill_t = t0 + inj.log[0][0] if inj.log else None
+    # failover cohort: queries in flight around the kill — their p99 is
+    # the client-visible failover gap
+    gap = [c.latency for c in comps
+           if kill_t is not None
+           and kill_t - 0.1 <= c.submitted <= kill_t + 0.5]
+    st = eng.stats
+    drill = {
+        "shards": n_shards, "victim": victim, "kill_at_s": kill_at,
+        "offered_qps": rate, "duration_s": duration,
+        "hot_query_rows": int(hot_rows.size),
+        "replicated_clusters": int(hot.size),
+        "submitted": st.submitted, "completed": st.completed,
+        "dropped": st.submitted - st.rejected - st.completed,
+        "rejected": st.rejected, "shed": st.shed,
+        "failed": st.failed, "partial": st.partial,
+        "statuses": sorted(set(c.status for c in comps)),
+        "failovers": fab.stats.failovers,
+        "dead_replies": fab.stats.dead_replies,
+        "requeued_tasks": fab.stats.requeued_tasks,
+        "hedges": fab.stats.hedges,
+        "timeouts": fab.stats.timeouts,
+        "recall10_before": rec_before,
+        "recall10_after": rec_after,
+        "latency": latency_percentiles(lat),
+        "failover_gap": latency_percentiles(gap) if gap else None,
+        "fault_log": [{"t_s": t, "kind": kk, "shard": s}
+                      for t, kk, s in inj.log],
+    }
+    print(f"[drill] S={n_shards} kill shard {victim} @ {kill_at}s: "
+          f"{st.completed}/{st.submitted} completed, dropped="
+          f"{drill['dropped']}, statuses={drill['statuses']}, "
+          f"failovers={[(f['shard'], f['lost']) for f in drill['failovers']]}, "
+          f"recall {rec_before:.3f} -> {rec_after:.3f}", flush=True)
+    if gap:
+        print(f"[drill] failover gap p99 "
+              f"{drill['failover_gap']['p99_ms']:.0f}ms over {len(gap)} "
+              f"in-flight queries (steady-state p99 "
+              f"{drill['latency']['p99_ms']:.0f}ms)", flush=True)
+    return drill
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down CI run with assertions")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    index, q, true10 = build_corpus(args.smoke)
+    shard_counts = [1, 2, 4, 8]
+    drill_shards = 4 if args.smoke else 8
+
+    scaling = scaling_sweep(index, q, true10, shard_counts)
+    drill = kill_drill(index, q, true10, drill_shards, args.smoke,
+                       args.seed)
+
+    result = {
+        "mode": "smoke" if args.smoke else "full",
+        "corpus": {"n": int(np.asarray(index.postings).shape[0])
+                        * int(index.cluster_len),
+                   "clusters": int(np.asarray(index.postings).shape[0]),
+                   "n_queries": len(q)},
+        "scaling": scaling,
+        "kill_drill": drill,
+    }
+    save_result("bench_fabric", result)
+
+    top = scaling[-1]
+    emit("fabric_scaling", 1e6 / top["virtual_qps"],
+         f"S={top['shards']} virtual={top['virtual_qps']:.0f}q/s "
+         f"x{top['speedup_vs_s1']:.2f} bit_equal={top['bit_equal_vs_s1']}")
+    emit("fabric_kill_drill", 1e6 / max(drill["completed"]
+                                        / drill["duration_s"], 1e-9),
+         f"S={drill['shards']} dropped={drill['dropped']} "
+         f"recall {drill['recall10_before']:.3f}->"
+         f"{drill['recall10_after']:.3f}")
+
+    # acceptance gates (ISSUE 6)
+    assert all(r["bit_equal_vs_s1"] for r in scaling), \
+        "cross-shard merge is not bit-equal to single-shard"
+    s8 = scaling[-1]
+    assert s8["speedup_vs_s1"] >= 0.5 * s8["shards"], \
+        f"virtual scaling fell below 0.5x linear: {s8['speedup_vs_s1']:.2f}"
+    assert drill["dropped"] == 0, "kill drill dropped queries"
+    assert drill["failed"] == 0 and drill["partial"] == 0, \
+        "kill drill degraded queries despite full replication of the victim"
+    assert drill["failovers"] and drill["failovers"][0]["shard"] == 1 \
+        and drill["failovers"][0]["lost"] == 0, "failover lost clusters"
+    assert abs(drill["recall10_before"] - drill["recall10_after"]) <= 0.002, \
+        "recall parity broken across failover"
+    assert drill["failover_gap"] is None or \
+        drill["failover_gap"]["p99_ms"] <= 5000.0, \
+        "failover gap unbounded (exceeded the harvest timeout)"
+    mode = "smoke" if args.smoke else "full"
+    print(f"[{mode}] fabric OK: S={s8['shards']} "
+          f"x{s8['speedup_vs_s1']:.2f} virtual scaling, zero-drop kill "
+          f"drill, recall parity "
+          f"{abs(drill['recall10_before'] - drill['recall10_after']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

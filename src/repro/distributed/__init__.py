@@ -1,3 +1,11 @@
 from .collectives import bucketed_psum, compressed_psum, compressed_psum_tree
-from .fault import FailoverPlan, HeartbeatMonitor, ownership_mask, plan_failover
+from .fabric import FabricStats, ShardNode, ShardReply, ShardTask, ShardedFabric
+from .fault import (
+    FailoverPlan,
+    FaultEvent,
+    FaultInjector,
+    HeartbeatMonitor,
+    ownership_mask,
+    plan_failover,
+)
 from . import sharding

@@ -42,7 +42,12 @@ from repro.core.ivf import brute_force_topk
 from repro.core.llsp import LLSPConfig
 from repro.core.search import SearchConfig
 from repro.data import PAPER_DATASETS, make_queries, make_vectors
-from repro.distributed import HeartbeatMonitor, plan_failover
+from repro.distributed import (
+    FaultInjector,
+    HeartbeatMonitor,
+    ShardedFabric,
+    plan_failover,
+)
 from repro.lifecycle import VersionManager
 from repro.runtime import (
     BatchPolicy,
@@ -143,8 +148,121 @@ def probe_recall(engine: ServeEngine, dep: Deployment,
     return recall_at_k(ids[:, :10], dep.true10[rows])
 
 
+def run_fabric(args) -> None:
+    """Fabric drill mode (``--shards > 0``): one index served behind the
+    sharded, replicated fabric; optional seeded kill mid-trace."""
+    scfg = SearchConfig(k=10, nprobe_max=16, pruning="llsp", n_ratio=8,
+                        use_kernel=not args.no_kernel, fused_topk=True)
+    arena = ChunkArena(n_devices=12, device_bytes=1 << 30,
+                       chunk_bytes=1 << 20)
+    deadline_s = args.deadline_ms * 1e-3 or None
+    name = list(PAPER_DATASETS)[0]
+    with tempfile.TemporaryDirectory() as root:
+        spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
+        dep = deploy(arena, name, spec, os.path.join(root, name),
+                     args.shards, scfg)
+        inj = None
+        if args.kill_shard_at > 0:
+            inj = FaultInjector(seed=0).kill(args.kill_shard_at)
+        hot = (np.arange(dep.index.n_clusters) if args.replicas > 1
+               else None)
+        fab = ShardedFabric(dep.index, dep.llsp, scfg,
+                            n_shards=args.shards,
+                            n_replicas=args.replicas, hot_clusters=hot,
+                            injector=inj, hedge_after_s=0.05, tick_s=0.02)
+        fab.warmup()
+        fab.start()
+        engine = ServeEngine(
+            {name: fab},
+            DynamicBatcher(BatchPolicy(max_batch=args.batch,
+                                       max_wait_s=0.05), [name]),
+            depth=args.depth)
+        engine.start()
+        trace = multi_tenant_trace(
+            [TenantSpec(name, args.rate, topk_lo=10, topk_hi=50,
+                        deadline_s=deadline_s, n_queries=256)],
+            args.duration)
+        print(f"[fabric] {args.shards} shards x R={args.replicas}, "
+              f"replaying {len(trace)} arrivals over {args.duration:.0f}s"
+              + (f", kill drill at t={args.kill_shard_at:.1f}s"
+                 if inj is not None else ""))
+        t0 = time.monotonic()
+        if inj is not None:
+            inj.arm(t0)
+        lat: list[float] = []
+        try:
+            for arr in trace:
+                lag = t0 + arr.t - time.monotonic()
+                if lag > 0:
+                    time.sleep(lag)
+                engine.submit(dep.queries[arr.qrow], arr.topk, index=name,
+                              deadline_s=arr.deadline_s)
+            r = probe_recall(engine, dep, lat, name)
+        finally:
+            engine.stop(drain=True)
+            fab.stop()
+        lat += [c.latency for c in engine.qp.poll()
+                if c.status != "shed"]
+        st, fs = engine.stats, fab.stats
+        wall = time.monotonic() - t0
+        pct = latency_percentiles(lat)
+        print(f"[fabric] {st.completed} completions in {wall:.1f}s "
+              f"({(st.completed - st.shed) / wall:.0f} q/s), "
+              f"p50={pct['p50_ms']:.0f}ms p99={pct['p99_ms']:.0f}ms, "
+              f"shed={st.shed} partial={st.partial} failed={st.failed}")
+        for f in fs.failovers:
+            print(f"[fault] shard {f['shard']} failed over: "
+                  f"{f['moved']} clusters moved to replicas, "
+                  f"{f['lost']} lost")
+        if inj is not None:
+            print(f"[fault] injector log: "
+                  f"{[(round(t, 2), k, s) for t, k, s in inj.log]}, "
+                  f"dead_replies={fs.dead_replies} "
+                  f"requeued={fs.requeued_tasks} hedges={fs.hedges}")
+        print(f"[fabric] busy_s per shard: "
+              f"{[round(b, 3) for b in fs.busy_s.tolist()]}, tasks "
+              f"{fs.tasks_per_shard.tolist()}")
+        print(f"[health] {name}: recall@10={r:.3f} through the engine, "
+              f"dropped={st.submitted - st.rejected - st.completed}")
+        undeploy(arena, dep)
+        arena.validate()
+
+
+FABRIC_RUNBOOK = """\
+operator runbook — sharded fabric mode (--shards > 0):
+
+  Serve one index behind the sharded, replicated fabric instead of the
+  single-node pipeline.  Probed clusters fan out to owner shards by
+  power-of-two-choices over live replicas; shard death is detected by
+  dead-letter CQ replies or missed heartbeats, failover reroutes probes
+  to replicas, stragglers are hedged, and clusters with no live replica
+  degrade the touching responses to status="partial" — never a dropped
+  query.
+
+  --shards S          number of simulated shards (worker threads)
+  --replicas R        copies per cluster: R=2 survives any single shard
+                      death with zero loss; R=1 degrades to partial
+  --kill-shard-at T   chaos drill: at T seconds a seeded FaultInjector
+                      kills one live shard (victim drawn from a seeded
+                      generator, so the drill replays exactly); watch
+                      the [fault] lines for the failover plan and the
+                      final [health] recall probe for parity
+
+  drills:
+    # zero-drop kill drill: 8 shards, R=2, shard dies mid-trace
+    serve --shards 8 --replicas 2 --kill-shard-at 4 --duration 8
+    # same but unreplicated: expect partial responses, not drops
+    serve --shards 8 --replicas 1 --kill-shard-at 4 --duration 8
+
+  --rebuild and --fail-shard belong to the single-node mode and are
+  rejected when --shards is set (fabric epoch swap is future work).
+"""
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog=FABRIC_RUNBOOK,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--indexes", type=int, default=2)
     ap.add_argument("--duration", type=float, default=8.0,
                     help="seconds of traffic")
@@ -168,7 +286,27 @@ def main() -> None:
     ap.add_argument("--no-kernel", action="store_true",
                     help="packed-domain jnp oracle instead of the Pallas "
                          "kernel (interpret-mode on CPU)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="serve through the sharded fabric with this many "
+                         "shards (0 = single-node pipeline; see runbook "
+                         "below)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fabric mode: replicas per cluster (R>=2 for "
+                         "zero-loss failover)")
+    ap.add_argument("--kill-shard-at", type=float, default=0.0,
+                    help="fabric mode: kill a seeded-random live shard at "
+                         "this many seconds into the trace (0 = no drill)")
     args = ap.parse_args()
+
+    if args.shards > 0:
+        if args.rebuild:
+            ap.error("--rebuild needs the single-node pipeline; the fabric "
+                     "has no epoch-swap path yet (drop --shards)")
+        if args.fail_shard >= 0:
+            ap.error("--fail-shard is the single-node heartbeat simulation; "
+                     "in fabric mode use --kill-shard-at for a live kill")
+        run_fabric(args)
+        return
 
     n_shards = 8
     arena = ChunkArena(n_devices=12, device_bytes=1 << 30, chunk_bytes=1 << 20)

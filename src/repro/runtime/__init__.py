@@ -41,6 +41,7 @@ from .loadgen import (
     merge_timelines,
     multi_tenant_trace,
     poisson_trace,
+    shard_skewed_trace,
     update_trace,
 )
 from .pipeline import (

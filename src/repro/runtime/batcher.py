@@ -150,6 +150,16 @@ class DynamicBatcher:
             return len(self._pending[index])
         return sum(len(q) for q in self._pending.values())
 
+    def drain_pending(self) -> list:
+        """Pull EVERY pending request out, FIFO within each index, indexes
+        in registration order — the engine's no-drain shutdown path
+        completes these as shed instead of abandoning them."""
+        out: list = []
+        for q in self._pending.values():
+            while q:
+                out.append(q.popleft())
+        return out
+
     def observe(self, batch_size: int, service_s: float) -> None:
         """Fold a measured batch service time into the per-query EWMA."""
         if batch_size <= 0:

@@ -67,7 +67,12 @@ class SearchRequest:
 
 @dataclasses.dataclass
 class Completion:
-    """CQ entry.  status: "ok" | "degraded" | "shed"."""
+    """CQ entry.  status: "ok" | "degraded" | "shed" | "partial" | "failed".
+
+    "partial": answered from an incomplete shard set (the fabric's
+    graceful-degrade path — ids/dists are valid but may miss candidates
+    from lost clusters).  "failed": the serving path itself errored; the
+    request is completed (never abandoned) with no payload."""
     req_id: int
     index: str
     status: str
@@ -193,6 +198,8 @@ class EngineStats:
     completed: int = 0
     shed: int = 0
     degraded: int = 0
+    partial: int = 0                # answered from an incomplete shard set
+    failed: int = 0                 # serving-path error; completed w/o payload
     batches: int = 0
     service_s: float = 0.0          # summed batch service time
 
@@ -354,8 +361,14 @@ class ServeEngine:
 
     def _complete_batch(self, mb, result, done: float, epoch=None) -> None:
         comps = []
+        partial = getattr(result, "partial", None)
         for i, req in enumerate(mb.requests):
             status = "degraded" if mb.degraded[i] else "ok"
+            if partial is not None and partial[i]:
+                # fabric degraded mode outranks nprobe degradation: the
+                # client must know the shard set was incomplete
+                status = "partial"
+                self.stats.partial += 1
             comps.append(Completion(
                 req_id=req.req_id, index=req.index, status=status,
                 ids=result.ids[i], dists=result.dists[i],
@@ -411,8 +424,20 @@ class ServeEngine:
         if all(rt is not None and rt.source is pipe for rt in routes):
             routed = (np.stack([rt.cids for rt in routes]),
                       np.asarray([rt.nprobe for rt in routes], np.int32))
-        plan = pipe.plan(queries, topk, nprobe_cap=mb.nprobe_cap,
-                         routed=routed)
+        kwargs = {}
+        if getattr(pipe, "accepts_deadline", False):
+            # deadline-aware pipelines (the sharded fabric) hedge and give
+            # up against the batch's tightest request deadline
+            dls = [r.deadline for r in mb.requests if r.deadline is not None]
+            kwargs["deadline"] = min(dls) if dls else None
+        try:
+            plan = pipe.plan(queries, topk, nprobe_cap=mb.nprobe_cap,
+                             routed=routed, **kwargs)
+        except Exception:
+            # the batch is already formed — its requests MUST complete
+            # (failed), never be abandoned with clients blocked on the CQ
+            self._fail_batch(mb, now, epoch=epoch)
+            return None
         return mb, pipe, plan, epoch
 
     def step(self, now: Optional[float] = None, force: bool = True) -> int:
@@ -432,10 +457,66 @@ class ServeEngine:
                                  epoch=epoch)
         return self.stats.completed - before
 
+    def _fail_batch(self, mb, done: float, epoch=None) -> None:
+        """Complete a formed batch as "failed" — the serving path errored,
+        but every client gets a CQ entry (no abandoned requests, the
+        shutdown/crash-drain invariant)."""
+        comps = [Completion(
+            req_id=r.req_id, index=r.index, status="failed",
+            ids=None, dists=None, nprobe=0,
+            submitted=r.arrival, completed=done,
+        ) for r in mb.requests]
+        self.stats.failed += len(comps)
+        self.stats.completed += len(comps)
+        self.stats.batches += 1
+        if epoch is not None:
+            self.versions.harvested(epoch)
+        self.qp.complete(comps)
+
+    def _flush_pending(self) -> None:
+        """Shed everything admitted but not yet formed (batcher pools) plus
+        SQ residents — the ``stop(drain=False)`` path used to abandon both,
+        leaving blocked clients waiting on completions that never came."""
+        now = self.clock()
+        reqs = self.batcher.drain_pending() + self.qp.pop_submissions()
+        if not reqs:
+            return
+        comps = [Completion(
+            req_id=r.req_id, index=r.index, status="shed",
+            ids=None, dists=None, nprobe=0,
+            submitted=r.arrival, completed=now,
+        ) for r in reqs]
+        self.stats.shed += len(comps)
+        self.stats.completed += len(comps)
+        self.qp.complete(comps)
+
     def _harvest_head(self, inflight) -> None:
         mb, pipe, infl, epoch = inflight.popleft()
-        result = pipe.harvest(infl)
+        try:
+            result = pipe.harvest(infl)
+        except Exception:
+            # a harvest error must not kill the poller with the window
+            # still holding batches: this batch fails, the rest continue
+            self._fail_batch(mb, self.clock(), epoch=epoch)
+            return
         self._complete_batch(mb, result, self.clock(), epoch=epoch)
+
+    def _prep_or_fail(self, planned):
+        """Run the prefetch stage; on error the batch completes as failed
+        instead of being dropped between stages."""
+        mb, pipe, plan, epoch = planned
+        try:
+            return (mb, pipe, pipe.prefetch(plan), epoch)
+        except Exception:
+            self._fail_batch(mb, self.clock(), epoch=epoch)
+            return None
+
+    def _dispatch_or_fail(self, prep, inflight) -> None:
+        mb, pipe, h, epoch = prep
+        try:
+            inflight.append((mb, pipe, pipe.dispatch(h), epoch))
+        except Exception:
+            self._fail_batch(mb, self.clock(), epoch=epoch)
 
     def _serve_loop(self) -> None:
         """Overlapped poller: while up to ``depth`` batches scan on device,
@@ -454,55 +535,75 @@ class ServeEngine:
         """
         prep = None                    # (mb, pipe, prefetch-handle, epoch)
         inflight = collections.deque() # (mb, pipe, scan-handle, epoch)
-        while not self._stop.is_set():
-            now = self.clock()
-            self._drain_sq(now)
-            # update interleave point: BETWEEN batches, a bounded quantum —
-            # an update storm back-pressures its own SQ, search cadence holds
-            self._pump_updates(now)
-            if prep is None:
-                planned = self._form_and_plan(now)
-                if planned is not None:
-                    mb, pipe, plan, epoch = planned
-                    prep = (mb, pipe, pipe.prefetch(plan), epoch)
-                    continue           # give the SQ one more drain pass
-                if inflight:
+        try:
+            while not self._stop.is_set():
+                now = self.clock()
+                self._drain_sq(now)
+                # update interleave point: BETWEEN batches, a bounded
+                # quantum — an update storm back-pressures its own SQ,
+                # search cadence holds
+                self._pump_updates(now)
+                if prep is None:
+                    planned = self._form_and_plan(now)
+                    if planned is not None:
+                        prep = self._prep_or_fail(planned)
+                        continue       # give the SQ one more drain pass
+                    if inflight:
+                        self._harvest_head(inflight)
+                        continue
+                    self.qp.wait_submissions(
+                        timeout=self.batcher.policy.max_wait_s)
+                    continue
+                if len(inflight) >= self.depth:
                     self._harvest_head(inflight)
                     continue
-                self.qp.wait_submissions(
-                    timeout=self.batcher.policy.max_wait_s)
-                continue
-            if len(inflight) >= self.depth:
+                # commit the prepared batch: plan the NEXT batch first
+                # (device idle for it), dispatch the scan into the in-flight
+                # window, then gather the next batch under the window's
+                # scans.
+                nxt = self._form_and_plan(now)
+                self._dispatch_or_fail(prep, inflight)
+                prep = None
+                if nxt is not None:
+                    prep = self._prep_or_fail(nxt)
+            # drain: finish anything still prepared or in flight
+            if prep is not None:
+                self._dispatch_or_fail(prep, inflight)
+                prep = None
+            while inflight:
                 self._harvest_head(inflight)
-                continue
-            # commit the prepared batch: plan the NEXT batch first (device
-            # idle for it), dispatch the scan into the in-flight window,
-            # then gather the next batch under the window's scans.
-            nxt = self._form_and_plan(now)
-            mb, pipe, h, epoch = prep
-            inflight.append((mb, pipe, pipe.dispatch(h), epoch))
-            prep = None
-            if nxt is not None:
-                mb2, pipe2, plan2, epoch2 = nxt
-                prep = (mb2, pipe2, pipe2.prefetch(plan2), epoch2)
-        # drain: finish anything still prepared or in flight
-        if prep is not None:
-            mb, pipe, h, epoch = prep
-            inflight.append((mb, pipe, pipe.dispatch(h), epoch))
-        while inflight:
-            self._harvest_head(inflight)
-        while self._drain_on_stop:
-            now = self.clock()
-            self._drain_sq(now)
-            self._pump_updates(now, drain=True)
-            planned = self._form_and_plan(now, force=True)
-            if planned is None:
-                if self.batcher.pending() > 0:
-                    continue          # a fully-shed batch is not "drained"
-                break
-            mb, pipe, plan, epoch = planned
-            result = pipe.harvest(pipe.dispatch(pipe.prefetch(plan)))
-            self._complete_batch(mb, result, self.clock(), epoch=epoch)
+            while self._drain_on_stop:
+                now = self.clock()
+                self._drain_sq(now)
+                self._pump_updates(now, drain=True)
+                planned = self._form_and_plan(now, force=True)
+                if planned is None:
+                    if self.batcher.pending() > 0:
+                        continue      # a fully-shed batch is not "drained"
+                    break
+                mb, pipe, plan, epoch = planned
+                try:
+                    result = pipe.harvest(
+                        pipe.dispatch(pipe.prefetch(plan)))
+                except Exception:
+                    self._fail_batch(mb, self.clock(), epoch=epoch)
+                    continue
+                self._complete_batch(mb, result, self.clock(), epoch=epoch)
+            if not self._drain_on_stop:
+                self._flush_pending()
+        except BaseException:
+            # last-resort crash drain: whatever still holds requests when
+            # the poller unwinds (targeted guards missed, or a bug in the
+            # loop itself) completes as failed/shed rather than leaving
+            # clients blocked on CQ entries that will never arrive
+            if prep is not None:
+                mb, _, _, epoch = prep
+                self._fail_batch(mb, self.clock(), epoch=epoch)
+            while inflight:
+                mb, _, _, epoch = inflight.popleft()
+                self._fail_batch(mb, self.clock(), epoch=epoch)
+            self._flush_pending()
+            raise
 
     def start(self) -> None:
         assert self._thread is None, "engine already started"

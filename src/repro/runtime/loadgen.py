@@ -204,6 +204,39 @@ def hot_cluster_trace(
     return out
 
 
+def shard_skewed_trace(
+    rate_qps: float,
+    duration_s: float,
+    n_queries: int,
+    hot_rows: Sequence[int],
+    hot_weight: float = 0.9,
+    seed: int = 0,
+    index: str = "default",
+    topk: tuple[int, int] = (10, 100),
+    deadline_s: Optional[float] = None,
+) -> list[Arrival]:
+    """Shard-skewed arrivals for the fabric drills: ``hot_weight`` of the
+    traffic draws qrows from ``hot_rows`` — the caller passes the query rows
+    whose nearest centroid lives on ONE shard (``ShardedFabric.
+    query_shards``) — the rest uniformly from the whole pool.  One shard
+    therefore absorbs most of the fan-out (the replication + kill-drill
+    target), and the whole trace is a pure function of ``seed``."""
+    hot_rows = np.asarray(hot_rows, np.int64)
+    if hot_rows.size == 0:
+        raise ValueError("shard_skewed_trace needs a non-empty hot_rows")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 17]))
+    spec = TenantSpec(index, rate_qps, topk[0], topk[1], deadline_s, n_queries)
+    raw = _draw_arrivals(rng, spec, duration_s)
+    out = []
+    for a in raw:
+        if rng.uniform() < hot_weight:
+            qrow = int(hot_rows[int(rng.integers(0, hot_rows.size))])
+        else:
+            qrow = int(rng.integers(0, n_queries))
+        out.append(dataclasses.replace(a, qrow=qrow))
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class UpdateArrival:
     """One update-lane arrival (lifecycle ingest): an insert of ``n`` new

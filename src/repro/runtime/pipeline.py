@@ -82,6 +82,9 @@ class BatchResult:
     times: StageTimes
     fresh_seq: int = -1            # freshness snapshot this batch scanned
                                    # against (-1 = no fresh view attached)
+    partial: Optional[np.ndarray] = None   # (b,) bool — query answered from
+                                           # an incomplete shard set (fabric
+                                           # degraded mode); None = complete
 
 
 @dataclasses.dataclass

@@ -1,0 +1,276 @@
+"""Sharded serving fabric tests: bit-equal cross-shard merge, the live
+SQ/CQ fan-out path, p2c replica routing, and the fault drills — kill
+(failover, zero-drop), stall (hedge), corrupt (checksum retry), and
+both-replicas-down (graceful partial degrade)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.distance import recall_at_k
+from repro.core.search import SearchConfig
+from repro.distributed import FaultEvent, FaultInjector, ShardedFabric
+from repro.runtime import (
+    BatchPolicy, DynamicBatcher, ServeEngine, shard_skewed_trace,
+)
+
+CFG = SearchConfig(k=5, nprobe_max=8, pruning="none", use_kernel=False,
+                   fused_topk=True)
+
+
+@pytest.fixture(scope="module")
+def queries(small_corpus):
+    _, q, _ = small_corpus
+    return q.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def ref_result(small_index, queries):
+    """Single-shard fabric scan — the bit-equality reference."""
+    fab = ShardedFabric(small_index, None, CFG, n_shards=1)
+    return fab.scan_sync(queries, CFG.k)
+
+
+def _replicated(small_index, n_shards, **kw):
+    """Fabric with EVERY cluster R=2-replicated (no cluster is lost when
+    any single shard dies)."""
+    n_clusters = int(np.asarray(small_index.postings).shape[0])
+    return ShardedFabric(small_index, None, CFG, n_shards=n_shards,
+                         hot_clusters=np.arange(n_clusters), **kw)
+
+
+def _live_batch(fab, queries, deadline=None):
+    """Drive one batch through the real stage protocol (worker threads,
+    SQ/CQ, hedging, failure detection)."""
+    plan = fab.plan(queries, CFG.k, deadline=deadline)
+    state = fab.dispatch(fab.prefetch(plan))
+    return fab.harvest(state)
+
+
+# -------------------------------------------------------------------------
+# cross-shard merge parity
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_scan_sync_bit_equal_across_shard_counts(small_index, queries,
+                                                 ref_result, n_shards):
+    """Partitioning the posting tier over S shards and merging through
+    merge_candidate_topk returns the SAME BITS as the single-shard scan —
+    the fabric's core correctness invariant (ISSUE acceptance: S=1 vs S=8
+    bit-equal)."""
+    fab = ShardedFabric(small_index, None, CFG, n_shards=n_shards)
+    out = fab.scan_sync(queries, CFG.k)
+    np.testing.assert_array_equal(out.ids, ref_result.ids)
+    np.testing.assert_array_equal(out.dists, ref_result.dists)
+    assert not out.partial.any()
+
+
+def test_replication_does_not_change_results(small_index, queries,
+                                             ref_result):
+    fab = _replicated(small_index, 4)
+    out = fab.scan_sync(queries, CFG.k)
+    np.testing.assert_array_equal(out.ids, ref_result.ids)
+    np.testing.assert_array_equal(out.dists, ref_result.dists)
+
+
+def test_live_queue_path_matches_sync(small_index, queries, ref_result):
+    """The threaded SQ/CQ path (p2c routing, worker scans, CQ merge) is
+    bit-equal to the deterministic sync path."""
+    fab = _replicated(small_index, 4)
+    fab.start()
+    try:
+        out = _live_batch(fab, queries[:32])
+    finally:
+        fab.stop()
+    np.testing.assert_array_equal(out.ids, ref_result.ids[:32])
+    np.testing.assert_array_equal(out.dists, ref_result.dists[:32])
+    assert not out.partial.any()
+    assert fab.stats.replies > 0 and fab.stats.timeouts == 0
+
+
+# -------------------------------------------------------------------------
+# replica routing
+# -------------------------------------------------------------------------
+def test_p2c_routes_to_less_loaded_replica(small_index):
+    """S=2 with full replication puts every cluster on both shards; p2c
+    must send the whole union to the idle one when the other is loaded,
+    and split near-evenly when loads are equal."""
+    fab = _replicated(small_index, 2)
+    wanted = np.arange(int(np.asarray(small_index.postings).shape[0]),
+                       dtype=np.int64)
+    fab._out_per_shard[0] = 1000
+    by_shard, lost = fab._p2c_assign(wanted)
+    assert not lost and list(by_shard) == [1]
+    fab._out_per_shard[0] = 0
+    by_shard, _ = fab._p2c_assign(wanted)
+    sizes = {s: len(c) for s, c in by_shard.items()}
+    assert set(sizes) == {0, 1}
+    assert abs(sizes[0] - sizes[1]) <= 1       # load feedback alternates
+
+
+# -------------------------------------------------------------------------
+# fault drills (live workers)
+# -------------------------------------------------------------------------
+def test_kill_failover_is_zero_loss_when_replicated(small_index, queries,
+                                                    ref_result):
+    """Silently kill a shard between two live batches: the heartbeat
+    monitor finds the corpse, plan_failover reroutes its clusters, its
+    epoch retires (tier reclaimed), and the next batch is bit-equal with
+    zero partial rows — nothing was lost.  Hedging is disabled so the
+    batch can only complete through the failover path."""
+    fab = _replicated(small_index, 4, hedge_after_s=30.0, tick_s=0.01)
+    fab.start()
+    try:
+        _live_batch(fab, queries[:16])
+        fab.inject(FaultEvent(0.0, "kill", 1, silent=True), 1)
+        out = _live_batch(fab, queries[:32])
+    finally:
+        fab.stop()
+    np.testing.assert_array_equal(out.ids, ref_result.ids[:32])
+    np.testing.assert_array_equal(out.dists, ref_result.dists[:32])
+    assert not out.partial.any()
+    # failover bookkeeping: shard 1 declared, no clusters lost
+    assert 1 in fab.failed and fab.alive_shards() == [0, 2, 3]
+    assert [f["shard"] for f in fab.stats.failovers] == [1]
+    assert fab.stats.failovers[0]["lost"] == 0
+    assert not fab.owner_mask[1].any()
+    # PR 4 safe retire: the dead shard's epoch finalized, tier reclaimed
+    assert fab.epochs[1].retired
+    assert fab.epochs[1].finalized.wait(timeout=2.0)
+    assert fab.nodes[1].tier.released
+    # survivors keep their payload
+    assert not fab.nodes[0].tier.released
+
+
+def test_unreplicated_kill_degrades_to_partial(small_index, queries):
+    """No replicas (hot_clusters=None): killing a shard loses its
+    clusters.  Queries probing them are stamped partial — served from the
+    surviving shards, never dropped or hung — and untouched queries stay
+    bit-equal to their pre-kill answers.  nprobe is capped so some rows
+    miss the dead shard entirely."""
+    fab = ShardedFabric(small_index, None, CFG, n_shards=4,
+                        tick_s=0.01, harvest_timeout_s=2.0)
+    fab.start()
+    try:
+        pre = fab.harvest(fab.dispatch(fab.prefetch(
+            fab.plan(queries[:32], CFG.k, nprobe_cap=2))))
+        fab.inject(FaultEvent(0.0, "kill", 1, silent=True), 1)
+        out = fab.harvest(fab.dispatch(fab.prefetch(
+            fab.plan(queries[:32], CFG.k, nprobe_cap=2))))
+    finally:
+        fab.stop()
+    assert not pre.partial.any()
+    assert fab.stats.failovers and fab.stats.failovers[0]["lost"] > 0
+    assert fab.lost
+    # the stamp matches the probe sets: a row is partial iff it probed a
+    # lost cluster
+    plan = fab.plan(queries[:32], CFG.k, nprobe_cap=2)
+    cids = np.asarray(plan.cids)[:32]
+    pmask = np.asarray(plan.pmask)[:32]
+    lost = np.fromiter(fab.lost, np.int64, len(fab.lost))
+    expect = (np.isin(cids, lost) & pmask & (cids >= 0)).any(axis=1)
+    np.testing.assert_array_equal(out.partial, expect)
+    assert expect.any()                        # drill actually lost probes
+    full = ~expect
+    assert full.any()                          # ...but not for every row
+    np.testing.assert_array_equal(out.ids[full], pre.ids[full])
+    assert fab.stats.partial_queries == int(expect.sum())
+
+
+def test_stall_triggers_hedge_and_stays_correct(small_index, queries,
+                                                ref_result):
+    """A stalled (straggler) shard holds its tasks; the router hedges the
+    unresolved clusters onto the other replica and the batch completes
+    bit-equal without waiting out the stall."""
+    fab = _replicated(small_index, 4, hedge_after_s=0.02)
+    fab.start()
+    try:
+        fab.inject(FaultEvent(0.0, "stall", duration_s=3.0, stall_s=1.0), 2)
+        t0 = time.monotonic()
+        out = _live_batch(fab, queries[:32])
+        elapsed = time.monotonic() - t0
+    finally:
+        fab.stop()
+    np.testing.assert_array_equal(out.ids, ref_result.ids[:32])
+    np.testing.assert_array_equal(out.dists, ref_result.dists[:32])
+    assert not out.partial.any()
+    assert fab.stats.hedges >= 1
+    assert elapsed < 3.0                       # did not sit out the stall
+    assert 2 not in fab.failed                 # straggler, not a corpse
+
+
+def test_corrupt_payload_detected_and_retried(small_index, queries,
+                                              ref_result):
+    """A corrupt window flips candidate-id bits after the checksum was
+    taken; the router's re-hash rejects the reply and retries until a
+    clean copy lands — the merged result never sees the bad bits."""
+    fab = _replicated(small_index, 4, retry_budget=500,
+                      hedge_after_s=0.02)
+    fab.start()
+    try:
+        fab.inject(FaultEvent(0.0, "corrupt", duration_s=0.15), 3)
+        out = _live_batch(fab, queries[:32])
+    finally:
+        fab.stop()
+    np.testing.assert_array_equal(out.ids, ref_result.ids[:32])
+    np.testing.assert_array_equal(out.dists, ref_result.dists[:32])
+    assert not out.partial.any()
+    assert fab.stats.checksum_failures >= 1
+    assert fab.stats.retries >= 1
+    assert not fab.failed                      # corruption is not death
+
+
+# -------------------------------------------------------------------------
+# the kill-a-shard drill, end-to-end through the serving engine
+# -------------------------------------------------------------------------
+def test_engine_kill_drill_zero_drop(small_index, queries):
+    """ISSUE acceptance drill in miniature: shard-skewed live traffic
+    through ServeEngine, FaultInjector kills the hot shard mid-trace.
+    Every submitted query completes "ok" (zero dropped, zero partial,
+    zero failed), exactly one failover fires with nothing lost, and the
+    post-failover fabric stays bit-equal to single-shard."""
+    q = queries
+    probe = ShardedFabric(small_index, None, CFG, n_shards=4)
+    hot = np.nonzero(probe.rmap0.replicas[:, 0] == 1)[0]
+    inj = FaultInjector(seed=7).kill(0.25, shard=1)
+    fab = ShardedFabric(small_index, None, CFG, n_shards=4,
+                        hot_clusters=hot, injector=inj,
+                        hedge_after_s=0.05, tick_s=0.02)
+    fab.warmup()
+    fab.start()
+    eng = ServeEngine({"default": fab},
+                      DynamicBatcher(BatchPolicy(max_batch=16,
+                                                 max_wait_s=0.004),
+                                     ["default"]))
+    eng.start()
+    try:
+        hot_rows = np.nonzero(fab.query_shards(q) == 1)[0]
+        trace = shard_skewed_trace(300, 0.8, q.shape[0], hot_rows, seed=3)
+        inj.arm(time.monotonic())
+        t0 = time.monotonic()
+        for a in trace:
+            while time.monotonic() - t0 < a.t:
+                time.sleep(0.0005)
+            assert eng.submit(q[a.qrow], CFG.k) >= 0
+    finally:
+        eng.stop(drain=True)
+        fab.stop()
+    comps = eng.qp.poll()
+    # zero-drop: every submission came back, all clean
+    assert eng.stats.submitted == len(trace)
+    assert len(comps) == len(trace)
+    assert eng.stats.completed == len(trace)
+    assert eng.stats.failed == 0 and eng.stats.shed == 0
+    assert eng.stats.partial == 0
+    assert set(c.status for c in comps) == {"ok"}
+    assert all(c.ids is not None for c in comps)
+    # the drill really fired and failed over with nothing lost
+    assert [(k, s) for _, k, s in inj.log] == [("kill", 1)]
+    assert [f["shard"] for f in fab.stats.failovers] == [1]
+    assert fab.stats.failovers[0]["lost"] == 0
+    assert fab.stats.dead_replies + fab.stats.requeued_tasks >= 1
+    # recall parity after failover (acceptance: within 0.002; here exact)
+    ref = ShardedFabric(small_index, None, CFG, n_shards=1)
+    post = fab.scan_sync(q[:32], CFG.k)
+    r = recall_at_k(post.ids, ref.scan_sync(q[:32], CFG.k).ids)
+    assert r == 1.0
+    assert not post.partial.any()

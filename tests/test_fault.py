@@ -1,0 +1,179 @@
+"""Unit coverage for the dormant-since-seed fault machinery
+(distributed/fault.py): heartbeat table, failover planning, ownership
+masks, and the seeded fault injector the fabric drills replay."""
+import numpy as np
+
+from repro.distributed import (
+    FaultInjector, HeartbeatMonitor, ownership_mask, plan_failover,
+)
+from repro.storage.layout import make_replica_map, plan_striping
+
+
+# -------------------------------------------------------------------------
+# HeartbeatMonitor
+# -------------------------------------------------------------------------
+def test_heartbeat_all_alive_when_beating():
+    hb = HeartbeatMonitor(8, miss_threshold=3)
+    for _ in range(10):
+        hb.tick()
+        for n in range(8):
+            hb.beat(n)
+    assert hb.failed().size == 0
+    assert hb.stragglers().size == 0
+
+
+def test_heartbeat_miss_threshold_boundary():
+    hb = HeartbeatMonitor(2, miss_threshold=3)
+    hb.beat(0)
+    hb.beat(1)
+    hb.tick()
+    hb.tick()
+    hb.beat(1)
+    assert hb.failed().size == 0          # node 0 at 2 misses: not yet
+    hb.tick()
+    assert hb.failed().tolist() == [0]    # exactly miss_threshold misses
+    hb.beat(0)                            # a beat resurrects it
+    assert hb.failed().size == 0
+
+
+def test_heartbeat_latency_ema_flags_stragglers():
+    hb = HeartbeatMonitor(4, miss_threshold=100, slow_factor=3.0)
+    for _ in range(30):
+        hb.tick()
+        for n in range(4):
+            hb.beat(n, latency=20.0 if n == 3 else 1.0)
+    assert hb.stragglers().tolist() == [3]
+    # a failed node is never also reported straggling
+    hb2 = HeartbeatMonitor(4, miss_threshold=2, slow_factor=3.0)
+    for _ in range(5):
+        hb2.tick()
+        for n in range(3):
+            hb2.beat(n, latency=1.0)
+    assert 3 in hb2.failed()
+    assert 3 not in hb2.stragglers()
+
+
+# -------------------------------------------------------------------------
+# plan_failover / ownership_mask
+# -------------------------------------------------------------------------
+def _rmap(n_clusters=24, n_shards=4, hot=None, n_replicas=2):
+    striping = plan_striping(n_clusters, n_shards)
+    return make_replica_map(n_clusters, n_shards, striping,
+                            hot_clusters=hot, n_replicas=n_replicas)
+
+
+def test_plan_failover_replicated_loses_nothing():
+    """R=2 over every cluster: any single shard death moves its primaries
+    to the replica and loses zero clusters."""
+    rm = _rmap(hot=np.arange(24))
+    for dead in range(4):
+        fo = plan_failover(rm, [dead])
+        assert fo.n_lost == 0
+        assert (fo.owner >= 0).all()
+        assert not np.isin(fo.owner, [dead]).any()
+        # exactly the dead shard's primaries moved
+        moved_expected = np.nonzero(rm.replicas[:, 0] == dead)[0]
+        np.testing.assert_array_equal(fo.moved, moved_expected)
+
+
+def test_plan_failover_unreplicated_clusters_are_lost():
+    rm = _rmap(hot=None)                  # R slot 1 all -1
+    fo = plan_failover(rm, [2])
+    lost_expected = np.nonzero(rm.replicas[:, 0] == 2)[0]
+    np.testing.assert_array_equal(fo.lost, lost_expected)
+    assert fo.moved.size == 0             # nowhere to move to
+    # surviving clusters keep their original owner
+    keep = np.setdiff1d(np.arange(24), lost_expected)
+    np.testing.assert_array_equal(fo.owner[keep], rm.replicas[keep, 0])
+
+
+def test_plan_failover_cumulative_failures():
+    rm = _rmap(hot=np.arange(24))
+    fo1 = plan_failover(rm, [0])
+    fo2 = plan_failover(rm, [0, 1])
+    assert fo2.n_lost >= fo1.n_lost
+    assert not np.isin(fo2.owner, [0, 1]).any()
+
+
+def test_ownership_mask_round_trips():
+    rm = _rmap(hot=np.arange(24))
+    for failed in ([], [1], [0, 3]):
+        fo = plan_failover(rm, failed)
+        mask = ownership_mask(fo.owner, 4)
+        assert mask.shape == (4, 24)
+        # each non-lost cluster owned exactly once; lost ones by nobody
+        counts = mask.sum(axis=0)
+        np.testing.assert_array_equal(counts, (fo.owner >= 0).astype(int))
+        # round trip: argmax over the shard axis recovers the owner array
+        rec = np.where(counts > 0, mask.argmax(axis=0), -1)
+        np.testing.assert_array_equal(rec, fo.owner)
+        for s in failed:
+            assert not mask[s].any()
+
+
+# -------------------------------------------------------------------------
+# FaultInjector
+# -------------------------------------------------------------------------
+class _FakeFabric:
+    def __init__(self, n=4):
+        self.n = n
+        self.dead = set()
+        self.injected = []
+
+    def alive_shards(self):
+        return [s for s in range(self.n) if s not in self.dead]
+
+    def inject(self, ev, shard):
+        self.injected.append((ev.kind, shard))
+        if ev.kind == "kill":
+            self.dead.add(shard)
+
+
+def _run_schedule(seed):
+    inj = (FaultInjector(seed=seed)
+           .kill(0.1)                     # seeded victim
+           .stall(0.2, shard=2, duration_s=0.5, stall_s=0.1)
+           .kill(0.3))                    # seeded victim among survivors
+    fab = _FakeFabric()
+    inj.arm(0.0)
+    for t in (0.05, 0.15, 0.25, 0.35):
+        inj.poll(t, fab)
+    return inj, fab
+
+
+def test_fault_injector_schedule_is_seeded_and_replayable():
+    inj_a, fab_a = _run_schedule(seed=5)
+    inj_b, fab_b = _run_schedule(seed=5)
+    assert fab_a.injected == fab_b.injected           # bit-for-bit replay
+    assert len(fab_a.injected) == 3
+    # log carries (relative time, kind, shard) in fire order
+    assert [(k, s) for _, k, s in inj_a.log] == fab_a.injected
+    # a different seed may pick different victims but fires the same kinds
+    inj_c, fab_c = _run_schedule(seed=6)
+    assert [k for k, _ in fab_c.injected] == [k for k, _ in fab_a.injected]
+
+
+def test_fault_injector_victim_excludes_dead_shards():
+    inj = FaultInjector(seed=0)
+    for _ in range(4):
+        inj.kill(0.0)
+    fab = _FakeFabric(n=4)
+    inj.arm(0.0)
+    inj.poll(1.0, fab)
+    # all four seeded kills land on distinct shards: victims are drawn from
+    # the alive set, which shrinks after each kill
+    assert sorted(s for _, s in fab.injected) == [0, 1, 2, 3]
+    # nothing left to kill: further events no-op instead of erroring
+    inj.kill(2.0)
+    assert inj.poll(3.0, fab) == []
+
+
+def test_fault_injector_events_fire_once_and_in_order():
+    inj = FaultInjector(seed=1).kill(0.5, shard=1).corrupt(
+        0.1, shard=0, duration_s=0.2)
+    fab = _FakeFabric()
+    inj.arm(10.0)
+    assert inj.poll(10.05, fab) == []                 # nothing due yet
+    assert inj.poll(10.6, fab) == [("corrupt", 0), ("kill", 1)]
+    assert inj.poll(11.0, fab) == []                  # fired=True latches
+    assert len(fab.injected) == 2

@@ -209,3 +209,48 @@ def test_assign_oracle_permutation_equivariant(seed, n, d, k):
         np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
         np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
                                    rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------------------------
+# sharded merge (PR 6 fabric): shard-count and shard-order invariance
+# -------------------------------------------------------------------------
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 5),
+    n=st.integers(8, 40),
+    k=st.integers(1, 12),
+    id_range=st.integers(1, 25),
+    s=st.integers(1, 8),
+)
+def test_sharded_merge_invariant_to_shard_count_and_order(seed, b, n, k,
+                                                          id_range, s):
+    """The fabric's cross-shard reduction: partition the candidate pool
+    over S shards, let each shard cut its slice to a local dedup top-k,
+    and merge the per-shard sets through merge_candidate_topk — the result
+    equals the single-shard (S=1) merge for EVERY shard count and every
+    ordering of the shard replies (an id's best instance surviving the
+    local cut is exactly the per-shard top-m guarantee the fabric relies
+    on)."""
+    from repro.core.distance import merge_candidate_topk
+
+    dists, ids = _mk_candidates(seed, b, n, id_range, mask_frac=0.2)
+    ref_d, ref_i = merge_candidate_topk(jnp.asarray(dists),
+                                        jnp.asarray(ids), k)
+    rng = np.random.default_rng(seed ^ 0xFAB)
+    owner = rng.integers(0, s, size=n)
+    parts = []
+    for shard in range(s):
+        cols = np.nonzero(owner == shard)[0]
+        if cols.size == 0:
+            continue          # a shard that owns no probed cluster replies
+        pd, pi = _np_dedup_topk(dists[:, cols], ids[:, cols], k)
+        parts.append((pd, pi.astype(np.int32)))
+    orders = [list(range(len(parts))),
+              list(rng.permutation(len(parts)))]
+    for order in orders:
+        cd = np.concatenate([parts[i][0] for i in order], axis=1)
+        ci = np.concatenate([parts[i][1] for i in order], axis=1)
+        vd, vi = merge_candidate_topk(jnp.asarray(cd), jnp.asarray(ci), k)
+        np.testing.assert_array_equal(np.asarray(vi), np.asarray(ref_i))
+        np.testing.assert_allclose(np.asarray(vd), np.asarray(ref_d))

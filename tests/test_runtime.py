@@ -14,12 +14,14 @@ import pytest
 from repro.core.search import SearchConfig, serve_step
 from repro.runtime import (
     BatchPolicy,
+    BatchResult,
     DynamicBatcher,
     PrefetchPipeline,
     QueuePair,
     RoutePlan,
     SearchRequest,
     ServeEngine,
+    StageTimes,
     bursty_trace,
     hot_cluster_trace,
     inflight_depth,
@@ -27,6 +29,7 @@ from repro.runtime import (
     multi_tenant_trace,
     overlap_efficiency,
     poisson_trace,
+    shard_skewed_trace,
     TenantSpec,
 )
 from repro.storage import TieredPostings
@@ -609,3 +612,160 @@ def test_loadgen_deterministic_and_sorted():
                       seed=5)
     in_burst = sum(1 for arr in bt if (arr.t % 0.2) < 0.05)
     assert in_burst > len(bt) * 0.6           # bursts carry the mass
+
+
+# -------------------------------------------------------------------------
+# shutdown / crash drain: no admitted request is ever abandoned
+# -------------------------------------------------------------------------
+class _HarvestBomb:
+    """Delegating pipeline wrapper whose harvest raises for chosen batch
+    ordinals — the poller-killing fault the engine's drain guards absorb."""
+
+    def __init__(self, inner, fail_batches):
+        self._inner = inner
+        self._fail = set(fail_batches)
+        self._n = 0
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def harvest(self, handle):
+        i = self._n
+        self._n += 1
+        if i in self._fail:
+            raise RuntimeError("injected harvest fault")
+        return self._inner.harvest(handle)
+
+
+def test_harvest_fault_completes_batch_as_failed(small_index, queries):
+    """Regression (pre-fix behavior FAILS this): a harvest exception used
+    to unwind the poller thread with the depth-N window still holding
+    batches — those and every later submission were abandoned, clients
+    blocked on CQ entries that never came.  Now the faulted batch
+    completes as "failed" and the poller keeps serving the rest."""
+    q, _ = queries
+    import time as _time
+    tier = TieredPostings(np.asarray(small_index.postings),
+                          np.asarray(small_index.posting_ids))
+    pipe = _HarvestBomb(
+        PrefetchPipeline(small_index, None, CFG, tier=tier,
+                         pad_batch=8, row_bucket=32),
+        fail_batches={1})
+    policy = BatchPolicy(max_batch=8, max_wait_s=0.001, pad=8,
+                         grouping="fifo")
+    eng = ServeEngine({"a": pipe}, DynamicBatcher(policy, ["a"]),
+                      clock=_time.monotonic, depth=2)
+    eng.start()
+    n = 0
+    for i in range(48):
+        n += eng.submit(q[i % 64], 5, index="a") >= 0
+    eng.stop(drain=True)
+    comps = eng.qp.poll()
+    assert len(comps) == n == eng.stats.completed     # nothing abandoned
+    n_failed = sum(1 for c in comps if c.status == "failed")
+    assert n_failed >= 1                              # the bombed batch
+    assert eng.stats.failed == n_failed
+    assert all(c.ids is None for c in comps if c.status == "failed")
+    assert sum(1 for c in comps if c.status == "ok") == n - n_failed
+
+
+def test_stop_without_drain_sheds_instead_of_abandoning(small_index,
+                                                        queries):
+    """Regression: ``stop(drain=False)`` used to abandon requests pooled
+    in the batcher (and SQ residents) — no CQ entry, blocked clients.
+    Now every admitted-but-unformed request completes as "shed"."""
+    q, _ = queries
+    import time as _time
+    # max_wait long enough that the batch cannot become due before stop
+    policy = BatchPolicy(max_batch=64, max_wait_s=0.2, pad=8)
+    eng = _mk_engine(small_index, policy=policy)
+    eng.clock = _time.monotonic
+    eng.start()
+    n = 0
+    for i in range(5):
+        n += eng.submit(q[i], 5, index="idx0") >= 0
+    _time.sleep(0.05)
+    eng.stop(drain=False)
+    comps = eng.qp.poll()
+    assert len(comps) == n == eng.stats.completed
+    assert {c.status for c in comps} == {"shed"}
+    assert eng.batcher.pending() == 0
+
+
+def test_batcher_drain_pending_fifo():
+    policy = BatchPolicy(max_batch=64, max_wait_s=10.0, pad=8)
+    b = DynamicBatcher(policy, ["a", "b"])
+
+    def req(i, idx):
+        return SearchRequest(req_id=i, index=idx, query=np.zeros(4),
+                             topk=5, deadline=None)
+
+    for i in range(6):
+        assert b.add(req(i, "a" if i % 2 == 0 else "b"), 0.0) is None
+    out = b.drain_pending()
+    # FIFO within each index, indexes in registration order
+    assert [r.req_id for r in out] == [0, 2, 4, 1, 3, 5]
+    assert b.pending() == 0
+    mb, sheds = b.form(100.0, force=True)
+    assert mb is None and sheds == []
+
+
+class _PartialPipe:
+    """Minimal stage-protocol pipeline: stamps row 0 of every batch as
+    partial (the fabric's degraded-mode contract) and records the batch
+    deadline the engine hands to deadline-aware pipelines."""
+    pad_batch = 8
+    accepts_deadline = True
+
+    def __init__(self):
+        self.saw_deadline = "unset"
+
+    def plan(self, queries, topk, nprobe_cap=None, routed=None,
+             deadline=None):
+        self.saw_deadline = deadline
+        return queries.shape[0]
+
+    def prefetch(self, b):
+        return b
+
+    def dispatch(self, b):
+        return b
+
+    def harvest(self, b):
+        partial = np.zeros(b, bool)
+        partial[0] = True
+        return BatchResult(
+            ids=np.zeros((b, 5), np.int32),
+            dists=np.zeros((b, 5), np.float32),
+            nprobe=np.full(b, 1, np.int32),
+            times=StageTimes(size=b), partial=partial)
+
+
+def test_engine_stamps_partial_and_plumbs_deadline():
+    eng = ServeEngine({"a": _PartialPipe()},
+                      DynamicBatcher(BatchPolicy(max_batch=4,
+                                                 max_wait_s=0.001, pad=4),
+                                     ["a"]),
+                      clock=lambda: 0.0)
+    for i in range(3):
+        assert eng.submit(np.zeros(4), 5, index="a",
+                          deadline_s=1.0 + i) >= 0
+    eng.step(now=0.0)
+    comps = eng.qp.poll()
+    assert [c.status for c in comps] == ["partial", "ok", "ok"]
+    assert eng.stats.partial == 1
+    # the batch deadline is the tightest request deadline
+    assert eng.pipelines["a"].saw_deadline == 1.0
+
+
+def test_shard_skewed_trace_deterministic_and_skewed():
+    hot = [3, 7, 11]
+    a = shard_skewed_trace(400, 1.0, 64, hot, seed=9)
+    assert a == shard_skewed_trace(400, 1.0, 64, hot, seed=9)
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+    n_hot = sum(1 for arr in a if arr.qrow in set(hot))
+    assert n_hot > 0.7 * len(a)               # hot shard carries the mass
+    assert all(0 <= arr.qrow < 64 for arr in a)
+    assert shard_skewed_trace(400, 1.0, 64, hot, seed=10) != a
+    with pytest.raises(ValueError):
+        shard_skewed_trace(400, 1.0, 64, [], seed=0)
