@@ -31,7 +31,9 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from common import emit, save_result
+import os
+
+from common import RESULTS, emit, save_result
 
 from repro.build.kmeans import balanced_hierarchical_kmeans
 from repro.core.distance import recall_at_k
@@ -40,6 +42,7 @@ from repro.core.search import SearchConfig
 from repro.core.spann_rules import closure_assign
 from repro.data import PAPER_DATASETS, make_queries, make_vectors
 from repro.distributed import FaultInjector, ShardedFabric
+from repro.obs import Observability, check_well_nested
 from repro.runtime import (
     BatchPolicy,
     DynamicBatcher,
@@ -123,6 +126,59 @@ def scaling_sweep(index, q, true10, shard_counts, k: int = 10) -> list[dict]:
     return rows
 
 
+def _export_drill_trace(obs: Observability, n_completed: int) -> dict:
+    """Export the drill's Perfetto trace to results/bench/ (uploaded as a
+    CI artifact) and validate it structurally: well-nested per track, one
+    terminal per admitted request, per-shard fan-out spans on >= 2 shard
+    tracks, and — when the kill produced requeues — the requeued tasks'
+    trace_ids reaching a merge span (identity survives failover)."""
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "trace_fabric_drill.json")
+    doc = obs.trace.export(path)
+    te = doc["traceEvents"]
+    violations = check_well_nested(te)
+    assert not violations, f"drill trace malformed: {violations[:3]}"
+    begun, terms = set(), {}
+    requeued_tids, merged_tids = set(), set()
+    for e in te:
+        a = e.get("args") or {}
+        if e["ph"] == "b" and e["name"] == "request":
+            begun.add(a["trace_id"])
+        elif e["ph"] == "i" and e["name"].startswith("done:"):
+            terms[a["trace_id"]] = terms.get(a["trace_id"], 0) + 1
+        elif e["ph"] == "b" and e["name"] == "task" \
+                and a.get("kind") == "requeue":
+            requeued_tids.update(a["trace_ids"])
+        elif e["ph"] == "X" and e["name"] == "merge":
+            merged_tids.update(a["trace_ids"])
+    assert len(begun) == n_completed and set(terms) == begun \
+        and all(n == 1 for n in terms.values()), \
+        f"terminal mismatch: {len(begun)} begun, {len(terms)} terminated"
+    assert requeued_tids <= merged_tids, \
+        "requeued trace_ids never reached a merge span"
+    track_names = {e["tid"]: e["args"]["name"] for e in te if e["ph"] == "M"}
+    scan_tracks = {track_names[e["tid"]] for e in te
+                   if e["ph"] == "X" and e["name"] == "scan"}
+    n_shard_tracks = len([t for t in scan_tracks if t.startswith("shard-")])
+    assert n_shard_tracks >= 2, f"fan-out not traced: {scan_tracks}"
+    failover_instants = sum(1 for e in te
+                            if e["ph"] == "i" and e["name"] == "failover")
+    print(f"[drill] trace: {len(te)} events -> {path} "
+          f"(requests={len(begun)}, requeued_tids={len(requeued_tids)}, "
+          f"shard_tracks={n_shard_tracks}, failover_instants="
+          f"{failover_instants}, dropped={doc['otherData']['dropped_events']})",
+          flush=True)
+    return {
+        "path": os.path.relpath(path, os.path.dirname(RESULTS)),
+        "events": len(te),
+        "requests_traced": len(begun),
+        "requeued_trace_ids": len(requeued_tids),
+        "shard_tracks_with_scans": n_shard_tracks,
+        "failover_instants": failover_instants,
+        "dropped_events": doc["otherData"]["dropped_events"],
+    }
+
+
 def kill_drill(index, q, true10, n_shards: int, smoke: bool,
                seed: int, k: int = 10) -> dict:
     cfg = SearchConfig(k=k, nprobe_max=16, pruning="none",
@@ -133,9 +189,12 @@ def kill_drill(index, q, true10, n_shards: int, smoke: bool,
     probe = ShardedFabric(index, None, cfg, n_shards=n_shards)
     hot = np.nonzero(probe.rmap0.replicas[:, 0] == victim)[0]
     inj = FaultInjector(seed=seed).kill(kill_at, shard=victim)
+    # PR 7: drills run with full tracing ON — the exported trace is a CI
+    # artifact (the failover flamegraph) and is structurally validated below
+    obs = Observability(sample_rate=1.0)
     fab = ShardedFabric(index, None, cfg, n_shards=n_shards,
                         hot_clusters=hot, injector=inj,
-                        hedge_after_s=0.05, tick_s=0.02)
+                        hedge_after_s=0.05, tick_s=0.02, obs=obs)
     fab.warmup()
     rec_before = float(recall_at_k(
         fab.scan_sync(q, k).ids[:, :10], true10))
@@ -143,7 +202,8 @@ def kill_drill(index, q, true10, n_shards: int, smoke: bool,
     eng = ServeEngine({"default": fab},
                       DynamicBatcher(BatchPolicy(max_batch=16,
                                                  max_wait_s=0.004),
-                                     ["default"]))
+                                     ["default"]),
+                      obs=obs)
     eng.start()
     hot_rows = np.nonzero(fab.query_shards(q) == victim)[0]
     trace = shard_skewed_trace(rate, duration, len(q), hot_rows, seed=seed)
@@ -190,6 +250,7 @@ def kill_drill(index, q, true10, n_shards: int, smoke: bool,
         "failover_gap": latency_percentiles(gap) if gap else None,
         "fault_log": [{"t_s": t, "kind": kk, "shard": s}
                       for t, kk, s in inj.log],
+        "trace": _export_drill_trace(obs, st.completed),
     }
     print(f"[drill] S={n_shards} kill shard {victim} @ {kill_at}s: "
           f"{st.completed}/{st.submitted} completed, dropped="

@@ -70,6 +70,7 @@ from repro.runtime import (
     multi_tenant_trace,
     overlap_efficiency,
 )
+from repro.obs import Histogram, Observability
 from repro.storage import TieredPostings
 
 
@@ -499,6 +500,84 @@ def run_engine_load(index, llsp, pipes_cfg, q, duration_s, rate_qps,
     }
 
 
+def run_tracing_overhead(index, llsp, pipes_cfg, q, *, n_queries=400,
+                         trials=5) -> dict:
+    """Paired tracing-on/off A/B (PR 7 acceptance: <= 5% q/s overhead at
+    ``sample_rate=1.0``).  Two identical engines — one with the default
+    no-tracing observability, one tracing EVERY request — each serve the
+    same closed-loop query stream; trials are interleaved (off/on order
+    alternates) so thermal / scheduler drift cancels, and the gate is the
+    MEDIAN of the per-trial paired q/s ratios.  Also hard-gates the
+    streaming histogram's p50/p99 against np.percentile (<= 2%) on a
+    seeded latency-shaped draw — the numbers serving reports must match
+    what a post-hoc numpy analysis of the raw stream would say."""
+    cfg, (postings, pids) = pipes_cfg
+    engines = {}
+    for mode in ("off", "on"):
+        pipe = PrefetchPipeline(index, llsp, cfg,
+                                tier=TieredPostings(postings, pids))
+        policy = BatchPolicy(max_batch=32, max_wait_s=0.002)
+        pipe.warmup(batch_sizes=(policy.pad, policy.max_batch))
+        pipe.serve_batch(q[: policy.max_batch], 10)
+        obs = Observability(sample_rate=1.0) if mode == "on" else None
+        eng = ServeEngine({"default": pipe},
+                          DynamicBatcher(policy, ["default"]), obs=obs)
+        eng.start()
+        engines[mode] = eng
+
+    def one_trial(eng) -> float:
+        rows = np.arange(n_queries) % q.shape[0]
+        t0 = time.perf_counter()
+        for r in rows:
+            eng.submit(q[r], 10, index="default", block=True)
+        assert eng.qp.wait_completions(n_queries, timeout=120.0)
+        wall = time.perf_counter() - t0
+        comps = eng.qp.poll()
+        assert len(comps) == n_queries
+        return n_queries / wall
+
+    try:
+        for eng in engines.values():    # untimed warm pass through the loop
+            one_trial(eng)
+        ratios, qps = [], {"off": [], "on": []}
+        for t in range(trials):
+            order = ("off", "on") if t % 2 == 0 else ("on", "off")
+            got = {}
+            for mode in order:
+                got[mode] = one_trial(engines[mode])
+                qps[mode].append(got[mode])
+            ratios.append(got["on"] / got["off"])
+            engines["on"].obs.trace.clear()   # bound trial-to-trial memory
+    finally:
+        for eng in engines.values():
+            eng.stop(drain=True)
+
+    # histogram accuracy gate: streaming quantiles vs exact numpy on the
+    # same seeded ms-scale lognormal stream
+    rng = np.random.default_rng(0)
+    xs = np.exp(rng.normal(np.log(0.02), 0.7, size=20_000))
+    h = Histogram("gate")
+    h.observe_many(xs)
+    hist_err = {
+        f"p{int(p * 100)}": abs(h.quantile(p) - np.percentile(xs, p * 100))
+        / np.percentile(xs, p * 100)
+        for p in (0.5, 0.99)
+    }
+    assert max(hist_err.values()) <= 0.02, \
+        f"streaming histogram off by >2%: {hist_err}"
+
+    med = float(np.median(ratios))
+    return {
+        "n_queries": n_queries,
+        "trials": trials,
+        "qps_off": [round(v, 1) for v in qps["off"]],
+        "qps_on": [round(v, 1) for v in qps["on"]],
+        "qps_ratio_median": med,
+        "overhead_pct": round((1.0 - med) * 100.0, 2),
+        "hist_quantile_err": {k: round(v, 5) for k, v in hist_err.items()},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -591,6 +670,17 @@ def main() -> None:
              f"shed={loads[g]['shed']}")
     load = loads["locality"]
 
+    # PR 7: tracing-on/off paired overhead + histogram accuracy (CI gate)
+    overhead = run_tracing_overhead(
+        index, llsp, (cfg, (postings, pids)), q,
+        n_queries=300 if args.smoke else 800,
+        trials=3 if args.smoke else 5)
+    emit("serving_tracing_overhead",
+         max(overhead["overhead_pct"], 0.0) * 1e3,
+         f"q/s ratio on/off={overhead['qps_ratio_median']:.3f} "
+         f"({overhead['overhead_pct']:+.1f}% at sample_rate=1.0), "
+         f"hist p99 err={overhead['hist_quantile_err']['p99']:.4f}")
+
     payload = {
         "mode": "smoke" if args.smoke else "full",
         "corpus": {"n": int(x.shape[0]), "dim": int(x.shape[1]),
@@ -603,6 +693,7 @@ def main() -> None:
         "locality_ab": locality,
         "depth_window": depth_ev,
         "engine_load": loads,
+        "tracing_overhead": overhead,
         "tier_totals": {
             "bytes_streamed": tier.stats.bytes_streamed,
             "union_bytes_streamed": tier.stats.union_bytes_streamed,
@@ -638,6 +729,10 @@ def main() -> None:
         assert all(r["overlap_eff_seq"] == 0.0 for r in ab)
         assert load["completed"] == load["submitted"] - load["rejected"], \
             "engine lost requests"
+        # observability must be close to free: tracing every request may
+        # cost at most 5% q/s vs the identical engine with tracing off
+        assert overhead["qps_ratio_median"] >= 0.95, \
+            f"tracing overhead gate: {overhead}"
         print("[smoke] serving pipeline OK: "
               f"speedup_vs_ref={ab[0]['speedup_vs_ref']:.2f}x "
               f"overlap={ab[0]['overlap_eff_pipe']:.2f} "

@@ -53,6 +53,7 @@ from repro.distributed.fault import (
     FaultEvent, HeartbeatMonitor, ownership_mask, plan_failover,
 )
 from repro.lifecycle.version import Epoch
+from repro.obs import Observability
 from repro.runtime.engine import QueuePair
 from repro.runtime.pipeline import (
     BatchResult, PrefetchPipeline, StageTimes, max_id_replicas,
@@ -74,6 +75,8 @@ class ShardTask:
     probe: np.ndarray              # (bp, U_s) bool
     m: int                         # per-query candidate slots to return
     attempt: int = 0
+    trace_ids: tuple = ()          # sampled request ids riding this task
+    kind: str = "dispatch"         # "dispatch" | "requeue" | "hedge"
 
 
 @dataclasses.dataclass
@@ -186,7 +189,18 @@ class ShardNode:
                         time.sleep(0.005)
                 t0 = clock()
                 cand_d, cand_i = self.scan(task)
-                service = clock() - t0
+                t1 = clock()
+                service = t1 - t0
+                obs = self.fabric.obs
+                if obs.tracing and task.trace_ids:
+                    # worker-side scan span: sequential per shard thread, so
+                    # an "X" event on the shard's track is safe to nest
+                    obs.trace.span(
+                        "scan", t0, t1, trace_id=task.trace_ids[0],
+                        track=f"shard-{self.shard}",
+                        args={"task_id": task.task_id, "kind": task.kind,
+                              "clusters": int(task.cids.size),
+                              "trace_ids": list(task.trace_ids[:32])})
                 crc = _payload_crc(cand_d, cand_i)
                 if clock() < self.corrupt_until:
                     # bit flips in transit: payload mutates AFTER the
@@ -345,11 +359,23 @@ class ShardedFabric:
                  hedge_after_s: float = 0.08, retry_budget: int = 3,
                  harvest_timeout_s: float = 5.0, tick_s: float = 0.05,
                  miss_threshold: int = 3, idle_beat_s: float = 0.01,
-                 injector=None, name: str = "fabric"):
+                 injector=None, name: str = "fabric",
+                 obs: Optional[Observability] = None):
         self.index = index
         self.cfg = cfg
         self.clock = clock
         self.name = name
+        self.obs = obs if obs is not None else Observability.off()
+        m = self.obs.metrics
+        self._m_requeued = m.counter("fabric.requeued")   # by cause
+        self._m_hedges = m.counter("fabric.hedges")
+        self._m_retries = m.counter("fabric.retries")     # by cause
+        self._m_timeouts = m.counter("fabric.timeouts")
+        self._m_partial = m.counter("fabric.partial_queries")  # by reason
+        self._m_failovers = m.counter("fabric.failovers")
+        self._g_qdepth = m.gauge("fabric.shard_queue_depth")
+        self._g_out = m.gauge("fabric.shard_outstanding")
+        self._h_task = m.histogram("fabric.task_service_s")
         self.n_shards = int(n_shards)
         self.hedge_after_s = hedge_after_s
         self.retry_budget = int(retry_budget)
@@ -466,8 +492,14 @@ class ShardedFabric:
         over its live replicas by instantaneous load (SQ depth + outstanding
         tasks), ties to the lower shard id.  Returns ({shard: [cid]},
         [lost cid])."""
-        load = np.array([self.nodes[s].qp.sq_len() for s
-                         in range(self.n_shards)]) + self._out_per_shard
+        depths = np.array([self.nodes[s].qp.sq_len() for s
+                           in range(self.n_shards)])
+        load = depths + self._out_per_shard
+        for s in range(self.n_shards):
+            # the instantaneous load signal p2c routes on, surfaced as
+            # per-shard gauges (the "is shard 3's SQ the p99?" question)
+            self._g_qdepth.set(int(depths[s]), f"shard{s}")
+            self._g_out.set(int(self._out_per_shard[s]), f"shard{s}")
         by_shard: dict[int, list[int]] = {}
         lost: list[int] = []
         for c in wanted:
@@ -482,23 +514,35 @@ class ShardedFabric:
         return by_shard, lost
 
     def _submit(self, state: _FabricBatch, shard: int, cids: list[int],
-                attempt: int = 0) -> None:
+                attempt: int = 0, kind: str = "dispatch") -> None:
         cols = np.searchsorted(state.wanted, np.asarray(cids, np.int64))
         task = ShardTask(
             task_id=next(self._task_ids), shard=shard,
             queries=state.queries, q2=state.q2,
             cids=np.asarray(cids, np.int64),
             probe=np.ascontiguousarray(state.probe_u[:, cols]),
-            m=self.cand_m, attempt=attempt)
+            m=self.cand_m, attempt=attempt,
+            trace_ids=getattr(state.plan, "trace_ids", ()), kind=kind)
         self.epochs[shard].acquire()
-        self._outstanding[task.task_id] = _TaskRecord(
-            task, state, sent_at=self.clock())
+        sent = self.clock()
+        self._outstanding[task.task_id] = _TaskRecord(task, state,
+                                                      sent_at=sent)
         self._out_per_shard[shard] += 1
         self.stats.tasks += 1
+        if self.obs.tracing and task.trace_ids:
+            # task LIFETIME (submit -> resolve): tasks overlap on a shard's
+            # track while queued, so async "b"/"e" — closed by the single
+            # drop point, _drop_outstanding
+            self.obs.trace.abegin(
+                "task", f"task-{task.task_id}", t=sent,
+                trace_id=task.trace_ids[0], track=f"shard-{shard}",
+                args={"kind": kind, "attempt": attempt,
+                      "clusters": len(cids),
+                      "trace_ids": list(task.trace_ids[:32])})
         if not self.nodes[shard].qp.submit(task, block=False):
             # shard SQ full — treat as an instant dead-letter and requeue
             self._drop_outstanding(task.task_id)
-            self._reroute(state, cids, attempt + 1)
+            self._reroute(state, cids, attempt + 1, cause="sq_full")
 
     def prefetch(self, plan) -> _FabricBatch:
         """Fan-out: dedupe the batch's probed-cluster union, assign owners,
@@ -542,12 +586,18 @@ class ShardedFabric:
         if rec is not None:
             self.epochs[rec.task.shard].release()
             self._out_per_shard[rec.task.shard] -= 1
+            if self.obs.tracing and rec.task.trace_ids:
+                self.obs.trace.aend("task", f"task-{task_id}",
+                                    track=f"shard-{rec.task.shard}")
         return rec
 
-    def _reroute(self, state: _FabricBatch, cids, attempt: int) -> None:
+    def _reroute(self, state: _FabricBatch, cids, attempt: int,
+                 cause: str = "requeue") -> None:
         """Re-dispatch unresolved clusters under the current live replica
         map; clusters past the retry budget (or with no live replica) are
-        lost -> the touching queries degrade to partial."""
+        lost -> the touching queries degrade to partial.  ``cause`` labels
+        the requeue counter ("sq_full" | "dead_reply" | "checksum" |
+        "failover")."""
         todo = [c for c in cids if c in state.pending]
         if not todo:
             return
@@ -557,8 +607,10 @@ class ShardedFabric:
         by_shard, lost = self._p2c_assign(np.asarray(todo, np.int64))
         state.resolve(lost, lost=True)
         for shard, group in sorted(by_shard.items()):
-            self._submit(state, shard, group, attempt=attempt)
+            self._submit(state, shard, group, attempt=attempt,
+                         kind="requeue")
             self.stats.requeued_tasks += 1
+            self._m_requeued.inc(1, cause)
 
     def _declare_failed(self, shard: int) -> None:
         """Shard is dead: recompute the failover plan from the seed
@@ -574,13 +626,19 @@ class ShardedFabric:
         self.stats.failovers.append({
             "t": self.clock(), "shard": shard,
             "moved": int(fo.moved.size), "lost": int(fo.n_lost)})
+        self._m_failovers.inc(1, f"shard{shard}")
+        if self.obs.tracing:
+            self.obs.trace.instant(
+                "failover", track="router",
+                args={"shard": shard, "moved": int(fo.moved.size),
+                      "lost": int(fo.n_lost)})
         self.epochs[shard].retire()
         orphans = [tid for tid, rec in self._outstanding.items()
                    if rec.task.shard == shard]
         for tid in orphans:
             rec = self._drop_outstanding(tid)
             self._reroute(rec.state, rec.task.cids.tolist(),
-                          rec.task.attempt + 1)
+                          rec.task.attempt + 1, cause="failover")
 
     def _maybe_tick(self) -> None:
         """Advance the heartbeat logical clock at tick_s cadence; shards
@@ -612,16 +670,25 @@ class ShardedFabric:
                 self.stats.replies += 1
                 if reply.status == "dead":
                     self.stats.dead_replies += 1
+                    self._m_retries.inc(1, "dead_reply")
                     self._declare_failed(reply.shard)
                     self._reroute(rec.state, rec.task.cids.tolist(),
-                                  rec.task.attempt + 1)
+                                  rec.task.attempt + 1, cause="dead_reply")
                     continue
                 if _payload_crc(reply.cand_d, reply.cand_i) != reply.checksum:
                     self.stats.checksum_failures += 1
                     self.stats.retries += 1
+                    self._m_retries.inc(1, "checksum")
+                    if self.obs.tracing and rec.task.trace_ids:
+                        self.obs.trace.instant(
+                            "checksum_retry", track="router",
+                            trace_id=rec.task.trace_ids[0],
+                            args={"shard": reply.shard,
+                                  "task_id": reply.task_id})
                     self._reroute(rec.state, rec.task.cids.tolist(),
-                                  rec.task.attempt + 1)
+                                  rec.task.attempt + 1, cause="checksum")
                     continue
+                self._h_task.observe(reply.service_s)
                 fresh = rec.state.resolve(rec.task.cids.tolist())
                 if fresh:
                     rec.state.cand.append((reply.cand_d, reply.cand_i))
@@ -654,10 +721,18 @@ class ShardedFabric:
             if not by_shard:
                 continue
             rec.hedged = True
+            if self.obs.tracing and rec.task.trace_ids:
+                self.obs.trace.instant(
+                    "hedge", track="router",
+                    trace_id=rec.task.trace_ids[0],
+                    args={"slow_shard": rec.task.shard,
+                          "task_id": tid,
+                          "age_ms": round((now - rec.sent_at) * 1e3, 3)})
             for shard, group in sorted(by_shard.items()):
                 self._submit(state, shard, group,
-                             attempt=rec.task.attempt)
+                             attempt=rec.task.attempt, kind="hedge")
                 self.stats.hedges += 1
+                self._m_hedges.inc(1, f"shard{shard}")
 
     def harvest(self, state: _FabricBatch) -> BatchResult:
         """Collect this batch's replies (pumping every in-flight batch's),
@@ -666,6 +741,7 @@ class ShardedFabric:
         give_up = state.dispatched_at + self.harvest_timeout_s
         if state.deadline is not None:
             give_up = max(give_up, state.deadline)
+        timed_out = False
         while not state.complete:
             if self.injector is not None:
                 self.injector.poll(self.clock(), self)
@@ -678,21 +754,40 @@ class ShardedFabric:
                 # the touching queries degrade to partial — a zero-drop
                 # fabric never hangs a batch on a black-holed shard
                 self.stats.timeouts += 1
+                self._m_timeouts.inc()
+                timed_out = True
+                if self.obs.tracing:
+                    self.obs.trace.instant(
+                        "give_up", track="router",
+                        args={"unresolved": len(state.pending)})
                 state.resolve(list(state.pending), lost=True)
                 break
             self._hedge_due(state)
             if not got:
                 self._reply_event.wait(timeout=0.002)
                 self._reply_event.clear()
+        tids = getattr(state.plan, "trace_ids", ())
+        m0 = self.clock() if (self.obs.tracing and tids) else 0.0
         ids, dists = self._merge(state)
         t.scan_done = self.clock()
+        if m0:
+            # harvest runs sequentially on the poller thread, so merges on
+            # the router track never overlap — an "X" span is safe
+            self.obs.trace.span(
+                "merge", m0, t.scan_done, trace_id=tids[0], track="router",
+                args={"shard_sets": len(state.cand),
+                      "trace_ids": list(tids[:32])})
         b = t.size
         partial = state.partial_rows()[:b].copy()
-        self.stats.partial_queries += int(partial.sum())
+        partial_reason = "timeout" if timed_out else "no_replica"
+        n_partial = int(partial.sum())
+        self.stats.partial_queries += n_partial
+        if n_partial:
+            self._m_partial.inc(n_partial, partial_reason)
         return BatchResult(
             ids=ids[:b], dists=dists[:b],
             nprobe=state.plan.nprobe[:b].copy(), times=t,
-            partial=partial)
+            partial=partial, partial_reason=partial_reason)
 
     def _merge(self, state: _FabricBatch) -> tuple[np.ndarray, np.ndarray]:
         """Cross-shard merge: concatenate every shard's candidate set and

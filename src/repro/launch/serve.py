@@ -28,6 +28,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import os
 import tempfile
@@ -49,13 +50,13 @@ from repro.distributed import (
     plan_failover,
 )
 from repro.lifecycle import VersionManager
+from repro.obs import Observability
 from repro.runtime import (
     BatchPolicy,
     DynamicBatcher,
     PrefetchPipeline,
     ServeEngine,
     TenantSpec,
-    latency_percentiles,
     multi_tenant_trace,
 )
 from repro.storage import ChunkArena, IndexMeta, TieredPostings, \
@@ -148,6 +149,26 @@ def probe_recall(engine: ServeEngine, dep: Deployment,
     return recall_at_k(ids[:, :10], dep.true10[rows])
 
 
+def make_obs(args) -> Observability:
+    """One telemetry bundle per serve run: metrics are always live (they
+    are the bounded-memory latency accounting), tracing turns on iff
+    ``--trace-out`` was given, at ``--sample-rate``."""
+    return Observability(args.sample_rate, enabled=bool(args.trace_out))
+
+
+def finish_obs(obs: Observability, args) -> None:
+    """End-of-run telemetry flush: metrics summary + Perfetto export."""
+    if args.metrics_every > 0:
+        for line in obs.metrics.render():
+            print(f"[metrics] {line}")
+    if args.trace_out:
+        doc = obs.trace.export(args.trace_out)
+        print(f"[trace] {len(doc['traceEvents'])} events -> "
+              f"{args.trace_out} "
+              f"(ring-dropped {doc['otherData']['dropped_events']}); "
+              f"open in https://ui.perfetto.dev")
+
+
 def run_fabric(args) -> None:
     """Fabric drill mode (``--shards > 0``): one index served behind the
     sharded, replicated fabric; optional seeded kill mid-trace."""
@@ -166,17 +187,19 @@ def run_fabric(args) -> None:
             inj = FaultInjector(seed=0).kill(args.kill_shard_at)
         hot = (np.arange(dep.index.n_clusters) if args.replicas > 1
                else None)
+        obs = make_obs(args)
         fab = ShardedFabric(dep.index, dep.llsp, scfg,
                             n_shards=args.shards,
                             n_replicas=args.replicas, hot_clusters=hot,
-                            injector=inj, hedge_after_s=0.05, tick_s=0.02)
+                            injector=inj, hedge_after_s=0.05, tick_s=0.02,
+                            obs=obs)
         fab.warmup()
         fab.start()
         engine = ServeEngine(
             {name: fab},
             DynamicBatcher(BatchPolicy(max_batch=args.batch,
                                        max_wait_s=0.05), [name]),
-            depth=args.depth)
+            depth=args.depth, obs=obs)
         engine.start()
         trace = multi_tenant_trace(
             [TenantSpec(name, args.rate, topk_lo=10, topk_hi=50,
@@ -189,7 +212,10 @@ def run_fabric(args) -> None:
         t0 = time.monotonic()
         if inj is not None:
             inj.arm(t0)
-        lat: list[float] = []
+        # bounded recent window (heartbeat means only); the full-run
+        # percentiles come from the engine's streaming latency histogram
+        lat: collections.deque = collections.deque(maxlen=2048)
+        next_metrics = args.metrics_every or float("inf")
         try:
             for arr in trace:
                 lag = t0 + arr.t - time.monotonic()
@@ -197,15 +223,18 @@ def run_fabric(args) -> None:
                     time.sleep(lag)
                 engine.submit(dep.queries[arr.qrow], arr.topk, index=name,
                               deadline_s=arr.deadline_s)
+                if time.monotonic() - t0 >= next_metrics:
+                    next_metrics += args.metrics_every
+                    for line in obs.metrics.render():
+                        print(f"[metrics] {line}")
             r = probe_recall(engine, dep, lat, name)
         finally:
             engine.stop(drain=True)
             fab.stop()
-        lat += [c.latency for c in engine.qp.poll()
-                if c.status != "shed"]
+        engine.qp.poll()
         st, fs = engine.stats, fab.stats
         wall = time.monotonic() - t0
-        pct = latency_percentiles(lat)
+        pct = obs.metrics.histogram("engine.latency_s").summary_ms()
         print(f"[fabric] {st.completed} completions in {wall:.1f}s "
               f"({(st.completed - st.shed) / wall:.0f} q/s), "
               f"p50={pct['p50_ms']:.0f}ms p99={pct['p99_ms']:.0f}ms, "
@@ -224,6 +253,7 @@ def run_fabric(args) -> None:
               f"{fs.tasks_per_shard.tolist()}")
         print(f"[health] {name}: recall@10={r:.3f} through the engine, "
               f"dropped={st.submitted - st.rejected - st.completed}")
+        finish_obs(obs, args)
         undeploy(arena, dep)
         arena.validate()
 
@@ -256,6 +286,33 @@ operator runbook — sharded fabric mode (--shards > 0):
 
   --rebuild and --fail-shard belong to the single-node mode and are
   rejected when --shards is set (fabric epoch swap is future work).
+
+operator runbook — observability (both modes):
+
+  Metrics are always on: bounded-memory streaming histograms/counters/
+  gauges replace the old grow-forever latency lists; --metrics-every N
+  prints the full registry every N seconds (per-shard queue depth and
+  outstanding gauges, shed/degrade/partial/hedge/requeue counters
+  labeled by reason, latency and task-service histograms).
+
+  Tracing turns on when --trace-out is given: every request admitted
+  under --sample-rate carries a trace_id from submit through batcher,
+  plan, fabric fan-out (per-shard tasks incl. requeues and hedges),
+  and merge, and the run exports one Chrome/Perfetto trace_event JSON
+  at exit.  Overhead at --sample-rate 1.0 is gated <= 5% q/s by
+  benchmarks/bench_serving_pipeline.py.
+
+  capture a failover flamegraph:
+    # kill a shard mid-trace and trace every request
+    serve --shards 8 --replicas 2 --kill-shard-at 4 --duration 8 \\
+          --trace-out /tmp/drill.json --metrics-every 2
+    # then open https://ui.perfetto.dev and drag /tmp/drill.json in:
+    #   "requests" track  — request lifetimes + done:<status> terminals
+    #   "shard-N" tracks  — task lifetimes (kind=dispatch/requeue/hedge)
+    #                       and worker scan spans; the killed shard's
+    #                       tasks reappear on survivors as kind=requeue
+    #   "router" track    — failover/hedge/give_up instants, merge spans
+    #   "batch-N" lanes   — plan/gather/stream/scan stage spans
 """
 
 
@@ -296,6 +353,15 @@ def main() -> None:
     ap.add_argument("--kill-shard-at", type=float, default=0.0,
                     help="fabric mode: kill a seeded-random live shard at "
                          "this many seconds into the trace (0 = no drill)")
+    ap.add_argument("--trace-out", type=str, default="",
+                    help="write a Chrome/Perfetto trace_event JSON here at "
+                         "exit (enables tracing; see observability runbook)")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="fraction of requests traced when --trace-out is "
+                         "set (deterministic per-id sampling)")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="print the metrics registry every N seconds "
+                         "(0 = only the end-of-run summary lines)")
     args = ap.parse_args()
 
     if args.shards > 0:
@@ -328,8 +394,9 @@ def main() -> None:
                              shed="degrade", degrade_nprobe=8,
                              grouping=args.grouping)
         batcher = DynamicBatcher(policy, names)
+        obs = make_obs(args)
         engine = ServeEngine({n: d.pipeline for n, d in deps.items()},
-                             batcher, depth=args.depth)
+                             batcher, depth=args.depth, obs=obs)
         # epoch-tagged versions (lifecycle runtime): every batch routes to
         # the current epoch at formation and carries it to harvest, so the
         # mid-run rebuild below swaps atomically — in-flight batches finish
@@ -358,8 +425,12 @@ def main() -> None:
               f"kernel={'pallas' if scfg.use_kernel else 'oracle'})")
         t0 = time.monotonic()
         next_report = 1.0
+        next_metrics = args.metrics_every or float("inf")
         n_ticks = 0
-        lat: list[float] = []
+        # bounded recent window (heartbeat means only); percentiles come
+        # from the engine's streaming latency histogram, not a raw list
+        lat: collections.deque = collections.deque(maxlen=64)
+        lat_hist = obs.metrics.histogram("engine.latency_s")
         failed: list[int] = []
         did_fail = did_rebuild = False
         for arr in trace:
@@ -380,7 +451,7 @@ def main() -> None:
                 comps = engine.qp.poll()
                 lat += [c.latency for c in comps if c.status != "shed"]
                 hb.tick()
-                mean_lat = float(np.mean(lat[-64:])) if lat else 0.0
+                mean_lat = float(np.mean(lat)) if lat else 0.0
                 for s in range(n_shards):
                     if s not in failed:
                         hb.beat(s, latency=mean_lat)
@@ -389,7 +460,11 @@ def main() -> None:
                     print(f"[serve] t={el:4.1f}s completed={st.completed} "
                           f"batches={st.batches} shed={st.shed} "
                           f"degraded={st.degraded} "
-                          f"p50={latency_percentiles(lat)['p50_ms']:.0f}ms")
+                          f"p50={lat_hist.summary_ms()['p50_ms']:.0f}ms")
+            if el >= next_metrics:
+                next_metrics += args.metrics_every
+                for line in obs.metrics.render():
+                    print(f"[metrics] {line}")
             if (not did_fail and args.fail_shard >= 0
                     and el > args.duration / 2):
                 did_fail = True
@@ -433,10 +508,9 @@ def main() -> None:
             r = probe_recall(engine, dep, lat, name)
             print(f"[health] {name}: recall@10={r:.3f} (through the engine)")
         engine.stop(drain=True)
-        comps = engine.qp.poll()
-        lat += [c.latency for c in comps if c.status != "shed"]
+        engine.qp.poll()
         st = engine.stats
-        pct = latency_percentiles(lat)
+        pct = lat_hist.summary_ms()
         wall = time.monotonic() - t0
         print(f"[done] {st.completed} completions in {wall:.1f}s "
               f"({(st.completed - st.shed) / wall:.0f} q/s), "
@@ -464,6 +538,7 @@ def main() -> None:
                         hb.beat(s, latency=1e-3)
             print(f"[health] heartbeat-detected failures at shutdown: "
                   f"{hb.failed().tolist()} (injected: {failed})")
+        finish_obs(obs, args)
         for dep in deps.values():
             undeploy(arena, dep)
         arena.validate()

@@ -38,6 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import Observability
 from repro.runtime.engine import QueuePair
 
 
@@ -239,15 +240,24 @@ class UpdateLane:
     """
 
     def __init__(self, state: LiveFreshState, sq_depth: int = 4096,
-                 clock=time.monotonic):
+                 clock=time.monotonic, obs: Optional[Observability] = None):
         self.state = state
         self.qp = QueuePair(sq_depth=sq_depth)
         self.clock = clock
         self.stats = UpdateLaneStats()
+        self.obs = obs if obs is not None else Observability.off()
+        # visibility intervals stream into bounded histograms (the daemon
+        # runs for days); visible_log keeps only a RECENT raw window for
+        # tests and spot checks — stats come from the histograms
+        self._h_vis = {
+            "insert": self.obs.metrics.histogram("ingest.insert_to_visible_s"),
+            "delete": self.obs.metrics.histogram("ingest.delete_to_visible_s"),
+        }
         self._req_ids = itertools.count(1)
         self._pending_vis: list = []           # applied, awaiting coverage
         self.visible_log: list = []            # (req_id, op, visible_s)
-        self._vis_cap = 1 << 16                # ring-bounded for daemons
+        self._vis_cap = 1 << 16                # pending-ledger bound
+        self._raw_cap = 1024                   # recent raw visibility samples
 
     # -- client side -------------------------------------------------------
     def submit_insert(self, vecs: np.ndarray, block: bool = False,
@@ -368,14 +378,16 @@ class UpdateLane:
         still, done = [], 0
         for c in self._pending_vis:
             if c.seq <= covered_seq:
-                self.visible_log.append((c.req_id, c.op, at - c.submitted))
+                dt = at - c.submitted
+                self.visible_log.append((c.req_id, c.op, dt))
+                self._h_vis[c.op].observe(dt)
                 done += 1
             else:
                 still.append(c)
         self._pending_vis = still
         self.stats.visible += done
-        if len(self.visible_log) > self._vis_cap:
-            del self.visible_log[: self._vis_cap // 2]
+        if len(self.visible_log) > self._raw_cap:
+            del self.visible_log[: len(self.visible_log) - self._raw_cap // 2]
         return done
 
     def retarget(self, new_state: LiveFreshState) -> None:
@@ -384,13 +396,12 @@ class UpdateLane:
         self.state = new_state
 
     def visibility_stats(self) -> dict:
-        from repro.runtime.pipeline import latency_percentiles
-
-        ins = [v for _, op, v in self.visible_log if op == "insert"]
-        dels = [v for _, op, v in self.visible_log if op == "delete"]
+        # percentiles come from the STREAMING histograms (full run, bounded
+        # memory), not the truncated raw window — same keys as the old
+        # latency_percentiles dict
         return {
-            "insert_to_visible": latency_percentiles(ins),
-            "delete_to_visible": latency_percentiles(dels),
-            "n_visible": len(self.visible_log),
+            "insert_to_visible": self._h_vis["insert"].summary_ms(),
+            "delete_to_visible": self._h_vis["delete"].summary_ms(),
+            "n_visible": self.stats.visible,
             "n_pending": len(self._pending_vis),
         }

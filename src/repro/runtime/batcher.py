@@ -186,6 +186,7 @@ class DynamicBatcher:
                 req_id=req.req_id, index=req.index, status="shed",
                 ids=None, dists=None, nprobe=0,
                 submitted=req.arrival, completed=now,
+                reason="deadline", trace_id=req.trace_id,
             )
         self.stats.admitted += 1
         self._pending[req.index].append(req)
@@ -371,6 +372,7 @@ class DynamicBatcher:
                 req_id=r.req_id, index=r.index, status="shed",
                 ids=None, dists=None, nprobe=0,
                 submitted=r.arrival, completed=now,
+                reason="deadline", trace_id=r.trace_id,
             ))
         if not keep:
             return None, sheds

@@ -32,6 +32,9 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import Observability
+from repro.runtime.pipeline import stage_spans
+
 
 @dataclasses.dataclass
 class RoutePlan:
@@ -63,6 +66,8 @@ class SearchRequest:
     deadline: Optional[float]       # absolute clock time, None = best-effort
     arrival: float = 0.0
     route: Optional[RoutePlan] = None   # set by the poller at SQ drain
+    trace_id: int = 0               # obs identity minted at submit
+                                    # (0 = unsampled/untraced)
 
 
 @dataclasses.dataclass
@@ -72,7 +77,13 @@ class Completion:
     "partial": answered from an incomplete shard set (the fabric's
     graceful-degrade path — ids/dists are valid but may miss candidates
     from lost clusters).  "failed": the serving path itself errored; the
-    request is completed (never abandoned) with no payload."""
+    request is completed (never abandoned) with no payload.
+
+    ``reason`` says WHY for every non-"ok" status ("deadline", "drain",
+    "no_replica", "timeout", "plan_error", "prefetch_error",
+    "dispatch_error", "harvest_error", "crash_drain") — the label the
+    shed/degrade/partial counters break down by.  New fields are appended
+    with defaults so positional construction stays valid."""
     req_id: int
     index: str
     status: str
@@ -81,6 +92,8 @@ class Completion:
     nprobe: int
     submitted: float
     completed: float
+    reason: str = ""                # why, for every non-"ok" status
+    trace_id: int = 0
 
     @property
     def latency(self) -> float:
@@ -223,13 +236,20 @@ class ServeEngine:
 
     def __init__(self, pipelines: dict, batcher, qp: Optional[QueuePair] = None,
                  clock=time.monotonic, update_lanes: Optional[dict] = None,
-                 depth: int = 1):
+                 depth: int = 1, obs: Optional[Observability] = None):
         self.pipelines = dict(pipelines)
         self.batcher = batcher
         self.qp = qp or QueuePair()
         self.clock = clock
         self.depth = max(int(depth), 1)
         self.stats = EngineStats()
+        self.obs = obs if obs is not None else Observability.off()
+        m = self.obs.metrics
+        self._m_comp = m.counter("engine.completions")    # labeled by status
+        self._m_reason = m.counter("engine.not_ok")       # labeled by reason
+        self._h_lat = m.histogram("engine.latency_s")
+        self._h_service = m.histogram("engine.batch_service_s")
+        self._g_pending = m.gauge("engine.pending")
         self._req_ids = iter(range(1 << 62))
         self._swap_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
@@ -258,12 +278,20 @@ class ServeEngine:
             req_id=next(self._req_ids), index=index,
             query=np.asarray(query, np.float32), topk=int(topk),
             deadline=None if deadline_s is None else now + deadline_s,
-            arrival=now,
+            arrival=now, trace_id=self.obs.mint(),
         )
         if not self.qp.submit(req, block=block):
             self.stats.rejected += 1
+            self._m_comp.inc(1, "rejected")
             return -1
         self.stats.submitted += 1
+        if req.trace_id:
+            # async request-lifetime span: closed by the terminal event in
+            # _complete (overlapping lifetimes, so "b"/"e" not "X")
+            self.obs.trace.abegin(
+                "request", f"req-{req.trace_id}", t=now,
+                trace_id=req.trace_id, track="requests",
+                args={"index": index, "req_id": req.req_id})
         return req.req_id
 
     # -- index lifecycle (rebuild/swap flow of launch/serve.py) ------------
@@ -335,13 +363,43 @@ class ServeEngine:
         routers[name] = router
         self.batcher.routers = routers
 
+    def _complete(self, comps: list) -> None:
+        """THE completion funnel: every CQ push goes through here so the
+        metrics (status/reason counters, latency histogram) and the trace's
+        terminal events cannot drift from what clients observe."""
+        if not comps:
+            return
+        tr = self.obs.trace
+        for c in comps:
+            self._m_comp.inc(1, c.status)
+            if c.status != "ok":
+                self._m_reason.inc(1, c.reason or c.status)
+            if c.status != "shed":
+                self._h_lat.observe(c.latency)
+            if c.trace_id:
+                # exactly ONE terminal instant per admitted trace — the
+                # trace-integrity tests count these
+                tr.instant(
+                    f"done:{c.status}", t=c.completed, trace_id=c.trace_id,
+                    track="requests",
+                    args={"status": c.status, "reason": c.reason,
+                          "latency_ms": round(c.latency * 1e3, 3)})
+                tr.aend("request", f"req-{c.trace_id}", t=c.completed,
+                        track="requests")
+        self.qp.complete(comps)
+
     def _drain_sq(self, now: float) -> None:
         sheds, by_index = [], {}
+        tracing = self.obs.tracing
         for req in self.qp.pop_submissions():
             c = self.batcher.add(req, now)
             if c is not None:
                 sheds.append(c)
             else:
+                if tracing and req.trace_id:
+                    self.obs.trace.instant(
+                        "admitted", t=now, trace_id=req.trace_id,
+                        track="requests")
                 by_index.setdefault(req.index, []).append(req)
         for name, group in by_index.items():
             # eager admission routing only when formation will use it AND
@@ -357,23 +415,27 @@ class ServeEngine:
         if sheds:
             self.stats.shed += len(sheds)
             self.stats.completed += len(sheds)
-            self.qp.complete(sheds)
+            self._complete(sheds)
+        self._g_pending.set(self.batcher.pending())
 
     def _complete_batch(self, mb, result, done: float, epoch=None) -> None:
         comps = []
         partial = getattr(result, "partial", None)
+        partial_reason = getattr(result, "partial_reason", "no_replica")
         for i, req in enumerate(mb.requests):
-            status = "degraded" if mb.degraded[i] else "ok"
+            status, reason = ("degraded", "deadline") if mb.degraded[i] \
+                else ("ok", "")
             if partial is not None and partial[i]:
                 # fabric degraded mode outranks nprobe degradation: the
                 # client must know the shard set was incomplete
-                status = "partial"
+                status, reason = "partial", partial_reason
                 self.stats.partial += 1
             comps.append(Completion(
                 req_id=req.req_id, index=req.index, status=status,
                 ids=result.ids[i], dists=result.dists[i],
                 nprobe=int(result.nprobe[i]),
                 submitted=req.arrival, completed=done,
+                reason=reason, trace_id=req.trace_id,
             ))
         self.stats.degraded += int(mb.degraded.sum())
         self.stats.completed += len(comps)
@@ -393,8 +455,31 @@ class ServeEngine:
         t = result.times
         service = (t.plan_end - t.plan_start) + (t.scan_done - t.scan_dispatch)
         self.stats.service_s += service
+        self._h_service.observe(service)
         self.batcher.observe(len(mb.requests), service)
-        self.qp.complete(comps)
+        if self.obs.tracing:
+            self._emit_batch_spans(t, mb)
+        self._complete(comps)
+
+    def _emit_batch_spans(self, t, mb) -> None:
+        """Stage spans for one served batch, from the StageTimes stamps the
+        pipeline already took (zero extra clock reads).  Batches overlap in
+        the depth>1 window, so each goes on a rotating ``batch-N`` lane —
+        spans within one batch are sequential and nest under the parent."""
+        tids = [r.trace_id for r in mb.requests if r.trace_id]
+        if not tids:
+            return
+        spans = stage_spans(t)
+        if not spans:
+            return
+        lane = f"batch-{self.stats.batches % 16}"
+        tr = self.obs.trace
+        tr.span("batch", min(a for _, a, _ in spans),
+                max(b for _, _, b in spans), trace_id=tids[0], track=lane,
+                args={"n": len(mb.requests), "index": mb.index,
+                      "trace_ids": tids[:32]})
+        for name, a, b in spans:
+            tr.span(name, a, b, track=lane)
 
     def _form_and_plan(self, now: float, force: bool = False):
         """Form the next micro-batch and run its plan stage (device idle
@@ -407,7 +492,7 @@ class ServeEngine:
         if sheds:
             self.stats.shed += len(sheds)
             self.stats.completed += len(sheds)
-            self.qp.complete(sheds)
+            self._complete(sheds)
         if mb is None:
             return None
         epoch = None
@@ -436,8 +521,13 @@ class ServeEngine:
         except Exception:
             # the batch is already formed — its requests MUST complete
             # (failed), never be abandoned with clients blocked on the CQ
-            self._fail_batch(mb, now, epoch=epoch)
+            self._fail_batch(mb, now, epoch=epoch, reason="plan_error")
             return None
+        if self.obs.tracing:
+            # sampled request identities ride the plan into the fabric so
+            # every shard task (incl. requeue/hedge) tags its queries
+            plan.trace_ids = tuple(
+                r.trace_id for r in mb.requests if r.trace_id)
         return mb, pipe, plan, epoch
 
     def step(self, now: Optional[float] = None, force: bool = True) -> int:
@@ -457,21 +547,24 @@ class ServeEngine:
                                  epoch=epoch)
         return self.stats.completed - before
 
-    def _fail_batch(self, mb, done: float, epoch=None) -> None:
+    def _fail_batch(self, mb, done: float, epoch=None,
+                    reason: str = "serve_error") -> None:
         """Complete a formed batch as "failed" — the serving path errored,
         but every client gets a CQ entry (no abandoned requests, the
-        shutdown/crash-drain invariant)."""
+        shutdown/crash-drain invariant).  ``reason`` names the stage that
+        errored ("plan_error", "prefetch_error", …)."""
         comps = [Completion(
             req_id=r.req_id, index=r.index, status="failed",
             ids=None, dists=None, nprobe=0,
             submitted=r.arrival, completed=done,
+            reason=reason, trace_id=r.trace_id,
         ) for r in mb.requests]
         self.stats.failed += len(comps)
         self.stats.completed += len(comps)
         self.stats.batches += 1
         if epoch is not None:
             self.versions.harvested(epoch)
-        self.qp.complete(comps)
+        self._complete(comps)
 
     def _flush_pending(self) -> None:
         """Shed everything admitted but not yet formed (batcher pools) plus
@@ -485,10 +578,11 @@ class ServeEngine:
             req_id=r.req_id, index=r.index, status="shed",
             ids=None, dists=None, nprobe=0,
             submitted=r.arrival, completed=now,
+            reason="drain", trace_id=r.trace_id,
         ) for r in reqs]
         self.stats.shed += len(comps)
         self.stats.completed += len(comps)
-        self.qp.complete(comps)
+        self._complete(comps)
 
     def _harvest_head(self, inflight) -> None:
         mb, pipe, infl, epoch = inflight.popleft()
@@ -497,7 +591,8 @@ class ServeEngine:
         except Exception:
             # a harvest error must not kill the poller with the window
             # still holding batches: this batch fails, the rest continue
-            self._fail_batch(mb, self.clock(), epoch=epoch)
+            self._fail_batch(mb, self.clock(), epoch=epoch,
+                             reason="harvest_error")
             return
         self._complete_batch(mb, result, self.clock(), epoch=epoch)
 
@@ -508,7 +603,8 @@ class ServeEngine:
         try:
             return (mb, pipe, pipe.prefetch(plan), epoch)
         except Exception:
-            self._fail_batch(mb, self.clock(), epoch=epoch)
+            self._fail_batch(mb, self.clock(), epoch=epoch,
+                             reason="prefetch_error")
             return None
 
     def _dispatch_or_fail(self, prep, inflight) -> None:
@@ -516,7 +612,8 @@ class ServeEngine:
         try:
             inflight.append((mb, pipe, pipe.dispatch(h), epoch))
         except Exception:
-            self._fail_batch(mb, self.clock(), epoch=epoch)
+            self._fail_batch(mb, self.clock(), epoch=epoch,
+                             reason="dispatch_error")
 
     def _serve_loop(self) -> None:
         """Overlapped poller: while up to ``depth`` batches scan on device,
@@ -586,7 +683,8 @@ class ServeEngine:
                     result = pipe.harvest(
                         pipe.dispatch(pipe.prefetch(plan)))
                 except Exception:
-                    self._fail_batch(mb, self.clock(), epoch=epoch)
+                    self._fail_batch(mb, self.clock(), epoch=epoch,
+                                     reason="harvest_error")
                     continue
                 self._complete_batch(mb, result, self.clock(), epoch=epoch)
             if not self._drain_on_stop:
@@ -598,10 +696,12 @@ class ServeEngine:
             # clients blocked on CQ entries that will never arrive
             if prep is not None:
                 mb, _, _, epoch = prep
-                self._fail_batch(mb, self.clock(), epoch=epoch)
+                self._fail_batch(mb, self.clock(), epoch=epoch,
+                                 reason="crash_drain")
             while inflight:
                 mb, _, _, epoch = inflight.popleft()
-                self._fail_batch(mb, self.clock(), epoch=epoch)
+                self._fail_batch(mb, self.clock(), epoch=epoch,
+                                 reason="crash_drain")
             self._flush_pending()
             raise
 

@@ -85,6 +85,8 @@ class BatchResult:
     partial: Optional[np.ndarray] = None   # (b,) bool — query answered from
                                            # an incomplete shard set (fabric
                                            # degraded mode); None = complete
+    partial_reason: str = "no_replica"     # why the shard set was incomplete
+                                           # ("no_replica" | "timeout")
 
 
 @dataclasses.dataclass
@@ -529,6 +531,18 @@ def overlap_efficiency(times: list[StageTimes]) -> float:
         s0, s1 = prev.scan_dispatch, prev.scan_done
         hidden += max(0.0, min(g1, s1) - max(g0, s0))
     return hidden / tot if tot > 0 else 0.0
+
+
+def stage_spans(t: StageTimes) -> list[tuple[str, float, float]]:
+    """(name, t0, t1) trace spans for one batch, from the stamps StageTimes
+    already holds — the obs layer emits these with zero extra clock reads.
+    Unstamped stages (e.g. gather on the fabric path, where stream_end ==
+    gather_end) drop out."""
+    spans = [("plan", t.plan_start, t.plan_end),
+             ("gather", t.gather_start, t.gather_end),
+             ("stream", t.gather_end, t.stream_end),
+             ("scan", t.scan_dispatch, t.scan_done)]
+    return [(n, a, b) for n, a, b in spans if b > a > 0.0]
 
 
 def latency_percentiles(lat_s: list[float]) -> dict:

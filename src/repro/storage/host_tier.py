@@ -61,6 +61,9 @@ class TierStats:
     stream_s: float = 0.0          # cumulative host->device stream seconds
     events: list = dataclasses.field(default_factory=list)
     max_events: int = 4096         # ring-bounded so serving daemons don't grow
+    dropped_events: int = 0        # ring evictions — nonzero means ``events``
+                                   # is a truncated window, not the full run
+                                   # (overlap analyses must check this)
 
     def reset(self) -> None:
         self.bytes_streamed = 0
@@ -71,12 +74,15 @@ class TierStats:
         self.gather_s = 0.0
         self.stream_s = 0.0
         self.events.clear()
+        self.dropped_events = 0
 
     def record(self, ev: FetchEvent) -> None:
         self.gather_s += ev.gather_end - ev.gather_start
         self.stream_s += ev.stream_end - ev.gather_end
         if len(self.events) >= self.max_events:
-            del self.events[: self.max_events // 2]
+            drop = self.max_events // 2
+            del self.events[:drop]
+            self.dropped_events += drop
         self.events.append(ev)
 
 
