@@ -1,81 +1,278 @@
-"""Tables 4 / 5 / 6 — cost-efficiency model.
+"""Tables 4 / 5 / 6 — cost-efficiency, now MEASURED for the serving tiers.
 
 Prices from the paper's Table 1 (Dec 2025): DRAM 8 $/GB, Gen5 SSD 0.2 $/GB.
-Capacity model per system (paper §5.1 setup):
-  HNSW      — everything in DRAM (vectors + graph edges ~ 1.5x raw).
-  PipeANN   — DRAM budget 25% of raw + full raw on SSD.
-  SPANN/us  — centroids (8%) in DRAM, postings x replication on SSD
-              (DRAM:SSD ~ 1:20).
-Throughput ratios come from the measured/modeled search bench (QPS/core),
-scaled to the paper's 96-core node.
+
+Two kinds of rows:
+
+  measured — the two Helmsman serving arms, run through the actual
+    PrefetchPipeline on this container and priced from the bytes the tier
+    objects really hold:
+      helmsman_f32  — f32 postings host-resident (TieredPostings streamed):
+                      DRAM = centroids + f32 payload + ids, SSD = 0.
+      helmsman_q8   — the PR 8 default: q8 hot tier
+                      (QuantizedTieredPostings.nbytes() at the DRAM rate) +
+                      the f32 corpus demoted to the flash tier
+                      (FlashTier.nbytes at the SSD rate), adaptive f32
+                      re-rank on.
+    The old table priced helmsman from the f32 ``index.postings`` bytes at
+    the SSD rate regardless of which tier was actually serving — wrong in
+    both directions (the resident arm pays DRAM, the quantized arm holds a
+    quarter of those bytes hot).
+
+  modeled — the paper-baseline capacity models (full run only), unchanged:
+      HNSW    — vectors + graph edges (~1.5x raw) all in DRAM;
+      PipeANN — DRAM budget 25% of raw + full raw on SSD;
+      SPANN   — centroids in DRAM, replicated f32 postings on SSD.
+    Their throughput comes from the search bench (QPS/core, measured
+    compute + modeled SSD term), scaled to the paper's 96-core node.
+
+``--smoke`` builds a tiny fresh index and runs only the two measured arms
+with hard gates (hot-bytes ratio, recall parity, re-rank overlap stamps) —
+wired into CI so the quantized tier's cost claim is executed, not assumed.
+Writes results/bench/bench_cost.json.
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses as dc
 import json
 import os
+import time
 
 import numpy as np
+import jax.numpy as jnp
 
-from .common import RESULTS, emit, get_bench_index, save_result
+try:                                   # package mode (benchmarks/run.py)
+    from .common import RESULTS, emit, get_bench_index, save_result
+except ImportError:                    # standalone mode (CI smoke)
+    from common import RESULTS, emit, get_bench_index, save_result
+
+from repro.core.distance import recall_at_k
+from repro.core.ivf import brute_force_topk
+from repro.core.search import SearchConfig
+from repro.runtime import (
+    PrefetchPipeline,
+    make_quantized_pipeline,
+    overlap_efficiency,
+    rerank_overlap_efficiency,
+)
+from repro.storage import TieredPostings
 
 DRAM_PER_GB = 8.0
 SSD_PER_GB = 0.2
 CORES_PER_NODE = 96
 
+# CI gate: the quantized hot tier must hold at most this fraction of the
+# f32-resident hot bytes (D=32 layout lands ~0.30-0.32x; see ISSUE/ROADMAP).
+HOT_RATIO_GATE = 0.35
+# CI gate: q8 + flash re-rank recall@10 may trail the f32 arm by at most 1%.
+RECALL_SLACK = 0.01
 
-def run() -> dict:
-    bi = get_bench_index()
-    # throughput rows measured by bench_search_topk (run it if missing)
-    path = os.path.join(RESULTS, "search_topk.json")
-    if not os.path.exists(path):
-        from . import bench_search_topk
-        bench_search_topk.run()
-    with open(path) as f:
-        search = json.load(f)
-    by = {(r["system"], r["topk"]): r for r in search["rows"] if r}
-    k = 100 if ("helmsman", 100) in by else max(t for (_, t) in by)
 
-    raw_gb = bi.x.nbytes / 1e9
-    replication = float((np.asarray(bi.index.posting_ids) >= 0).sum()
-                        / bi.x.shape[0])
-    centroids_gb = np.asarray(bi.index.centroids).nbytes / 1e9
-    postings_gb = np.asarray(bi.index.postings).nbytes / 1e9
+def _build_smoke_index(n=4000, dim=24):
+    """Tiny fresh index, no LLSP — seconds, not minutes (the
+    bench_serving_pipeline smoke recipe)."""
+    from repro.build.kmeans import balanced_hierarchical_kmeans
+    from repro.core.ivf import IVFIndex, build_postings
+    from repro.core.spann_rules import closure_assign
+    from repro.data import PAPER_DATASETS, make_queries, make_vectors
 
-    def node_qps(system):
-        return by[(system, k)]["qps_per_core"] * CORES_PER_NODE
+    spec = dc.replace(PAPER_DATASETS["sift"], n=n, dim=dim, n_modes=16)
+    x = make_vectors(spec)
+    q, topk = make_queries(spec, 256)
+    cents, _ = balanced_hierarchical_kmeans(x, max_cluster_size=48, iters=8)
+    ca = np.asarray(closure_assign(jnp.asarray(x), jnp.asarray(cents),
+                                   eps=0.2, max_replicas=4))
+    postings, pids = build_postings(x, ca, cents.shape[0], 64)
+    index = IVFIndex(jnp.asarray(cents), jnp.asarray(postings),
+                     jnp.asarray(pids))
+    return index, None, x, q, np.minimum(topk, 50).astype(np.int32)
 
-    rows = {}
-    # HNSW: vectors+edges in DRAM; per-core compute ~ graph baseline w/o I/O
-    graph = by[("graph", k)]
-    hnsw_qps = 1.0 / (graph["compute_us"] * 1e-6) * CORES_PER_NODE
-    rows["hnsw"] = dict(dram_gb=1.5 * raw_gb, ssd_gb=0.0, qps=hnsw_qps)
-    rows["pipeann"] = dict(dram_gb=0.25 * raw_gb, ssd_gb=raw_gb,
-                           qps=node_qps("graph"))
-    rows["spann"] = dict(dram_gb=centroids_gb, ssd_gb=postings_gb,
-                         qps=node_qps("spann"))
-    rows["helmsman"] = dict(dram_gb=centroids_gb, ssd_gb=postings_gb,
-                            qps=node_qps("helmsman"))
+
+def _measure_arm(pipe, q, topk, true10, *, batch: int, repeats: int) -> dict:
+    """Run the query set through ``run_pipelined(depth=2)`` and report
+    measured throughput + recall + the stamp-derived overlap evidence."""
+    nb = len(q) // batch
+    batches = [(q[i * batch:(i + 1) * batch], topk[i * batch:(i + 1) * batch])
+               for i in range(nb)]
+    pipe.warmup((batch,))
+    pipe.run_pipelined(batches, depth=2)      # warm every program + allocator
+    ts, res = [], None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = pipe.run_pipelined(batches, depth=2)
+        ts.append(time.perf_counter() - t0)
+    nq = batch * nb
+    times = [r.times for r in res]
+    rec = recall_at_k(np.concatenate([r.ids for r in res])[:, :10],
+                      true10[:nq])
+    row = {
+        "tier": pipe.tier_kind,
+        "qps": nq / float(np.median(ts)),
+        "recall10": float(rec),
+        "gather_overlap": overlap_efficiency(times),
+        "rerank_overlap": rerank_overlap_efficiency(times),
+        "rerank_rounds_mean": float(np.mean([t.rerank_rounds for t in times])),
+        "rerank_cands_mean": float(np.mean([t.rerank_cands for t in times])),
+        "rerank_stable_stops": int(sum(t.rerank_stable_stop for t in times)),
+        "rerank_io_ms_mean": float(
+            np.mean([t.rerank_io_s for t in times])) * 1e3,
+    }
+    return row
+
+
+def _measured_rows(index, llsp, x, q, topk, true10, *, cfg, batch, repeats,
+                   workdir) -> dict:
+    """The two serving arms, priced from the tier objects' real bytes."""
+    centroids_b = int(np.asarray(index.centroids).nbytes)
+
+    # -- arm 1: f32 host-resident (the pre-PR-8 streamed default) ----------
+    f32_tier = TieredPostings(np.asarray(index.postings),
+                              np.asarray(index.posting_ids))
+    pipe_f32 = PrefetchPipeline(index, llsp, cfg, f32_tier)
+    f32_hot_b = (f32_tier.postings.nbytes + f32_tier.posting_ids.nbytes
+                 + centroids_b)
+    row_f32 = _measure_arm(pipe_f32, q, topk, true10,
+                           batch=batch, repeats=repeats)
+    row_f32.update(dram_gb=f32_hot_b / 1e9, ssd_gb=0.0, hot_bytes=f32_hot_b)
+
+    # -- arm 2: q8 hot tier + flash-resident f32 + adaptive re-rank --------
+    pipe_q8 = make_quantized_pipeline(
+        index, llsp, cfg, vectors=x,
+        flash_path=os.path.join(workdir, "bench_cost.flash.f32"))
+    q8_hot_b = pipe_q8.tier.nbytes()
+    flash_b = pipe_q8.flash.nbytes
+    row_q8 = _measure_arm(pipe_q8, q, topk, true10,
+                          batch=batch, repeats=repeats)
+    row_q8.update(dram_gb=q8_hot_b / 1e9, ssd_gb=flash_b / 1e9,
+                  hot_bytes=q8_hot_b)
+    pipe_q8.flash.release()
+
+    return {"helmsman_f32": row_f32, "helmsman_q8": row_q8,
+            "hot_ratio": q8_hot_b / f32_hot_b}
+
+
+def _price(rows: dict) -> None:
     for r in rows.values():
         r["cost"] = r["dram_gb"] * DRAM_PER_GB + r["ssd_gb"] * SSD_PER_GB
         r["qps_per_dollar"] = r["qps"] / max(r["cost"], 1e-9)
 
-    eff = {m: r["qps_per_dollar"] for m, r in rows.items()}
+
+def run(smoke: bool = False) -> dict:
+    workdir = RESULTS
+    os.makedirs(workdir, exist_ok=True)
+    if smoke:
+        index, llsp, x, q, topk = _build_smoke_index()
+        cfg = SearchConfig(k=10, nprobe_max=16, pruning="none",
+                           use_kernel=False, fused_topk=True)
+        _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+        true10 = np.asarray(t10)
+        batch, repeats = 32, 2
+    else:
+        bi = get_bench_index()
+        index, llsp, x, q, topk, true10 = (bi.index, bi.llsp, bi.x, bi.q,
+                                           bi.topk, bi.true10)
+        cfg = SearchConfig(k=10, nprobe_max=64, pruning="llsp",
+                           use_kernel=False, fused_topk=True)
+        batch, repeats = 64, 3
+
+    measured = _measured_rows(index, llsp, x, q, topk, true10, cfg=cfg,
+                              batch=batch, repeats=repeats, workdir=workdir)
+    rows = {k: v for k, v in measured.items() if k != "hot_ratio"}
+
+    if not smoke:
+        # modeled baseline rows need the search bench's QPS/core table
+        path = os.path.join(RESULTS, "search_topk.json")
+        if not os.path.exists(path):
+            try:
+                from . import bench_search_topk
+            except ImportError:
+                # standalone mode: bench_search_topk uses package-relative
+                # imports, so load it through the namespace package
+                import importlib
+                import sys
+                root = os.path.dirname(os.path.dirname(
+                    os.path.abspath(__file__)))
+                if root not in sys.path:
+                    sys.path.insert(0, root)
+                bench_search_topk = importlib.import_module(
+                    "benchmarks.bench_search_topk")
+            bench_search_topk.run()
+        with open(path) as f:
+            search = json.load(f)
+        by = {(r["system"], r["topk"]): r for r in search["rows"] if r}
+        k = 100 if ("helmsman", 100) in by else max(t for (_, t) in by)
+        raw_gb = x.nbytes / 1e9
+        graph = by[("graph", k)]
+        rows["hnsw"] = dict(
+            dram_gb=1.5 * raw_gb, ssd_gb=0.0,
+            qps=1.0 / (graph["compute_us"] * 1e-6) * CORES_PER_NODE)
+        rows["pipeann"] = dict(
+            dram_gb=0.25 * raw_gb, ssd_gb=raw_gb,
+            qps=by[("graph", k)]["qps_per_core"] * CORES_PER_NODE)
+        rows["spann"] = dict(
+            dram_gb=np.asarray(index.centroids).nbytes / 1e9,
+            ssd_gb=np.asarray(index.postings).nbytes / 1e9,
+            qps=by[("spann", k)]["qps_per_core"] * CORES_PER_NODE)
+        # the measured arms ran on this one core; scale to the node like
+        # the modeled rows so the $/QPS column compares like with like
+        for m in ("helmsman_f32", "helmsman_q8"):
+            rows[m]["qps"] *= CORES_PER_NODE
+
+    _price(rows)
+
+    f32, q8 = rows["helmsman_f32"], rows["helmsman_q8"]
     payload = {
-        "topk": k,
-        "replication": replication,
+        "smoke": smoke,
+        "prices": {"dram_per_gb": DRAM_PER_GB, "ssd_per_gb": SSD_PER_GB,
+                   "cores_per_node": CORES_PER_NODE},
+        "corpus": {"n": int(x.shape[0]), "dim": int(x.shape[1]),
+                   "raw_gb": x.nbytes / 1e9},
+        "hot_ratio": measured["hot_ratio"],
+        "hot_ratio_gate": HOT_RATIO_GATE,
+        "recall_slack": RECALL_SLACK,
         "rows": rows,
-        "helmsman_over_hnsw": eff["helmsman"] / eff["hnsw"],
-        "helmsman_over_spann": eff["helmsman"] / eff["spann"],
-        "dram_saving_vs_hnsw": 1 - rows["helmsman"]["dram_gb"] / rows["hnsw"]["dram_gb"],
+        "q8_over_f32_qps_per_dollar":
+            q8["qps_per_dollar"] / max(f32["qps_per_dollar"], 1e-9),
+        "dram_saving_q8_vs_f32": 1 - q8["dram_gb"] / f32["dram_gb"],
         "paper_claims": "250 QPS/$ = 5.4x HNSW, 2.9x SPANN (Tab 4); "
                         ">90% DRAM saving (Tab 5)",
     }
-    save_result("cost", payload)
+    save_result("bench_cost", payload)
     for m, r in rows.items():
         emit(f"cost.{m}", 0.0,
-             f"qps/$={r['qps_per_dollar']:.1f};dram={r['dram_gb']:.3f}GB")
+             f"qps/$={r['qps_per_dollar']:.1f};dram={r['dram_gb']:.4f}GB;"
+             f"ssd={r['ssd_gb']:.4f}GB"
+             + (f";recall10={r['recall10']:.3f}" if "recall10" in r else ""))
+
+    if smoke:
+        hr = payload["hot_ratio"]
+        assert hr <= HOT_RATIO_GATE, (
+            f"quantized hot tier holds {hr:.3f}x the f32-resident bytes "
+            f"(gate {HOT_RATIO_GATE})")
+        assert q8["recall10"] >= f32["recall10"] - RECALL_SLACK, (
+            f"q8+rerank recall {q8['recall10']:.4f} trails f32 "
+            f"{f32['recall10']:.4f} by more than {RECALL_SLACK}")
+        assert q8["rerank_rounds_mean"] > 0, "no re-rank rounds stamped"
+        assert q8["rerank_overlap"] > 0, (
+            "re-rank never overlapped the next batch's scan — the stamps "
+            "show no hidden I/O")
+        print(f"[smoke] cost bench OK: hot_ratio={hr:.3f} "
+              f"(gate {HOT_RATIO_GATE}), recall f32={f32['recall10']:.4f} "
+              f"q8={q8['recall10']:.4f}, "
+              f"rerank_overlap={q8['rerank_overlap']:.2f}, "
+              f"q8 $/QPS advantage="
+              f"{payload['q8_over_f32_qps_per_dollar']:.2f}x")
     return payload
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="scaled-down CI run with assertions")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -32,6 +32,12 @@ class IVFIndex:
     posting_ids: jax.Array          # (C, L) int32, -1 = padding slot
     group_centroids: Optional[jax.Array] = None  # (G, D)
     group_members: Optional[jax.Array] = None    # (G, Cg) int32, -1 pad
+    # optional int8-residual payload (core/quantize.py) — when attached, the
+    # serve paths can run their first pass over these instead of `postings`
+    # (SearchConfig.tier == "q8"); `postings` stays the f32 re-rank truth.
+    q8: Optional[jax.Array] = None               # (C, L, D) int8 residuals
+    qscale: Optional[jax.Array] = None           # (C, 1, 1) f32 per-cluster
+    qnorm2: Optional[jax.Array] = None           # (C, L) f32 s^2*||r8||^2
 
     @property
     def n_clusters(self) -> int:

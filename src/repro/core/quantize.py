@@ -43,15 +43,45 @@ class QuantizedPostings:
 
 
 def quantize_postings(postings: jax.Array,
-                      centroids: jax.Array) -> QuantizedPostings:
+                      centroids: jax.Array,
+                      posting_ids: jax.Array | None = None
+                      ) -> QuantizedPostings:
+    """Quantize padded posting lists against their own centroids.
+
+    ``posting_ids`` (C, L), when given, marks dead padding slots (id < 0):
+    their residuals are excluded from the per-cluster ``max|r|`` and their
+    codes/norms zeroed.  Without the mask a low-fill cluster whose padding
+    payload drifted from the centroid (tombstoned rows, stale pad vectors)
+    inflates the scale and coarsens the int8 grid for every LIVE vector in
+    the cluster — dead slots are already dropped downstream by the id mask,
+    so letting them set the scale buys nothing and costs recall.
+    """
     p = jnp.asarray(postings, jnp.float32)
     r = p - centroids[:, None, :]                 # residual to own centroid
+    if posting_ids is not None:
+        live = (jnp.asarray(posting_ids) >= 0)[:, :, None]
+        r = jnp.where(live, r, 0.0)
     amax = jnp.max(jnp.abs(r), axis=(1, 2), keepdims=True)
     scale = jnp.maximum(amax / 127.0, 1e-12)
     q8 = jnp.clip(jnp.round(r / scale), -127, 127).astype(jnp.int8)
     norm2 = (scale ** 2)[:, :, 0] * jnp.sum(
         q8.astype(jnp.float32) ** 2, axis=-1)
     return QuantizedPostings(q8=q8, scale=scale, norm2=norm2)
+
+
+def attach_quantized(index: IVFIndex,
+                     qp: QuantizedPostings | None = None) -> IVFIndex:
+    """Return a copy of ``index`` carrying its int8-residual payload.
+
+    When ``qp`` is omitted the postings are quantized here, with dead
+    padding slots masked out of the scale (the only correct default).  The
+    returned index serves with ``SearchConfig(tier="q8")``.
+    """
+    if qp is None:
+        qp = quantize_postings(index.postings, index.centroids,
+                               index.posting_ids)
+    return dataclasses.replace(index, q8=qp.q8, qscale=qp.scale,
+                               qnorm2=qp.norm2)
 
 
 def ivf_scan_quantized(
@@ -79,13 +109,17 @@ def ivf_scan_quantized(
 
 def search_flat_quantized(index: IVFIndex, qp: QuantizedPostings,
                           queries: jax.Array, k: int, nprobe: int,
-                          fused: bool = True):
+                          fused: bool = True, use_kernel: bool = False):
     """Quantized counterpart of core.ivf.search_flat.
 
     ``fused`` (default) routes through the candidate-compressed data path:
     the scan stage keeps only (B, ~2k) unique-by-id candidates and a cheap
     merge takes the final k — the same contract as the fused-topk kernels.
     ``fused=False`` keeps the legacy full (B, P, L) distance materialization.
+    ``use_kernel`` dispatches the fused scan to the Pallas kernel instead of
+    the reference — the same switch as ``SearchConfig.use_kernel`` in the
+    sharded serve path (interpret mode on CPU, so the default stays off for
+    this debugging-oriented entry point).
     """
     from .distance import dedup_topk, merge_candidate_topk, squared_l2_chunked, \
         topk_smallest
@@ -96,10 +130,17 @@ def search_flat_quantized(index: IVFIndex, qp: QuantizedPostings,
     if fused:
         from .search import _auto_ncand
         from repro.kernels.ref import ivf_scan_q8_topk_ref
+        from repro.kernels import ops as kops
 
-        cand_d, cand_i = ivf_scan_q8_topk_ref(
-            qp.q8, qp.scale, qp.norm2, index.centroids, index.posting_ids,
-            cids, mask, queries, _auto_ncand(k))
+        k2 = _auto_ncand(k)
+        if use_kernel:
+            cand_d, cand_i = kops.ivf_scan_q8_topk(
+                qp.q8, qp.scale, qp.norm2, index.centroids,
+                index.posting_ids, cids, mask, queries, k2=k2)
+        else:
+            cand_d, cand_i = ivf_scan_q8_topk_ref(
+                qp.q8, qp.scale, qp.norm2, index.centroids,
+                index.posting_ids, cids, mask, queries, k2)
         return merge_candidate_topk(cand_d, cand_i, k)
     dist = ivf_scan_quantized(qp, index.centroids, cids, mask, queries)
     gids = index.posting_ids[cids]

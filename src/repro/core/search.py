@@ -58,6 +58,13 @@ class SearchConfig:
                                   # multiple).  Candidates are unique-by-id,
                                   # so n_cand >= k guarantees exact parity
                                   # with the legacy dedup-top-k.
+    tier: str = "f32"             # first-pass payload: "f32" scans
+                                  # index.postings; "q8" scans the attached
+                                  # int8-residual payload (index.q8/qscale/
+                                  # qnorm2, see core.quantize.attach_quantized)
+                                  # at 1/4 the posting bytes.  Exact distances
+                                  # come back via the flash-tier re-rank
+                                  # (runtime/pipeline.py) when enabled.
 
 
 def _auto_ncand(k: int) -> int:
@@ -141,6 +148,32 @@ def _scan_and_rank(
     """
     b = queries.shape[0]
     k = cfg.k
+    if cfg.tier == "q8":
+        if index.q8 is None:
+            raise ValueError(
+                "SearchConfig(tier='q8') needs an index with the quantized "
+                "payload attached — see core.quantize.attach_quantized")
+        if cfg.fused_topk:
+            from repro.kernels.ref import ivf_scan_q8_topk_ref
+
+            return _fused_scan_candidates(
+                cfg,
+                lambda k2: kops.ivf_scan_q8_topk(
+                    index.q8, index.qscale, index.qnorm2, index.centroids,
+                    index.posting_ids, cids, probe_mask, queries, k2=k2),
+                lambda k2: ivf_scan_q8_topk_ref(
+                    index.q8, index.qscale, index.qnorm2, index.centroids,
+                    index.posting_ids, cids, probe_mask, queries, k2),
+            )
+        from .quantize import QuantizedPostings, ivf_scan_quantized
+
+        qp = QuantizedPostings(q8=index.q8, scale=index.qscale,
+                               norm2=index.qnorm2)
+        dists = ivf_scan_quantized(qp, index.centroids, cids, probe_mask,
+                                   queries)
+        ids = index.posting_ids[jnp.maximum(cids, 0)]
+        dists = jnp.where(ids < 0, jnp.inf, dists)
+        return dedup_topk(dists.reshape(b, -1), ids.reshape(b, -1), k)
     if cfg.fused_topk:
         from repro.kernels.ref import ivf_scan_topk_ref
 

@@ -55,8 +55,10 @@ from repro.runtime import (
     BatchPolicy,
     DynamicBatcher,
     PrefetchPipeline,
+    RerankConfig,
     ServeEngine,
     TenantSpec,
+    make_quantized_pipeline,
     multi_tenant_trace,
 )
 from repro.storage import ChunkArena, IndexMeta, TieredPostings, \
@@ -78,7 +80,9 @@ class Deployment:
 
 
 def deploy(arena: ChunkArena, name: str, spec, workdir: str,
-           n_shards: int, scfg: SearchConfig) -> Deployment:
+           n_shards: int, scfg: SearchConfig, tier: str = "q8",
+           rerank: RerankConfig | None = None,
+           with_rerank: bool = True) -> Deployment:
     x = make_vectors(spec)
     q, topk = make_queries(spec, 256)
     topk = np.minimum(topk, 50).astype(np.int32)
@@ -95,26 +99,46 @@ def deploy(arena: ChunkArena, name: str, spec, workdir: str,
                             hot_clusters=hot, n_replicas=2)
     meta = IndexMeta(name=name, n_clusters=index.n_clusters,
                      cluster_len=index.cluster_len, dim=index.dim,
-                     dtype="float32", extents=extents)
+                     dtype="int8" if tier == "q8" else "float32",
+                     extents=extents)
     meta.save(os.path.join(workdir, f"{name}.meta.json"))
-    tier = TieredPostings(np.asarray(index.postings),
-                          np.asarray(index.posting_ids))
-    # dup_bound auto-derives from the build's realized replication, so a
-    # rebuilt index with a different max_replicas can never outrun the
-    # oracle's pre-selection (the ROADMAP dup_bound=8 hazard)
-    pipeline = PrefetchPipeline(index, llsp, scfg, tier=tier)
+    if tier == "q8":
+        # quantized serving default: q8 hot tier + mmap flash tier (f32
+        # corpus, arena-accounted) + adaptive f32 re-rank at harvest
+        pipeline = make_quantized_pipeline(
+            index, llsp, scfg, arena=arena, name=name, vectors=x,
+            flash_path=os.path.join(workdir, f"{name}.flash.f32"),
+            rerank=rerank, with_flash=with_rerank)
+    else:
+        hot_tier = TieredPostings(np.asarray(index.postings),
+                                  np.asarray(index.posting_ids))
+        # dup_bound auto-derives from the build's realized replication, so a
+        # rebuilt index with a different max_replicas can never outrun the
+        # oracle's pre-selection (the ROADMAP dup_bound=8 hazard)
+        pipeline = PrefetchPipeline(index, llsp, scfg, tier=hot_tier)
     _, t10 = brute_force_topk(jnp.asarray(x), jnp.asarray(q), 10)
+    hot_note = ""
+    if tier == "q8":
+        f32_bytes = np.asarray(index.postings).nbytes \
+            + np.asarray(index.posting_ids).nbytes
+        fl = (f" + flash {pipeline.flash.nbytes >> 20} MiB"
+              if pipeline.flash is not None else ", rerank off")
+        hot_note = (f", hot {pipeline.tier.nbytes() >> 20} MiB "
+                    f"({pipeline.tier.nbytes() / f32_bytes:.2f}x f32)" + fl)
     print(f"[deploy] {name}: {index.n_clusters} clusters, "
           f"{len({e.device for e in extents})} devices, "
           f"arena free {arena.free_bytes >> 20} MiB, "
           f"build overlap {report.shard_overlap:.2f} "
           f"({len(report.shard_stamps)} shards), "
-          f"dup_bound {pipeline.dup_bound}")
+          f"dup_bound {pipeline.dup_bound}, tier={pipeline.tier_kind}"
+          + hot_note)
     return Deployment(name, index, llsp, spec, meta, striping, rmap,
                       pipeline, q, np.asarray(t10))
 
 
 def undeploy(arena: ChunkArena, dep: Deployment) -> None:
+    if dep.pipeline.flash is not None:
+        dep.pipeline.flash.release()   # mmap file + its arena chunks
     arena.release_index(dep.name)
     print(f"[undeploy] {dep.name}: chunks recycled "
           f"(arena free {arena.free_bytes >> 20} MiB)")
@@ -180,8 +204,11 @@ def run_fabric(args) -> None:
     name = list(PAPER_DATASETS)[0]
     with tempfile.TemporaryDirectory() as root:
         spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
+        if args.tier == "q8":
+            print("[fabric] note: the fabric shards f32 postings; "
+                  "--tier q8 applies to the single-node pipeline only")
         dep = deploy(arena, name, spec, os.path.join(root, name),
-                     args.shards, scfg)
+                     args.shards, scfg, tier="f32")
         inj = None
         if args.kill_shard_at > 0:
             inj = FaultInjector(seed=0).kill(args.kill_shard_at)
@@ -259,6 +286,39 @@ def run_fabric(args) -> None:
 
 
 FABRIC_RUNBOOK = """\
+operator runbook — quantized tier + flash re-rank (single-node default):
+
+  The first pass serves from the int8-residual hot tier (~0.3x the f32
+  posting bytes resident in host DRAM); the f32 vectors live in a
+  mmap-backed flash file and only the ~2k fused-topk candidates per query
+  are read back and exact-rescored at harvest.  Re-ranking walks the
+  candidates in rounds and stops once the exact top-k is stable
+  (FusionANNS-style adaptive stop); the flash reads run on their own
+  submission lane so batch i's re-rank I/O overlaps batch i+1's scan —
+  verified from the stage stamps, see rerank_overlap_efficiency.
+
+  --tier q8|f32       first-pass payload (default q8).  f32 restores the
+                      all-resident PR 2 pipeline (A/B baseline; also what
+                      benchmarks/bench_cost.py prices as the DRAM-heavy
+                      row of the $/QPS table)
+  --no-rerank         serve raw q8 distances (recall drops <1% on the
+                      bench corpora; use to isolate re-rank cost)
+  --rerank-round N    candidates exact-scored per re-rank round (64)
+  --rerank-stable N   stop after N consecutive rounds leave the exact
+                      top-k unchanged (1)
+
+  reading the output:
+    [deploy] ... tier=q8, hot X MiB (0.31x f32) + flash Y MiB
+        the cost-model split: hot = DRAM-resident bytes, flash = SSD
+    [metrics] engine.rerank_rounds / rerank_cands / rerank_io_s
+        adaptive-stop behaviour under live traffic; rerank_stop counts
+        stable vs exhausted walks
+    --trace-out lanes gain a "rerank" span per batch; its overlap with
+        the NEXT batch's scan span is the cost-thesis I/O overlap
+
+  rebuilds inherit the tier: --rebuild under --tier q8 quantizes the new
+  epoch's shards before the swap (RebuildReport.tier == "q8").
+
 operator runbook — sharded fabric mode (--shards > 0):
 
   Serve one index behind the sharded, replicated fabric instead of the
@@ -343,6 +403,18 @@ def main() -> None:
     ap.add_argument("--no-kernel", action="store_true",
                     help="packed-domain jnp oracle instead of the Pallas "
                          "kernel (interpret-mode on CPU)")
+    ap.add_argument("--tier", choices=("q8", "f32"), default="q8",
+                    help="first-pass posting payload: int8-residual hot "
+                         "tier + flash f32 re-rank (default) or the "
+                         "all-f32-resident baseline (see runbook)")
+    ap.add_argument("--no-rerank", action="store_true",
+                    help="q8 tier only: skip the flash-tier exact re-rank "
+                         "and serve raw quantized distances")
+    ap.add_argument("--rerank-round", type=int, default=64,
+                    help="candidates exact-scored per re-rank round")
+    ap.add_argument("--rerank-stable", type=int, default=1,
+                    help="stop re-ranking after this many consecutive "
+                         "rounds leave the top-k unchanged")
     ap.add_argument("--shards", type=int, default=0,
                     help="serve through the sharded fabric with this many "
                          "shards (0 = single-node pipeline; see runbook "
@@ -381,13 +453,17 @@ def main() -> None:
                         use_kernel=not args.no_kernel, fused_topk=True)
     names = list(PAPER_DATASETS)[: args.indexes]
     deadline_s = args.deadline_ms * 1e-3 or None
+    rerank = RerankConfig(round_size=args.rerank_round,
+                          stable_rounds=args.rerank_stable)
     deps: dict[str, Deployment] = {}
     tiers_seen: list = []          # every deployed tier, incl. swapped-out
     with tempfile.TemporaryDirectory() as root:
         for name in names:
             spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
             deps[name] = deploy(arena, name, spec,
-                                os.path.join(root, name), n_shards, scfg)
+                                os.path.join(root, name), n_shards, scfg,
+                                tier=args.tier, rerank=rerank,
+                                with_rerank=not args.no_rerank)
             tiers_seen.append(deps[name].pipeline.tier)
 
         policy = BatchPolicy(max_batch=args.batch, max_wait_s=0.05,
@@ -483,9 +559,12 @@ def main() -> None:
                 name_r = names[0]
                 old = deps[name_r]
                 spec = dataclasses.replace(old.spec, seed=old.spec.seed + 1)
+                # the rebuild inherits the serving tier: a q8 deployment
+                # re-quantizes the fresh epoch's shards before the swap
                 fresh = deploy(arena, name_r + "_r1", spec,
                                os.path.join(root, f"{name_r}_r1"),
-                               n_shards, scfg)
+                               n_shards, scfg, tier=args.tier, rerank=rerank,
+                               with_rerank=not args.no_rerank)
                 tiers_seen.append(fresh.pipeline.tier)
                 fresh.pipeline.warmup(batch_sizes=warm_sizes)
                 old_ep, new_ep = vm.swap(name_r, fresh.pipeline)

@@ -77,6 +77,11 @@ class RebuildReport:
     t_built: float = 0.0
     t_swapped: float = 0.0
     carried_ops: int = 0               # delta rows applied during the build
+    tier: str = "f32"                  # first-pass payload the new epoch's
+                                       # pipeline serves ("q8" = quantized
+                                       # shards + flash re-rank tier) — the
+                                       # rebuild must preserve the serving
+                                       # tier choice across swaps
 
     @property
     def io_cut_x(self) -> float:
@@ -326,6 +331,10 @@ class RebuildScheduler:
             dim=self.corpus.dim, capacity=capacity, n_main=self.corpus.n,
             next_id=None, seq0=st.seq)     # seq stays globally monotonic
         pipeline = self.make_pipeline(index, new_state)
+        # delta rebuilds must emit the same serving tier they replace: a
+        # make_pipeline hook that silently falls back to f32 would undo the
+        # quantized default at the first nightly rebuild
+        rep.tier = getattr(pipeline, "tier_kind", "f32")
 
         # -- atomic swap: carry the ops applied during the build -----------
         with st.lock:

@@ -47,9 +47,12 @@ from .loadgen import (
 from .pipeline import (
     BatchResult,
     PrefetchPipeline,
+    RerankConfig,
     StageTimes,
     inflight_depth,
     latency_percentiles,
+    make_quantized_pipeline,
     max_id_replicas,
     overlap_efficiency,
+    rerank_overlap_efficiency,
 )

@@ -250,6 +250,13 @@ class ServeEngine:
         self._h_lat = m.histogram("engine.latency_s")
         self._h_service = m.histogram("engine.batch_service_s")
         self._g_pending = m.gauge("engine.pending")
+        # flash-tier re-rank stage (quantized serving): round/candidate
+        # distributions + the adaptive-stop hit counter, fed straight from
+        # the pipeline's StageTimes stamps at harvest
+        self._h_rr_rounds = m.histogram("engine.rerank_rounds")
+        self._h_rr_cands = m.histogram("engine.rerank_cands")
+        self._h_rr_io = m.histogram("engine.rerank_io_s")
+        self._m_rr_stop = m.counter("engine.rerank_stop")  # labeled by kind
         self._req_ids = iter(range(1 << 62))
         self._swap_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
@@ -454,6 +461,13 @@ class ServeEngine:
         # ~2x, making admission control shed meetable requests)
         t = result.times
         service = (t.plan_end - t.plan_start) + (t.scan_done - t.scan_dispatch)
+        if t.rerank_end > t.rerank_start:
+            service += t.rerank_end - t.rerank_start
+            self._h_rr_rounds.observe(t.rerank_rounds)
+            self._h_rr_cands.observe(t.rerank_cands)
+            self._h_rr_io.observe(t.rerank_io_s)
+            self._m_rr_stop.inc(
+                1, "stable" if t.rerank_stable_stop else "exhausted")
         self.stats.service_s += service
         self._h_service.observe(service)
         self.batcher.observe(len(mb.requests), service)

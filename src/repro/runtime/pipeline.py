@@ -47,7 +47,8 @@ from repro.core.distance import (
 )
 from repro.core.search import SearchConfig, _auto_ncand, _scan_and_rank, decide_nprobe
 from repro.kernels import ops as kops
-from repro.storage.host_tier import TieredPostings
+from repro.storage.host_tier import QuantizedTieredPostings, TieredPostings
+from repro.storage.flash_tier import FlashTier
 
 
 @dataclasses.dataclass
@@ -68,10 +69,19 @@ class StageTimes:
     union_bytes: int = 0           # payload bytes of the union (measured at
                                    # fetch, excludes pad/sentinel rows) — the
                                    # locality-grouping objective, per batch
+    # flash-tier f32 re-rank stage (quantized serving; zeros = no rerank ran)
+    rerank_start: float = 0.0
+    rerank_end: float = 0.0
+    rerank_io_s: float = 0.0       # seconds spent inside flash read bursts
+    rerank_rounds: int = 0         # adaptive-stop rounds actually executed
+    rerank_cands: int = 0          # candidates exact-scored before the stop
+    rerank_stable_stop: bool = False  # True = top-k went stable before the
+                                      # candidate list was exhausted
 
     @property
     def total(self) -> float:
-        return self.scan_done - self.plan_start
+        end = self.rerank_end if self.rerank_end > 0.0 else self.scan_done
+        return end - self.plan_start
 
 
 @dataclasses.dataclass
@@ -96,6 +106,8 @@ class _Plan:
     pmask: np.ndarray              # (bp, P) bool
     nprobe: np.ndarray             # (bp,)
     times: StageTimes
+    queries_host: Optional[np.ndarray] = None  # (bp, D) — kept for the
+                                               # flash-tier re-rank stage
 
 
 @dataclasses.dataclass
@@ -112,6 +124,24 @@ class _Inflight:
     times: StageTimes
     size: int
     fresh_seq: int = -1
+    queries_host: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RerankConfig:
+    """FusionANNS-style adaptive re-rank over the flash tier (2409.16576 §5).
+
+    Candidates arrive sorted by approximate (q8) distance; re-ranking walks
+    them in rounds of ``round_size``, reading the f32 rows from the flash
+    tier and exact-scoring them.  After each round the current exact top-k
+    is compared against the previous round's: once it survives
+    ``stable_rounds`` consecutive rounds unchanged (per the whole batch —
+    the TPU batch is the scheduling unit), further candidates are provably
+    unlikely to displace it and the walk stops.  ``max_rounds`` caps the
+    walk (0 = only the candidate width bounds it)."""
+    round_size: int = 64
+    stable_rounds: int = 1
+    max_rounds: int = 0
 
 
 def max_id_replicas(posting_ids) -> int:
@@ -174,6 +204,43 @@ def _scan_streamed_jit(packed, packed_ids, remap, pmask, queries,
     return merge_candidate_topk(cd, ci, cfg.k)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "dup_bound"))
+def _scan_streamed_q8_jit(packed_q8, packed_scale, packed_norm2, packed_cent,
+                          packed_ids, remap, pmask, queries,
+                          cfg: SearchConfig, *, dup_bound: int):
+    """Candidate-compressed scan over STREAMED int8-residual rows — the
+    quantized twin of :func:`_scan_streamed_jit`, same packed-domain
+    contract (remap-as-cids for the kernel; one int8->f32 matmul + the
+    closed-form residual correction for the oracle).  ``packed_cent`` is
+    the owning centroid per packed row (the residual distance form needs
+    it), gathered by the tier alongside the codes."""
+    k2 = cfg.n_cand or _auto_ncand(cfg.k)
+    if cfg.use_kernel:
+        cd, ci = kops.ivf_scan_q8_topk(
+            packed_q8, packed_scale, packed_norm2, packed_cent, packed_ids,
+            remap, pmask, queries, k2=k2)
+    else:
+        r, l, dim = packed_q8.shape
+        b = queries.shape[0]
+        g8 = packed_q8.astype(jnp.float32)                       # (R, L, D)
+        qc = queries[:, None, :] - packed_cent[None, :, :]       # (B, R, D)
+        cross = jnp.einsum("brd,rld->brl", qc, g8)               # (B, R, L)
+        s = packed_scale[:, 0, 0][None, :, None]                 # (1, R, 1)
+        d = (jnp.sum(qc * qc, axis=-1)[:, :, None]
+             - 2.0 * s * cross + packed_norm2[None, :, :])
+        d = jnp.maximum(d, 0.0).reshape(b, r * l)
+        member = jnp.zeros((b, r), jnp.int32).at[
+            jnp.arange(b)[:, None], remap
+        ].add(pmask.astype(jnp.int32))                           # (B, R)
+        live = (member > 0)[:, :, None] & (packed_ids >= 0)[None, :, :]
+        d = jnp.where(live.reshape(b, r * l), d, jnp.inf)
+        ids = jnp.broadcast_to(packed_ids.reshape(1, r * l), (b, r * l))
+        m = min(k2 * dup_bound, r * l)
+        nd, pos = topk_smallest(d, m)
+        cd, ci = dedup_topk(nd, jnp.take_along_axis(ids, pos, axis=-1), k2)
+    return merge_candidate_topk(cd, ci, cfg.k)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _scan_resident_jit(index, queries, cids, pmask, cfg: SearchConfig):
     return _scan_and_rank(index, queries, cids, pmask, cfg)
@@ -214,11 +281,19 @@ class PrefetchPipeline:
                  tier: Optional[TieredPostings] = None, *,
                  pad_batch: int = 16, row_bucket: int = 256,
                  dup_bound: Optional[int] = None,
-                 fresh_source=None):
+                 fresh_source=None,
+                 flash: Optional[FlashTier] = None,
+                 rerank: Optional[RerankConfig] = None):
         self.index = index
         self.llsp_params = llsp_params
         self.cfg = cfg
         self.tier = tier
+        # flash-tier f32 re-rank (quantized serving): when ``flash`` is set
+        # the scan stage keeps its full ~2k candidate width and harvest
+        # exact-rescores candidates from the flash tier with adaptive stop.
+        self.flash = flash
+        self.rerank = rerank if rerank is not None else (
+            RerankConfig() if flash is not None else None)
         self.pad_batch = pad_batch
         self.row_bucket = row_bucket
         # freshness hook (lifecycle/ingest.py): a zero-arg callable returning
@@ -239,13 +314,22 @@ class PrefetchPipeline:
         self.dup_bound = max(int(dup_bound), 1)
         self._gatherer = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="prefetch")
+        # rerank reads get their own single-lane SQ (same DMA-engine idiom
+        # as the prefetch gatherer): sharing the gatherer would queue batch
+        # i's rerank I/O behind batch i+1's union gather and serialize the
+        # two stages the overlap argument needs concurrent.
+        self._reranker = (ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="rerank")
+            if flash is not None else None)
 
     @property
     def _scan_cfg(self) -> SearchConfig:
-        """Scan-stage config: with a fresh view attached the main scan keeps
-        n_cand-wide candidates (instead of k) so the post-scan tombstone
-        filter cannot starve the final merge."""
-        if self.fresh_source is None:
+        """Scan-stage config: with a fresh view attached — or the flash
+        re-rank enabled — the main scan keeps n_cand-wide candidates
+        (instead of k): the tombstone filter must not starve the final
+        merge, and the re-ranker needs the full ~2k candidate set, not the
+        already-collapsed top-k."""
+        if self.fresh_source is None and self.flash is None:
             return self.cfg
         k2 = self.cfg.n_cand or _auto_ncand(self.cfg.k)
         # pin n_cand too: otherwise the scan derives a fresh auto width
@@ -255,6 +339,16 @@ class PrefetchPipeline:
     @property
     def streamed(self) -> bool:
         return self.tier is not None
+
+    @property
+    def quantized(self) -> bool:
+        return getattr(self.tier, "quantized", False) \
+            or (self.cfg.tier == "q8" and self.tier is None)
+
+    @property
+    def tier_kind(self) -> str:
+        """"q8" | "f32" first-pass payload (lifecycle reporting)."""
+        return "q8" if self.quantized else "f32"
 
     # -- stages ------------------------------------------------------------
     def _padded_inputs(self, queries, topk):
@@ -324,10 +418,10 @@ class PrefetchPipeline:
         pmask = (np.arange(cids.shape[1])[None, :] < nprobe[:, None]) \
             & (cids >= 0)
         t.plan_end = time.perf_counter()
-        return _Plan(qd, cids, pmask, nprobe, t)
+        return _Plan(qd, cids, pmask, nprobe, t, queries_host=q)
 
     def _gather(self, plan: _Plan):
-        packed, pids, remap = self.tier.fetch(
+        fetched = self.tier.fetch(
             plan.cids, plan.pmask, bucket=self.row_bucket)
         ev = self.tier.stats.events[-1]    # same thread as the fetch: safe
         plan.times.gather_start = ev.gather_start
@@ -337,7 +431,7 @@ class PrefetchPipeline:
         plan.times.clusters_requested = ev.clusters_requested
         plan.times.union_clusters = ev.clusters_union
         plan.times.union_bytes = ev.union_bytes
-        return packed, pids, remap
+        return fetched
 
     def prefetch(self, plan: _Plan) -> _Prep:
         """Start the host gather + device stream on the worker thread."""
@@ -355,13 +449,25 @@ class PrefetchPipeline:
         plan = prep.plan
         t = plan.times
         if self.streamed:
-            packed, pids, remap = prep.fut.result()
+            fetched = prep.fut.result()
             t.scan_dispatch = time.perf_counter()
-            if reference:
+            if getattr(self.tier, "quantized", False):
+                if reference:
+                    raise ValueError(
+                        "reference scan is an f32-tier A/B baseline; the "
+                        "quantized tier has no pre-runtime twin")
+                q8, scale, norm2, cents, pids, remap = fetched
+                od, oi = _scan_streamed_q8_jit(
+                    q8, scale, norm2, cents, pids, remap,
+                    jnp.asarray(plan.pmask), plan.queries_dev,
+                    self._scan_cfg, dup_bound=self.dup_bound)
+            elif reference:
+                packed, pids, remap = fetched
                 od, oi = _scan_reference_jit(
                     packed, pids, remap, jnp.asarray(plan.pmask),
                     plan.queries_dev, self._scan_cfg)
             else:
+                packed, pids, remap = fetched
                 od, oi = _scan_streamed_jit(
                     packed, pids, remap, jnp.asarray(plan.pmask),
                     plan.queries_dev, self._scan_cfg,
@@ -377,19 +483,112 @@ class PrefetchPipeline:
             if snap is not None:
                 from repro.core.fresh import merge_fresh
 
+                # with the re-ranker on, stay candidate-wide through the
+                # fresh merge — the narrowing to k happens after rescoring
+                keep = self._scan_cfg.k if self.flash is not None else self.cfg.k
                 od, oi = merge_fresh(
                     od, oi, plan.queries_dev, snap.delta_vecs,
-                    snap.delta_ids, snap.tombstone, self.cfg.k)
+                    snap.delta_ids, snap.tombstone, keep)
                 seq = snap.seq
-        return _Inflight(od, oi, plan.nprobe, t, t.size, fresh_seq=seq)
+        return _Inflight(od, oi, plan.nprobe, t, t.size, fresh_seq=seq,
+                         queries_host=plan.queries_host)
 
     def harvest(self, infl: _Inflight) -> BatchResult:
-        """Block on the scan outputs; truncate batch padding."""
+        """Block on the scan outputs; truncate batch padding.  With the
+        flash tier attached, exact-rescore the candidates here — harvest of
+        batch i runs while batch i+1's scan is already in flight (the
+        poller/pipelined drivers dispatch ahead), so the rerank I/O lands
+        inside the next scan window by construction, and the stamps prove
+        it per run (:func:`rerank_overlap_efficiency`)."""
         ids = np.asarray(infl.out_i)[: infl.size]
         dists = np.asarray(infl.out_d)[: infl.size]
         infl.times.scan_done = time.perf_counter()
+        if self.flash is not None and infl.size > 0:
+            dists, ids = self._rerank(
+                infl.queries_host[: infl.size], dists, ids, infl.times)
         return BatchResult(ids, dists, infl.nprobe[: infl.size].copy(),
                            infl.times, fresh_seq=infl.fresh_seq)
+
+    def _rerank(self, queries: np.ndarray, cand_d: np.ndarray,
+                cand_i: np.ndarray, t: StageTimes
+                ) -> tuple[np.ndarray, np.ndarray]:
+        """Flash-tier exact re-rank with FusionANNS adaptive stop.
+
+        Candidates arrive ascending by q8-approx distance.  Rounds of
+        ``rerank.round_size`` columns are exact-scored from the flash tier;
+        each round's read is issued on the rerank SQ one round AHEAD of the
+        scoring (double-buffered), so flash I/O overlaps the host math the
+        same way the prefetch gather overlaps the device scan.  Ids outside
+        the flash tier (fresh-delta candidates, already exact) and padding
+        (-1) keep their incoming distance.  Stops once the batch's exact
+        top-k survives ``stable_rounds`` rounds unchanged."""
+        rc = self.rerank
+        k = self.cfg.k
+        b, n = cand_i.shape
+        t.rerank_start = time.perf_counter()
+        exact = np.array(cand_d, np.float32, copy=True)
+        step = max(int(rc.round_size), 1)
+        n_rounds = -(-n // step)
+        if rc.max_rounds > 0:
+            n_rounds = min(n_rounds, int(rc.max_rounds))
+        futs: dict[int, object] = {}
+
+        def _submit(r):
+            if r < n_rounds and r not in futs:
+                futs[r] = self._reranker.submit(
+                    self.flash.read, cand_i[:, r * step:(r + 1) * step])
+
+        prev_top = None
+        stable = 0
+        rounds = 0
+        hi = 0
+        _submit(0)
+        for r in range(n_rounds):
+            _submit(r + 1)                 # double-buffer the next read
+            uids, rows = futs.pop(r).result()
+            ev = self.flash.stats.events[-1]
+            t.rerank_io_s += ev.end - ev.start
+            lo, hi = r * step, min(n, (r + 1) * step)
+            cols = cand_i[:, lo:hi]
+            in_flash = (cols >= 0) & (cols < self.flash.n)
+            if uids.size:
+                pos = np.searchsorted(uids, np.clip(cols, 0, None))
+                pos = np.clip(pos, 0, uids.size - 1)
+                hit = in_flash & (uids[pos] == np.clip(cols, 0, None))
+                vecs = rows[pos]                       # (b, w, D)
+                d = np.sum((queries[:, None, :] - vecs) ** 2, axis=-1)
+                exact[:, lo:hi] = np.where(hit, d, exact[:, lo:hi])
+            rounds = r + 1
+            # adaptive stop: current exact top-k over the scored prefix
+            if hi >= k:
+                part = np.argpartition(exact[:, :hi], k - 1, axis=1)[:, :k]
+                rowd = np.take_along_axis(exact[:, :hi], part, axis=1)
+                order = np.argsort(rowd, axis=1, kind="stable")
+                sel = np.take_along_axis(part, order, axis=1)
+                top = np.take_along_axis(cand_i[:, :hi], sel, axis=1)
+                if prev_top is not None and np.array_equal(top, prev_top):
+                    stable += 1
+                    if stable >= max(int(rc.stable_rounds), 1):
+                        t.rerank_stable_stop = hi < n
+                        break
+                else:
+                    stable = 0
+                prev_top = top
+        for f in futs.values():            # a speculative read may be queued
+            f.cancel()
+        # final top-k: exact over the rescored prefix (unvisited tail keeps
+        # approx order and, by the stop rule, cannot displace the stable set)
+        hi = max(hi, min(n, k))
+        part = np.argpartition(exact[:, :hi], min(k, hi) - 1, axis=1)[:, :k]
+        rowd = np.take_along_axis(exact[:, :hi], part, axis=1)
+        order = np.argsort(rowd, axis=1, kind="stable")
+        sel = np.take_along_axis(part, order, axis=1)
+        out_d = np.take_along_axis(exact[:, :hi], sel, axis=1)
+        out_i = np.take_along_axis(cand_i[:, :hi], sel, axis=1)
+        t.rerank_rounds = rounds
+        t.rerank_cands = int(hi)
+        t.rerank_end = time.perf_counter()
+        return out_d, out_i
 
     def warmup(self, batch_sizes=(16, 32), max_rows: Optional[int] = None
                ) -> int:
@@ -405,8 +604,9 @@ class PrefetchPipeline:
                 self.serve_batch(np.zeros((bp, self.index.dim), np.float32),
                                  10)
             return len(batch_sizes) + self._warm_fresh(batch_sizes)
-        c = self.tier.postings.shape[0]
-        l, d = self.tier.postings.shape[1], self.tier.postings.shape[2]
+        quant = getattr(self.tier, "quantized", False)
+        payload = self.tier.q8 if quant else self.tier.postings
+        c, l, d = payload.shape
         max_rows = max_rows or c + 1
         max_rows = -(-max_rows // self.row_bucket) * self.row_bucket
         n = 0
@@ -418,12 +618,23 @@ class PrefetchPipeline:
                       jnp.full((bp,), 10, jnp.int32), self.cfg)
             p = min(self.cfg.nprobe_max, c)
             for rows in range(self.row_bucket, max_rows + 1, self.row_bucket):
-                _scan_streamed_jit(
-                    jnp.zeros((rows, l, d), jnp.float32),
-                    jnp.full((rows, l), -1, jnp.int32),
-                    jnp.zeros((bp, p), jnp.int32),
-                    jnp.zeros((bp, p), bool), qd, self._scan_cfg,
-                    dup_bound=self.dup_bound)
+                if quant:
+                    _scan_streamed_q8_jit(
+                        jnp.zeros((rows, l, d), jnp.int8),
+                        jnp.ones((rows, 1, 1), jnp.float32),
+                        jnp.zeros((rows, l), jnp.float32),
+                        jnp.zeros((rows, d), jnp.float32),
+                        jnp.full((rows, l), -1, jnp.int32),
+                        jnp.zeros((bp, p), jnp.int32),
+                        jnp.zeros((bp, p), bool), qd, self._scan_cfg,
+                        dup_bound=self.dup_bound)
+                else:
+                    _scan_streamed_jit(
+                        jnp.zeros((rows, l, d), jnp.float32),
+                        jnp.full((rows, l), -1, jnp.int32),
+                        jnp.zeros((bp, p), jnp.int32),
+                        jnp.zeros((bp, p), bool), qd, self._scan_cfg,
+                        dup_bound=self.dup_bound)
                 n += 1
         return n + self._warm_fresh(batch_sizes)
 
@@ -541,8 +752,84 @@ def stage_spans(t: StageTimes) -> list[tuple[str, float, float]]:
     spans = [("plan", t.plan_start, t.plan_end),
              ("gather", t.gather_start, t.gather_end),
              ("stream", t.gather_end, t.stream_end),
-             ("scan", t.scan_dispatch, t.scan_done)]
+             ("scan", t.scan_dispatch, t.scan_done),
+             ("rerank", t.rerank_start, t.rerank_end)]
     return [(n, a, b) for n, a, b in spans if b > a > 0.0]
+
+
+def rerank_overlap_efficiency(times: list[StageTimes]) -> float:
+    """Fraction of batch i's re-rank seconds landing inside batch i+1's
+    scan-in-flight window — the quantized-serving twin of
+    :func:`overlap_efficiency`.  The poller dispatches batch i+1's scan
+    before harvesting batch i, so the flash reads + exact rescoring of i
+    run while i+1 occupies the device; this measures that claim from the
+    stamps instead of asserting it.  Batches that didn't re-rank drop out;
+    returns 0.0 when nothing re-ranked or nothing followed."""
+    tot = 0.0
+    hidden = 0.0
+    for cur, nxt in zip(times, times[1:]):
+        r0, r1 = cur.rerank_start, cur.rerank_end
+        if r1 <= r0:
+            continue
+        tot += r1 - r0
+        s0, s1 = nxt.scan_dispatch, nxt.scan_done
+        hidden += max(0.0, min(r1, s1) - max(r0, s0))
+    return hidden / tot if tot > 0 else 0.0
+
+
+def _vectors_from_postings(index) -> np.ndarray:
+    """Reconstruct the (N, D) f32 corpus from the posting payload: every
+    live slot carries its vector, closure replicas carry identical copies,
+    so a scatter by global id is exact.  This is what lets the lifecycle
+    rebuild path mint a flash tier without threading the raw corpus through
+    every delta build."""
+    pids = np.asarray(index.posting_ids)
+    payload = np.asarray(index.postings, np.float32)
+    dim = payload.shape[-1]
+    flat_ids = pids.reshape(-1)
+    live = flat_ids >= 0
+    n = int(flat_ids[live].max()) + 1 if live.any() else 0
+    out = np.zeros((n, dim), np.float32)
+    out[flat_ids[live]] = payload.reshape(-1, dim)[live]
+    return out
+
+
+def make_quantized_pipeline(index, llsp_params, cfg: SearchConfig, *,
+                            epoch: int = 0, arena=None, flash_path=None,
+                            name: str = "helmsman", vectors=None,
+                            rerank: Optional[RerankConfig] = None,
+                            with_flash: bool = True,
+                            fresh_source=None, **pipe_kw) -> PrefetchPipeline:
+    """Build the quantized-default serving pipeline for one index version:
+    q8 hot tier (dead slots masked out of the scale), f32 corpus demoted to
+    the mmap flash tier, adaptive re-rank on.  Used by launch/serve.py at
+    deploy AND as the lifecycle ``make_pipeline`` hook so delta rebuilds
+    emit quantized shards — the tier choice survives a rebuild+swap.
+
+    ``vectors`` (N, D) is the id-addressed f32 corpus; when omitted it is
+    reconstructed from the posting payload (exact — pads are masked).
+    ``with_flash=False`` serves raw q8 distances with no re-rank tier
+    (the --no-rerank A/B arm).
+    """
+    from repro.core.quantize import quantize_postings
+    from repro.storage.host_tier import QuantizedTieredPostings
+
+    qp = quantize_postings(index.postings, index.centroids,
+                           index.posting_ids)
+    tier = QuantizedTieredPostings(
+        np.asarray(qp.q8), np.asarray(qp.scale), np.asarray(qp.norm2),
+        np.asarray(index.centroids), np.asarray(index.posting_ids),
+        epoch=epoch)
+    flash = None
+    if with_flash:
+        if vectors is None:
+            vectors = _vectors_from_postings(index)
+        flash = FlashTier(vectors, flash_path, arena=arena, name=name,
+                          epoch=epoch)
+    cfg = dataclasses.replace(cfg, tier="q8")
+    return PrefetchPipeline(index, llsp_params, cfg, tier,
+                            flash=flash, rerank=rerank,
+                            fresh_source=fresh_source, **pipe_kw)
 
 
 def latency_percentiles(lat_s: list[float]) -> dict:

@@ -7,4 +7,10 @@ from .layout import (
     make_replica_map,
     plan_striping,
 )
-from .host_tier import FetchEvent, TieredPostings, TierStats
+from .host_tier import (
+    FetchEvent,
+    QuantizedTieredPostings,
+    TieredPostings,
+    TierStats,
+)
+from .flash_tier import FlashStats, FlashTier, ReadEvent

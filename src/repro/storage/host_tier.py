@@ -86,6 +86,29 @@ class TierStats:
         self.events.append(ev)
 
 
+def _plan_union(cids: np.ndarray, mask: Optional[np.ndarray],
+                lut: np.ndarray, n_clusters: int,
+                pad_rows: Optional[int], bucket: int):
+    """Shared fetch planning: dedup the probed clusters across the batch and
+    build the (B, P) remap into the packed row space.
+
+    Returns (wanted (U,) unique cluster ids, u, rows, remap) where ``rows``
+    is U + 1 sentinel, quantized up to ``bucket`` / ``pad_rows`` — the jit
+    shape contract both the f32 and the quantized tier obey identically."""
+    cids = np.asarray(cids)
+    if mask is None:
+        mask = np.ones_like(cids, dtype=bool)
+    live = np.asarray(mask) & (cids >= 0)
+    wanted = np.unique(cids[live])
+    u = int(wanted.size)
+    sentinel = u
+    rows = max(u + 1, int(pad_rows or 0))
+    rows = -(-rows // max(bucket, 1)) * max(bucket, 1)
+    lut[wanted] = np.arange(u)
+    remap = np.where(live, lut[np.clip(cids, 0, n_clusters - 1)], sentinel)
+    return wanted, u, rows, remap.astype(np.int32), live
+
+
 class TieredPostings:
     """Host-resident posting store with batched device streaming.
 
@@ -148,20 +171,8 @@ class TieredPostings:
                 f"fetch on released tier (epoch {self.epoch}): a batch was "
                 f"routed to a retired index version")
         t0 = time.perf_counter()
-        cids = np.asarray(cids)
-        if mask is None:
-            mask = np.ones_like(cids, dtype=bool)
-        live = np.asarray(mask) & (cids >= 0)
-        wanted = np.unique(cids[live])
-        u = int(wanted.size)
-        sentinel = u
-        rows = max(u + 1, int(pad_rows or 0))
-        rows = -(-rows // max(bucket, 1)) * max(bucket, 1)
-        lut = self._lut
-        lut[wanted] = np.arange(u)
-        remap = np.where(
-            live, lut[np.clip(cids, 0, self.postings.shape[0] - 1)], sentinel
-        )
+        wanted, u, rows, remap, live = _plan_union(
+            cids, mask, self._lut, self.postings.shape[0], pad_rows, bucket)
         c, l, d = self.postings.shape
         # single-copy gather: np.take writes straight into the packed buffer
         # (no (U, L, D) temporary), and sentinel/pad payload rows stay
@@ -188,3 +199,111 @@ class TieredPostings:
                                      clusters_union=u,
                                      union_bytes=union_bytes))
         return dev_packed, dev_ids, dev_remap
+
+
+class QuantizedTieredPostings:
+    """Host hot tier over the int8-residual payload (core/quantize.py).
+
+    The paper's cost thesis made concrete: the first-pass payload resident in
+    host memory is q8 codes + per-slot norms + ids (~1/4 the f32 bytes), and
+    the f32 vectors demote to the flash tier (storage/flash_tier.py) where
+    only re-rank candidates touch them.  ``fetch`` speaks the same union /
+    sentinel / remap / bucket contract as :class:`TieredPostings` but packs
+    five tensors: (q8 (R, L, D) int8, scale (R, 1, 1), norm2 (R, L),
+    cluster centroids (R, D), ids (R, L)) — the centroids ride along because
+    the residual distance form needs the owning centroid per packed row.
+    """
+
+    quantized = True
+
+    def __init__(self, q8: np.ndarray, scale: np.ndarray, norm2: np.ndarray,
+                 centroids: np.ndarray, posting_ids: np.ndarray,
+                 epoch: int = 0):
+        self.q8 = np.ascontiguousarray(q8)
+        # store scale flat (C,); re-expanded per packed row at fetch
+        self.scale = np.ascontiguousarray(
+            np.asarray(scale, np.float32).reshape(-1))
+        self.norm2 = np.ascontiguousarray(np.asarray(norm2, np.float32))
+        self.centroids = np.ascontiguousarray(
+            np.asarray(centroids, np.float32))
+        self.posting_ids = np.ascontiguousarray(posting_ids)
+        self.epoch = int(epoch)
+        self.released = False
+        self.stats = TierStats()
+        self._lut = np.zeros(self.q8.shape[0], dtype=np.int64)
+
+    def release(self) -> None:
+        self.released = True
+        self.q8 = None
+        self.scale = None
+        self.norm2 = None
+        self.centroids = None
+        self.posting_ids = None
+        self._lut = None
+
+    @property
+    def cluster_bytes(self) -> int:
+        return int(self.q8[0].nbytes + self.norm2[0].nbytes
+                   + self.posting_ids[0].nbytes + self.scale[0].nbytes
+                   + self.centroids[0].nbytes)
+
+    def nbytes(self) -> int:
+        """Hot-tier resident payload bytes (the DRAM term of the cost model)."""
+        return int(self.q8.nbytes + self.scale.nbytes + self.norm2.nbytes
+                   + self.posting_ids.nbytes + self.centroids.nbytes)
+
+    def fetch(
+        self,
+        cids: np.ndarray,
+        mask: Optional[np.ndarray] = None,
+        pad_rows: Optional[int] = None,
+        bucket: int = 1,
+    ):
+        """Union-gather the probed clusters' quantized payload.
+
+        Returns (q8 (R, L, D), scale (R, 1, 1), norm2 (R, L), cents (R, D),
+        ids (R, L), remap (B, P)).  Sentinel/pad rows carry ids=-1, zero
+        norms and scale=1 so downstream id-masking drops them; the q8
+        payload of pad rows stays uninitialized (never read past the mask).
+        """
+        if self.released:
+            raise RuntimeError(
+                f"fetch on released tier (epoch {self.epoch}): a batch was "
+                f"routed to a retired index version")
+        t0 = time.perf_counter()
+        wanted, u, rows, remap, live = _plan_union(
+            cids, mask, self._lut, self.q8.shape[0], pad_rows, bucket)
+        c, l, d = self.q8.shape
+        packed_q8 = np.empty((rows, l, d), dtype=self.q8.dtype)
+        np.take(self.q8, wanted, axis=0, out=packed_q8[:u])
+        packed_scale = np.ones((rows,), dtype=np.float32)
+        np.take(self.scale, wanted, axis=0, out=packed_scale[:u])
+        packed_norm2 = np.zeros((rows, l), dtype=np.float32)
+        np.take(self.norm2, wanted, axis=0, out=packed_norm2[:u])
+        packed_cent = np.zeros((rows, d), dtype=np.float32)
+        np.take(self.centroids, wanted, axis=0, out=packed_cent[:u])
+        packed_ids = np.full((rows, l), -1, dtype=self.posting_ids.dtype)
+        np.take(self.posting_ids, wanted, axis=0, out=packed_ids[:u])
+        t1 = time.perf_counter()
+        out = (jnp.asarray(packed_q8),
+               jnp.asarray(packed_scale).reshape(rows, 1, 1),
+               jnp.asarray(packed_norm2),
+               jnp.asarray(packed_cent),
+               jnp.asarray(packed_ids),
+               jnp.asarray(remap))
+        t2 = time.perf_counter()
+        nbytes = int(packed_q8.nbytes + packed_scale.nbytes
+                     + packed_norm2.nbytes + packed_cent.nbytes
+                     + packed_ids.nbytes)
+        requested = int(live.sum())
+        union_bytes = u * self.cluster_bytes
+        self.stats.bytes_streamed += nbytes
+        self.stats.union_bytes_streamed += union_bytes
+        self.stats.batches += 1
+        self.stats.clusters_fetched += requested
+        self.stats.clusters_deduped += u
+        self.stats.record(FetchEvent(t0, t1, t2, rows, nbytes,
+                                     clusters_requested=requested,
+                                     clusters_union=u,
+                                     union_bytes=union_bytes))
+        return out

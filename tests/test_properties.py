@@ -254,3 +254,140 @@ def test_sharded_merge_invariant_to_shard_count_and_order(seed, b, n, k,
         vd, vi = merge_candidate_topk(jnp.asarray(cd), jnp.asarray(ci), k)
         np.testing.assert_array_equal(np.asarray(vi), np.asarray(ref_i))
         np.testing.assert_allclose(np.asarray(vd), np.asarray(ref_d))
+
+
+# -------------------------------------------------------------------------
+# q8 serving path (PR 8): fused vs legacy vs f32, dead-slot masking
+# -------------------------------------------------------------------------
+def _mk_q8_corpus(seed, c, l, d, dead_frac):
+    """Random quantization-EXACT index: postings = centroid + s * code with
+    per-cluster power-of-two s and a pinned |code|=127 slot, so
+    quantize_postings recovers (s, codes) bit-exactly and the q8 distance
+    equals the f32 distance up to float association.  Dead slots (-1 ids)
+    carry adversarial far-away payload — the bugfix under test."""
+    rng = np.random.default_rng(seed)
+    cents = rng.normal(size=(c, d)).astype(np.float32)
+    codes = rng.integers(-127, 128, size=(c, l, d)).astype(np.int32)
+    codes[:, 0, 0] = 127                      # pin amax -> scale == s
+    s = (2.0 ** rng.integers(-6, -3, size=(c, 1, 1))).astype(np.float32)
+    postings = cents[:, None, :] + s * codes.astype(np.float32)
+    pids = rng.permutation(c * l).astype(np.int32).reshape(c, l)
+    dead = rng.random((c, l)) < dead_frac
+    dead[:, 0] = False                        # keep the pinned slot live
+    pids[dead] = -1
+    postings[dead] = rng.normal(loc=40.0, size=(int(dead.sum()), d)) \
+        .astype(np.float32)                   # garbage where ids say "dead"
+    queries = rng.normal(size=(3, d)).astype(np.float32)
+    p = min(c, 3)
+    cids = rng.integers(0, c, size=(3, p)).astype(np.int32)
+    mask = rng.random((3, p)) > 0.2
+    return cents, postings, pids, dead, queries, cids, mask
+
+
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    c=st.integers(2, 8),
+    l=st.integers(2, 12),
+    d=st.integers(2, 10),
+    dead_frac=st.floats(0.1, 0.6),
+    k=st.integers(1, 8),
+)
+def test_q8_fused_matches_legacy_and_f32(seed, c, l, d, dead_frac, k):
+    """The fused q8 candidate path == the legacy full-materialization path
+    == (on quantization-exact data) the f32 scan, through the numpy dedup
+    oracle.  One property pins all three serving routes together."""
+    from repro.core.distance import merge_candidate_topk
+    from repro.core.quantize import ivf_scan_quantized, quantize_postings
+    from repro.core.search import _auto_ncand
+    from repro.kernels.ref import ivf_scan_q8_topk_ref
+
+    cents, postings, pids, dead, q, cids, mask = _mk_q8_corpus(
+        seed, c, l, d, dead_frac)
+    qp = quantize_postings(jnp.asarray(postings), jnp.asarray(cents),
+                           jnp.asarray(pids))
+    # fused candidate path
+    cd, ci = ivf_scan_q8_topk_ref(
+        qp.q8, qp.scale, qp.norm2, jnp.asarray(cents), jnp.asarray(pids),
+        jnp.asarray(cids), jnp.asarray(mask), jnp.asarray(q),
+        _auto_ncand(k))
+    fd, fi = merge_candidate_topk(cd, ci, k)
+    # legacy full-materialization path -> numpy oracle top-k
+    full = np.asarray(ivf_scan_quantized(
+        qp, jnp.asarray(cents), jnp.asarray(cids), jnp.asarray(mask),
+        jnp.asarray(q)))
+    gids = pids[cids]                                    # (B, P, L)
+    full = np.where(gids < 0, np.inf, full)
+    ld, li = _np_dedup_topk(full.reshape(3, -1), gids.reshape(3, -1), k)
+    np.testing.assert_array_equal(np.asarray(fi), li)
+    np.testing.assert_allclose(np.asarray(fd), ld, rtol=1e-5, atol=1e-5)
+    # f32 ground truth on the same probes (quantization-exact corpus):
+    # garbage payload sits only in dead slots, which the id mask drops
+    f32 = np.full_like(full, np.inf)
+    live_probe = mask[:, :, None] & (gids >= 0)
+    diff = q[:, None, None, :] - postings[cids]          # (B, P, L, D)
+    f32 = np.where(live_probe, (diff ** 2).sum(-1), np.inf)
+    wd, wi = _np_dedup_topk(f32.reshape(3, -1), gids.reshape(3, -1), k)
+    np.testing.assert_array_equal(np.asarray(fi), wi)
+    np.testing.assert_allclose(np.asarray(fd), wd, rtol=1e-3, atol=1e-3)
+
+
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    c=st.integers(2, 8),
+    l=st.integers(2, 12),
+    d=st.integers(2, 10),
+    dead_frac=st.floats(0.1, 0.6),
+)
+def test_q8_dead_slot_payload_cannot_leak(seed, c, l, d, dead_frac):
+    """Exact invariance: ANY payload in dead slots produces bit-identical
+    quantized tensors when the id mask is passed — the scale, codes, and
+    norms of a poisoned index equal those of the zeroed-padding index."""
+    from repro.core.quantize import quantize_postings
+
+    cents, postings, pids, dead, *_ = _mk_q8_corpus(seed, c, l, d, dead_frac)
+    clean = postings.copy()
+    clean[dead] = 0.0
+    qa = quantize_postings(jnp.asarray(postings), jnp.asarray(cents),
+                           jnp.asarray(pids))
+    qb = quantize_postings(jnp.asarray(clean), jnp.asarray(cents),
+                           jnp.asarray(pids))
+    np.testing.assert_array_equal(np.asarray(qa.scale), np.asarray(qb.scale))
+    np.testing.assert_array_equal(np.asarray(qa.q8), np.asarray(qb.q8))
+    np.testing.assert_array_equal(np.asarray(qa.norm2), np.asarray(qb.norm2))
+
+
+@settings(**COMMON)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    c=st.integers(3, 8),
+    l=st.integers(2, 12),
+    d=st.integers(2, 10),
+    k=st.integers(1, 6),
+)
+def test_q8_fused_probe_permutation_invariant(seed, c, l, d, k):
+    """Permuting the probe axis (cids and mask together) must not change
+    the fused q8 top-k — shard/probe interleaving cannot alter results."""
+    from repro.core.distance import merge_candidate_topk
+    from repro.core.quantize import quantize_postings
+    from repro.core.search import _auto_ncand
+    from repro.kernels.ref import ivf_scan_q8_topk_ref
+
+    cents, postings, pids, _, q, cids, mask = _mk_q8_corpus(
+        seed, c, l, d, 0.3)
+    qp = quantize_postings(jnp.asarray(postings), jnp.asarray(cents),
+                           jnp.asarray(pids))
+
+    def fused(cp, mp):
+        cd, ci = ivf_scan_q8_topk_ref(
+            qp.q8, qp.scale, qp.norm2, jnp.asarray(cents),
+            jnp.asarray(pids), jnp.asarray(cp), jnp.asarray(mp),
+            jnp.asarray(q), _auto_ncand(k))
+        return merge_candidate_topk(cd, ci, k)
+
+    perm = np.random.default_rng(seed ^ 0xBEEF).permutation(cids.shape[1])
+    d0, i0 = fused(cids, mask)
+    d1, i1 = fused(cids[:, perm], mask[:, perm])
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1))

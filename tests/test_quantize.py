@@ -54,6 +54,112 @@ def test_q8_pallas_kernel_matches_jnp(small_index, rng):
                                rtol=1e-4, atol=1e-3)
 
 
+def _poison_padding(index, rng, magnitude=50.0):
+    """Adversarial pad payload: dead slots (id < 0) filled with far-away
+    garbage, the way tombstoned/stale rows drift in a live index.  Live
+    slots untouched, so any behavior change is the padding's doing."""
+    import dataclasses
+    pids = np.asarray(index.posting_ids)
+    postings = np.array(np.asarray(index.postings))
+    dead = pids < 0
+    assert dead.any(), "fixture must have padded clusters"
+    postings[dead] = rng.normal(
+        loc=magnitude, size=(int(dead.sum()), postings.shape[-1])
+    ).astype(np.float32)
+    return dataclasses.replace(index, postings=jnp.asarray(postings))
+
+
+def test_dead_slots_excluded_from_scale(small_index, rng):
+    """THE PR 8 bugfix: the per-cluster scale must come from LIVE residuals
+    only.  With garbage in the padding, the masked quantization is
+    bit-identical to quantizing a clean index — the unmasked one inflates
+    the scale and coarsens every live code."""
+    poisoned = _poison_padding(small_index, rng)
+    qp_clean = quantize_postings(small_index.postings, small_index.centroids,
+                                 small_index.posting_ids)
+    qp_masked = quantize_postings(poisoned.postings, poisoned.centroids,
+                                  poisoned.posting_ids)
+    np.testing.assert_array_equal(np.asarray(qp_masked.scale),
+                                  np.asarray(qp_clean.scale))
+    np.testing.assert_array_equal(np.asarray(qp_masked.q8),
+                                  np.asarray(qp_clean.q8))
+    np.testing.assert_array_equal(np.asarray(qp_masked.norm2),
+                                  np.asarray(qp_clean.norm2))
+    # dead slots carry zero codes and zero norms — nothing to leak
+    dead = np.asarray(small_index.posting_ids) < 0
+    assert (np.asarray(qp_masked.q8)[dead] == 0).all()
+    assert (np.asarray(qp_masked.norm2)[dead] == 0).all()
+    # and the old (unmasked) behavior measurably degrades the grid
+    qp_leaky = quantize_postings(poisoned.postings, poisoned.centroids)
+    padded = dead.any(axis=1)
+    assert (np.asarray(qp_leaky.scale)[padded] >
+            np.asarray(qp_masked.scale)[padded]).all()
+
+
+def test_dead_slot_leak_costs_recall(small_corpus, small_index, rng):
+    """End-to-end regression: on the poisoned index the masked quantization
+    holds the f32 recall bound; the pre-fix unmasked path loses recall."""
+    x, q, _ = small_corpus
+    qj = jnp.asarray(q)
+    poisoned = _poison_padding(small_index, rng)
+    _, ti = brute_force_topk(jnp.asarray(x), qj, 10)
+    qp_masked = quantize_postings(poisoned.postings, poisoned.centroids,
+                                  poisoned.posting_ids)
+    qp_leaky = quantize_postings(poisoned.postings, poisoned.centroids)
+    _, i_m = search_flat_quantized(poisoned, qp_masked, qj, 10, nprobe=16)
+    _, i_l = search_flat_quantized(poisoned, qp_leaky, qj, 10, nprobe=16)
+    r_m = recall_at_k(np.asarray(i_m), np.asarray(ti))
+    r_l = recall_at_k(np.asarray(i_l), np.asarray(ti))
+    _, i_f32 = search_flat(poisoned, qj, 10, nprobe=16)
+    r_f32 = recall_at_k(np.asarray(i_f32), np.asarray(ti))
+    assert r_m >= r_f32 - 0.01, (r_m, r_f32)
+    assert r_l < r_m - 0.01, (
+        f"expected the unmasked scale to cost recall: leaky={r_l:.4f} "
+        f"masked={r_m:.4f}")
+
+
+def test_search_flat_quantized_kernel_dispatch_parity(small_corpus,
+                                                      small_index):
+    """THE PR 8 dispatch fix: fused=True must actually route to the Pallas
+    kernel when asked — and agree with the reference to float tolerance."""
+    x, q, _ = small_corpus
+    qj = jnp.asarray(q[:16])
+    qp = quantize_postings(small_index.postings, small_index.centroids,
+                           small_index.posting_ids)
+    d_ref, i_ref = search_flat_quantized(small_index, qp, qj, 10, nprobe=8,
+                                         fused=True, use_kernel=False)
+    d_ker, i_ker = search_flat_quantized(small_index, qp, qj, 10, nprobe=8,
+                                         fused=True, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(i_ker), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(d_ker), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_attach_quantized_serves_tier_q8(small_corpus, small_index):
+    """attach_quantized + SearchConfig(tier='q8') — the resident serving
+    path the engine uses — matches the flat quantized search."""
+    from repro.core.quantize import attach_quantized
+    from repro.core.search import SearchConfig, serve_step
+
+    x, q, _ = small_corpus
+    qj = jnp.asarray(q)
+    idx = attach_quantized(small_index)
+    assert idx.q8 is not None and idx.qscale is not None
+    cfg = SearchConfig(k=10, nprobe_max=16, pruning="none",
+                       use_kernel=False, fused_topk=True, tier="q8")
+    out = serve_step(idx, None, qj,
+                     jnp.full((q.shape[0],), 10, jnp.int32), cfg)
+    qp = quantize_postings(small_index.postings, small_index.centroids,
+                           small_index.posting_ids)
+    d_fl, i_fl = search_flat_quantized(small_index, qp, qj, 10, 16)
+    np.testing.assert_array_equal(np.asarray(out["ids"]), np.asarray(i_fl))
+    # tier=q8 without an attached payload must fail loudly, not fall back
+    import pytest
+    with pytest.raises(ValueError):
+        serve_step(small_index, None, qj[:4],
+                   jnp.full((4,), 10, jnp.int32), cfg)
+
+
 def test_q8_sharded_engine_matches_flat(small_corpus, small_index):
     """Quantized sharded engine (1x1 degenerate mesh) == flat quantized."""
     import jax

@@ -21,6 +21,7 @@ from repro.core.llsp import LLSPConfig
 from repro.core.search import SearchConfig, serve_leveled
 
 RECALL_FLOOR = 0.96
+Q8_RECALL_FLOOR = 0.95      # int8-residual first pass, no flash re-rank
 
 
 @pytest.fixture(scope="module")
@@ -50,6 +51,26 @@ def test_recall_gate_serve_leveled_fused(gate_build):
     assert r >= RECALL_FLOOR, (
         f"recall@10={r:.4f} fell below the {RECALL_FLOOR} gate on the fused "
         f"serve_leveled path (levels used: {np.bincount(out['levels']).tolist()})")
+
+
+def test_recall_gate_serve_leveled_q8(gate_build):
+    """PR 8 gate: the quantized serving default, END TO END through
+    ``serve_leveled`` — GBDT routing -> LLSP pruning -> fused q8 candidate
+    scan (dead slots masked out of the scale) -> merge.  Floors the raw
+    first-pass recall at 0.95; the flash re-rank on top (runtime tests)
+    only tightens it."""
+    from repro.core.quantize import attach_quantized
+
+    idx, llsp, _, x, q, true10 = gate_build
+    qidx = attach_quantized(idx)
+    cfg = SearchConfig(k=10, nprobe_max=48, pruning="llsp", n_ratio=8,
+                       use_kernel=False, fused_topk=True, tier="q8")
+    out = serve_leveled(qidx, llsp, q, np.full((q.shape[0],), 10, np.int32),
+                        cfg, pad=32)
+    r = recall_at_k(out["ids"], true10)
+    assert r >= Q8_RECALL_FLOOR, (
+        f"quantized recall@10={r:.4f} fell below the {Q8_RECALL_FLOOR} gate "
+        f"on the fused q8 serve_leveled path")
 
 
 def test_recall_gate_fused_build_is_searchable(gate_build):
