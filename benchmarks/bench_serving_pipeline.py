@@ -67,10 +67,11 @@ from repro.runtime import (
     inflight_depth,
     latency_percentiles,
     locality_skewed_trace,
+    make_quantized_pipeline,
     multi_tenant_trace,
     overlap_efficiency,
 )
-from repro.obs import Histogram, Observability
+from repro.obs import HarvestRing, Histogram, Observability, QualityMonitor
 from repro.storage import TieredPostings
 
 
@@ -578,6 +579,108 @@ def run_tracing_overhead(index, llsp, pipes_cfg, q, *, n_queries=400,
     }
 
 
+def run_quality_overhead(index, llsp, cfg, x, q, *, n_queries=300,
+                         trials=3, shadow_rate=0.02) -> dict:
+    """Paired quality-on/off A/B (PR 9 acceptance: the full quality layer
+    — per-query recall proxy, labeled histograms, harvest records, and a
+    live shadow-audit lane — may cost at most 5% q/s on the q8 serving
+    default).  Two identical q8 engines differ ONLY in the quality layer:
+    "off" runs ``quality_proxy=False`` with no monitor (the ``serve
+    --no-quality`` configuration), "on" computes the proxy per batch and
+    feeds a QualityMonitor with shadow audits against the true corpus at
+    2x the production default rate (0.02 vs 0.01 — extra audit volume for
+    calibration statistics while still bounding the gate honestly).
+    Trials are interleaved so drift cancels; the gate is the median of the
+    paired per-trial q/s ratios.  The same run calibrates the proxy: every
+    completed audit's |proxy - true| must average <= 0.05 (hard-asserted
+    here, at both scales — the proxy is only useful if it tracks truth)."""
+    import tempfile
+
+    tmp = tempfile.mkdtemp(prefix="bench_quality_")
+    engines, monitors = {}, {}
+    for mode in ("off", "on"):
+        obs = Observability.off()
+        pipe = make_quantized_pipeline(
+            index, llsp, cfg, vectors=x, name=f"quality_{mode}",
+            flash_path=os.path.join(tmp, f"flash_{mode}.f32"),
+            quality_proxy=(mode == "on"))
+        policy = BatchPolicy(max_batch=32, max_wait_s=0.002)
+        pipe.warmup(batch_sizes=(policy.pad, policy.max_batch))
+        pipe.serve_batch(q[: policy.max_batch], 10)
+        quality = None
+        if mode == "on":
+            quality = QualityMonitor(obs.metrics, vectors=x,
+                                     shadow_rate=shadow_rate,
+                                     harvest=HarvestRing())
+        monitors[mode] = quality
+        eng = ServeEngine({"default": pipe},
+                          DynamicBatcher(policy, ["default"]),
+                          obs=obs, quality=quality)
+        eng.start()
+        engines[mode] = eng
+
+    def one_trial(eng) -> float:
+        rows = np.arange(n_queries) % q.shape[0]
+        t0 = time.perf_counter()
+        for r in rows:
+            eng.submit(q[r], 10, index="default", block=True)
+        assert eng.qp.wait_completions(n_queries, timeout=120.0)
+        wall = time.perf_counter() - t0
+        comps = eng.qp.poll()
+        assert len(comps) == n_queries
+        return n_queries / wall
+
+    try:
+        for eng in engines.values():    # untimed warm pass through the loop
+            one_trial(eng)
+        ratios, qps = [], {"off": [], "on": []}
+        for t in range(trials):
+            order = ("off", "on") if t % 2 == 0 else ("on", "off")
+            got = {}
+            for mode in order:
+                got[mode] = one_trial(engines[mode])
+                qps[mode].append(got[mode])
+            ratios.append(got["on"] / got["off"])
+    finally:
+        for eng in engines.values():
+            eng.stop(drain=True)
+        for mode in ("off", "on"):
+            engines[mode].pipelines["default"].flash.release()
+
+    qm = monitors["on"]
+    qm.drain(timeout_s=30.0)
+    s = qm.summary()
+    served = (trials + 1) * n_queries
+    # the proxy must be LIVE on the q8 default path: one proxy observation
+    # per served query, not a sampled subset
+    assert s["proxy"]["n"] == served, \
+        f"proxy missing: {s['proxy']['n']} != {served}"
+    assert s["audits_done"] > 0, "shadow lane never completed an audit"
+    calib = s["calibration_err"]
+    assert calib["mean"] <= 0.05, \
+        f"proxy calibration off: mean |proxy-true| = {calib['mean']:.4f}"
+    harvest = qm.harvest
+    assert harvest.appended == served, "harvest lost records"
+    qm.close()
+    med = float(np.median(ratios))
+    return {
+        "n_queries": n_queries,
+        "trials": trials,
+        "shadow_rate": shadow_rate,
+        "qps_off": [round(v, 1) for v in qps["off"]],
+        "qps_on": [round(v, 1) for v in qps["on"]],
+        "qps_ratio_median": med,
+        "overhead_pct": round((1.0 - med) * 100.0, 2),
+        "proxy_p50": round(s["proxy"]["p50"], 4),
+        "proxy_mean": round(s["proxy"]["mean"], 4),
+        "true_mean": round(s["true"]["mean"], 4),
+        "audits_done": s["audits_done"],
+        "audits_dropped": s["audits_dropped"],
+        "calibration_err_mean": round(calib["mean"], 5),
+        "calibration_err_p99": round(calib["p99"], 5),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -674,12 +777,27 @@ def main() -> None:
     overhead = run_tracing_overhead(
         index, llsp, (cfg, (postings, pids)), q,
         n_queries=300 if args.smoke else 800,
-        trials=3 if args.smoke else 5)
+        trials=5)
     emit("serving_tracing_overhead",
          max(overhead["overhead_pct"], 0.0) * 1e3,
          f"q/s ratio on/off={overhead['qps_ratio_median']:.3f} "
          f"({overhead['overhead_pct']:+.1f}% at sample_rate=1.0), "
          f"hist p99 err={overhead['hist_quantile_err']['p99']:.4f}")
+
+    # PR 9: quality-layer on/off paired overhead + proxy calibration on
+    # the q8 serving default (calibration hard-asserted inside)
+    quality_ab = run_quality_overhead(
+        index, llsp, cfg, x, q,
+        n_queries=300 if args.smoke else 800,
+        trials=5)
+    emit("serving_quality_overhead",
+         max(quality_ab["overhead_pct"], 0.0) * 1e3,
+         f"q/s ratio on/off={quality_ab['qps_ratio_median']:.3f} "
+         f"({quality_ab['overhead_pct']:+.1f}%), "
+         f"proxy mean={quality_ab['proxy_mean']:.3f} "
+         f"true mean={quality_ab['true_mean']:.3f} "
+         f"|calib|={quality_ab['calibration_err_mean']:.4f} "
+         f"over {quality_ab['audits_done']:.0f} audits")
 
     payload = {
         "mode": "smoke" if args.smoke else "full",
@@ -694,6 +812,7 @@ def main() -> None:
         "depth_window": depth_ev,
         "engine_load": loads,
         "tracing_overhead": overhead,
+        "quality_overhead": quality_ab,
         "tier_totals": {
             "bytes_streamed": tier.stats.bytes_streamed,
             "union_bytes_streamed": tier.stats.union_bytes_streamed,
@@ -733,6 +852,10 @@ def main() -> None:
         # cost at most 5% q/s vs the identical engine with tracing off
         assert overhead["qps_ratio_median"] >= 0.95, \
             f"tracing overhead gate: {overhead}"
+        # and so must the quality layer (proxy + audits + harvest); the
+        # calibration bound is hard-asserted inside run_quality_overhead
+        assert quality_ab["qps_ratio_median"] >= 0.95, \
+            f"quality overhead gate: {quality_ab}"
         print("[smoke] serving pipeline OK: "
               f"speedup_vs_ref={ab[0]['speedup_vs_ref']:.2f}x "
               f"overlap={ab[0]['overlap_eff_pipe']:.2f} "

@@ -539,6 +539,17 @@ class ShardedFabric:
                 args={"kind": kind, "attempt": attempt,
                       "clusters": len(cids),
                       "trace_ids": list(task.trace_ids[:32])})
+            # flow arrow request -> shard task: the "s" endpoint binds near
+            # the request's async span on the requests track, the "f"
+            # endpoint lands on the shard task it fanned out to — Perfetto
+            # draws the arrow, check_well_nested verifies the pairing
+            fid = f"flow-task-{task.task_id}"
+            self.obs.trace.flow_start(
+                "fanout", fid, t=sent, trace_id=task.trace_ids[0],
+                track="requests", args={"shard": shard, "kind": kind})
+            self.obs.trace.flow_finish(
+                "fanout", fid, t=sent, trace_id=task.trace_ids[0],
+                track=f"shard-{shard}")
         if not self.nodes[shard].qp.submit(task, block=False):
             # shard SQ full — treat as an instant dead-letter and requeue
             self._drop_outstanding(task.task_id)
@@ -787,7 +798,43 @@ class ShardedFabric:
         return BatchResult(
             ids=ids[:b], dists=dists[:b],
             nprobe=state.plan.nprobe[:b].copy(), times=t,
-            partial=partial, partial_reason=partial_reason)
+            partial=partial, partial_reason=partial_reason,
+            quality=self._coverage(state, b),
+            shards=self._primary_shards(state, b))
+
+    def _coverage(self, state: _FabricBatch, b: int) -> np.ndarray:
+        """(b,) per-query COVERAGE proxy: the rank-weighted fraction of
+        this query's probed clusters a live replica actually scanned —
+        1.0 on complete rows, < 1.0 exactly on the partial rows whose
+        recall is at risk.  Probe rank j carries weight ``1/(1+j)``: the
+        router orders ``plan.cids`` by expected yield (nearest centroid
+        first — the cluster most of the true neighbors live in), so losing
+        a query's rank-0 probe costs far more recall than losing its
+        rank-15 probe, and the proxy must say so.  Under round-robin
+        striping an unweighted count cannot separate a dead shard's home
+        queries (they lose rank 0) from bystanders (they lose ~1/S of the
+        tail) — every query loses the same 1/S of its probes.  This is
+        the fabric's stand-in for the pipeline's rerank-agreement proxy
+        (the shards return exact f32 distances, so agreement would be
+        trivially 1.0)."""
+        cids = np.asarray(state.plan.cids[:b], np.int64)
+        valid = cids >= 0
+        w = 1.0 / (1.0 + np.arange(cids.shape[1], dtype=np.float32))
+        tot = (valid * w).sum(axis=1)
+        lost_w = np.zeros(b, np.float32)
+        if state.lost:
+            lost = np.isin(cids, np.fromiter(
+                state.lost, np.int64, len(state.lost))) & valid
+            lost_w = (lost * w).sum(axis=1).astype(np.float32)
+        cov = 1.0 - lost_w / np.maximum(tot, 1e-9)
+        return cov.astype(np.float32)
+
+    def _primary_shards(self, state: _FabricBatch, b: int) -> np.ndarray:
+        """(b,) primary shard of each query's nearest probed cluster —
+        the label the quality monitor buckets per-shard proxy histograms
+        by (the kill drill's 'did the victim's queries dip?' view)."""
+        c0 = np.asarray(state.plan.cids[:b, 0], np.int64)
+        return self.striping.shard_of(np.maximum(c0, 0)).astype(np.int32)
 
     def _merge(self, state: _FabricBatch) -> tuple[np.ndarray, np.ndarray]:
         """Cross-shard merge: concatenate every shard's candidate set and

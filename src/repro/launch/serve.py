@@ -50,7 +50,15 @@ from repro.distributed import (
     plan_failover,
 )
 from repro.lifecycle import VersionManager
-from repro.obs import Observability
+from repro.obs import (
+    HarvestRing,
+    Observability,
+    QualityMonitor,
+    SLOTracker,
+    default_rules,
+    health_snapshot,
+    write_health,
+)
 from repro.runtime import (
     BatchPolicy,
     DynamicBatcher,
@@ -61,6 +69,7 @@ from repro.runtime import (
     make_quantized_pipeline,
     multi_tenant_trace,
 )
+from repro.runtime.pipeline import _vectors_from_postings
 from repro.storage import ChunkArena, IndexMeta, TieredPostings, \
     make_replica_map, plan_striping
 
@@ -193,6 +202,67 @@ def finish_obs(obs: Observability, args) -> None:
               f"open in https://ui.perfetto.dev")
 
 
+def make_quality_stack(args, obs: Observability, vectors=None):
+    """Quality-observability bundle for one serve run: the per-query
+    recall-proxy monitor (+ shadow audit lane when ``vectors`` is given),
+    the structured harvest ring, and the burn-rate SLO tracker with the
+    default serving rules.  ``--no-quality`` returns (None, None, None)
+    — the A/B baseline the overhead bench measures against."""
+    if args.no_quality:
+        return None, None, None
+    harvest = HarvestRing()
+    quality = QualityMonitor(
+        obs.metrics, vectors=vectors, shadow_rate=args.shadow_rate,
+        harvest=harvest, trace=obs.trace if obs.tracing else None)
+    slo = SLOTracker(metrics=obs.metrics,
+                     trace=obs.trace if obs.tracing else None)
+    # short drills need short windows: scale the multi-window pair to the
+    # trace duration (capped at the workbook's 1m/5m defaults)
+    fast = min(60.0, max(args.duration / 4.0, 1.0))
+    slow = min(300.0, max(args.duration, 4.0))
+    default_rules(slo, obs.metrics, quality=quality,
+                  fast_s=fast, slow_s=slow)
+    return quality, harvest, slo
+
+
+def emit_health(args, quality, harvest, slo, registry) -> None:
+    """Tick the SLO state machine and (when ``--health-out`` is set)
+    atomically rewrite the health snapshot JSON an operator polls."""
+    if slo is None:
+        return
+    slo.tick()
+    if args.health_out:
+        write_health(args.health_out, health_snapshot(
+            slo=slo, quality=quality, registry=registry,
+            extra={"harvest": {"records": len(harvest),
+                               "appended": harvest.appended,
+                               "dropped": harvest.dropped}}))
+
+
+def finish_quality(args, quality, harvest, slo, registry) -> None:
+    """End-of-run quality flush: drain the shadow-audit lane, write the
+    final health snapshot, persist the harvest shard, print the rollup."""
+    if quality is None:
+        return
+    quality.drain()
+    emit_health(args, quality, harvest, slo, registry)
+    if args.harvest_out:
+        harvest.flush_npz(args.harvest_out)
+        print(f"[quality] harvest shard: {len(harvest)} records -> "
+              f"{args.harvest_out} (lifetime {harvest.appended}, "
+              f"ring-dropped {harvest.dropped})")
+    s = quality.summary()
+    firing = [n for n, st in slo.snapshot().items()
+              if st["state"] == "firing"]
+    print(f"[quality] {s['queries']:.0f} queries, proxy p50="
+          f"{s['proxy']['p50']:.3f} low_frac={s['low_frac']:.4f}, "
+          f"audits done={s['audits_done']:.0f} "
+          f"dropped={s['audits_dropped']:.0f}, "
+          f"calib p99={s['calibration_err']['p99']:.4f}, "
+          f"alerts firing={firing or 'none'}")
+    quality.close()
+
+
 def run_fabric(args) -> None:
     """Fabric drill mode (``--shards > 0``): one index served behind the
     sharded, replicated fabric; optional seeded kill mid-trace."""
@@ -222,11 +292,15 @@ def run_fabric(args) -> None:
                             obs=obs)
         fab.warmup()
         fab.start()
+        # fabric quality: the coverage proxy rides every BatchResult; the
+        # shadow audit lane brute-forces against the reconstructed corpus
+        quality, harvest, slo = make_quality_stack(
+            args, obs, vectors=_vectors_from_postings(dep.index))
         engine = ServeEngine(
             {name: fab},
             DynamicBatcher(BatchPolicy(max_batch=args.batch,
                                        max_wait_s=0.05), [name]),
-            depth=args.depth, obs=obs)
+            depth=args.depth, obs=obs, quality=quality)
         engine.start()
         trace = multi_tenant_trace(
             [TenantSpec(name, args.rate, topk_lo=10, topk_hi=50,
@@ -243,6 +317,7 @@ def run_fabric(args) -> None:
         # percentiles come from the engine's streaming latency histogram
         lat: collections.deque = collections.deque(maxlen=2048)
         next_metrics = args.metrics_every or float("inf")
+        next_health = args.health_every or float("inf")
         try:
             for arr in trace:
                 lag = t0 + arr.t - time.monotonic()
@@ -254,6 +329,9 @@ def run_fabric(args) -> None:
                     next_metrics += args.metrics_every
                     for line in obs.metrics.render():
                         print(f"[metrics] {line}")
+                if time.monotonic() - t0 >= next_health:
+                    next_health += args.health_every
+                    emit_health(args, quality, harvest, slo, obs.metrics)
             r = probe_recall(engine, dep, lat, name)
         finally:
             engine.stop(drain=True)
@@ -280,6 +358,7 @@ def run_fabric(args) -> None:
               f"{fs.tasks_per_shard.tolist()}")
         print(f"[health] {name}: recall@10={r:.3f} through the engine, "
               f"dropped={st.submitted - st.rejected - st.completed}")
+        finish_quality(args, quality, harvest, slo, obs.metrics)
         finish_obs(obs, args)
         undeploy(arena, dep)
         arena.validate()
@@ -367,12 +446,72 @@ operator runbook — observability (both modes):
     serve --shards 8 --replicas 2 --kill-shard-at 4 --duration 8 \\
           --trace-out /tmp/drill.json --metrics-every 2
     # then open https://ui.perfetto.dev and drag /tmp/drill.json in:
-    #   "requests" track  — request lifetimes + done:<status> terminals
+    #   "requests" track  — request lifetimes + done:<status> terminals;
+    #                       flow arrows link each request to the shard
+    #                       tasks it fanned out to
     #   "shard-N" tracks  — task lifetimes (kind=dispatch/requeue/hedge)
     #                       and worker scan spans; the killed shard's
     #                       tasks reappear on survivors as kind=requeue
     #   "router" track    — failover/hedge/give_up instants, merge spans
     #   "batch-N" lanes   — plan/gather/stream/scan stage spans
+    #   "lifecycle" track — rebuild snapshot/build/swap spans, per-shard
+    #                       stage-2 stream lifetimes, epoch_swap instant
+    #   "slo" track       — alert_fire:<rule> / alert_clear:<rule>
+    #                       burn-rate transitions
+
+operator runbook — quality observability (both modes):
+
+  Latency telemetry answers "where did this query spend its time?";
+  the quality layer answers "is recall degrading RIGHT NOW, and
+  where?".  On by default; --no-quality is the A/B-baseline off switch
+  (the overhead bench gates the on/off q/s ratio >= 0.95).
+
+  per-query recall proxy (free, every query):
+    single-node q8: overlap between the pre-rerank quantized top-k and
+    the post-rerank exact top-k (rerank agreement).  fabric: coverage —
+    the fraction of the query's probed clusters a live replica actually
+    scanned (< 1.0 exactly on partial rows).  Streamed into
+    quality.recall_proxy histograms labeled by route, nprobe bucket,
+    degrade status, and (fabric) per shard — a kill drill shows the
+    victim shard's histogram dip while survivors hold.
+
+  shadow audit lane (--shadow-rate, default 0.01):
+    a deterministic Knuth-hash sample of queries is brute-force
+    rescored against the live corpus on a single background lane —
+    measured true recall (quality.recall_true) plus per-audit
+    |proxy - true| calibration error (quality.calibration_err).
+    Submission never blocks serving: the lane is bounded and overflow
+    audits are dropped + counted.  Multi-index nodes disable the lane
+    (one corpus per auditor); proxies stay on.
+
+  burn-rate SLO alerts (Google SRE multi-window):
+    rules deadline/partial/failed/shed/quality fire when the windowed
+    bad-event rate burns the error budget at >= 2x on BOTH a fast and
+    a slow window, and clear with hysteresis at <= 1x — one transition
+    per excursion, no flap storms.  Transitions land on the "slo"
+    trace track and in the slo.alerts counter.
+
+  --health-out F      atomically rewrite the health snapshot JSON at F
+                      every --health-every seconds (default 1.0): alert
+                      states + burn rates, quality rollup, drift
+                      summary, harvest depth, full metrics registry —
+                      the one document an operator (or the CI drill
+                      gate) polls
+  --harvest-out F     write the bounded per-query harvest ring (trace
+                      id, route, probed clusters, shed/degrade
+                      decision, latency, rerank rounds, recall proxy)
+                      as a compressed npz shard at exit — the replay
+                      substrate for offline policy training
+
+  drills:
+    # quality-observed kill drill: watch the victim's proxy dip and
+    # the partial burn-rate alert fire, then clear
+    serve --shards 8 --replicas 1 --kill-shard-at 4 --duration 8 \\
+          --health-out /tmp/health.json --harvest-out /tmp/harvest.npz
+    # calibrate the proxy: 10 pct shadow audits, then read
+    # quality.calibration_err out of the final health snapshot
+    serve --indexes 1 --duration 8 --shadow-rate 0.1 \\
+          --health-out /tmp/health.json
 """
 
 
@@ -434,7 +573,28 @@ def main() -> None:
     ap.add_argument("--metrics-every", type=float, default=0.0,
                     help="print the metrics registry every N seconds "
                          "(0 = only the end-of-run summary lines)")
+    ap.add_argument("--health-out", type=str, default="",
+                    help="atomically (re)write the health snapshot JSON "
+                         "here — alert states + burn rates, quality "
+                         "rollup, full metrics (see quality runbook)")
+    ap.add_argument("--health-every", type=float, default=0.0,
+                    help="SLO tick + health snapshot cadence in seconds "
+                         "(defaults to 1.0 when --health-out is set)")
+    ap.add_argument("--shadow-rate", type=float, default=0.01,
+                    help="fraction of queries shadow-audited against the "
+                         "live corpus (deterministic per-id sampling; "
+                         "0 disables the audit lane)")
+    ap.add_argument("--no-quality", action="store_true",
+                    help="disable the quality-observability layer "
+                         "entirely: no recall proxies, shadow audits, "
+                         "burn-rate alerts, or harvest records (the "
+                         "overhead A/B baseline)")
+    ap.add_argument("--harvest-out", type=str, default="",
+                    help="write the per-query harvest ring as a "
+                         "compressed npz shard here at exit")
     args = ap.parse_args()
+    if args.health_out and args.health_every <= 0:
+        args.health_every = 1.0
 
     if args.shards > 0:
         if args.rebuild:
@@ -471,8 +631,15 @@ def main() -> None:
                              grouping=args.grouping)
         batcher = DynamicBatcher(policy, names)
         obs = make_obs(args)
+        # shadow audits need one ground-truth corpus: with co-resident
+        # indexes the proxy/SLO streams stay on but the audit lane is off
+        audit_vecs = (_vectors_from_postings(deps[names[0]].index)
+                      if len(names) == 1 else None)
+        quality, harvest, slo = make_quality_stack(args, obs,
+                                                   vectors=audit_vecs)
         engine = ServeEngine({n: d.pipeline for n, d in deps.items()},
-                             batcher, depth=args.depth, obs=obs)
+                             batcher, depth=args.depth, obs=obs,
+                             quality=quality)
         # epoch-tagged versions (lifecycle runtime): every batch routes to
         # the current epoch at formation and carries it to harvest, so the
         # mid-run rebuild below swaps atomically — in-flight batches finish
@@ -502,6 +669,7 @@ def main() -> None:
         t0 = time.monotonic()
         next_report = 1.0
         next_metrics = args.metrics_every or float("inf")
+        next_health = args.health_every or float("inf")
         n_ticks = 0
         # bounded recent window (heartbeat means only); percentiles come
         # from the engine's streaming latency histogram, not a raw list
@@ -541,6 +709,9 @@ def main() -> None:
                 next_metrics += args.metrics_every
                 for line in obs.metrics.render():
                     print(f"[metrics] {line}")
+            if el >= next_health:
+                next_health += args.health_every
+                emit_health(args, quality, harvest, slo, obs.metrics)
             if (not did_fail and args.fail_shard >= 0
                     and el > args.duration / 2):
                 did_fail = True
@@ -617,6 +788,7 @@ def main() -> None:
                         hb.beat(s, latency=1e-3)
             print(f"[health] heartbeat-detected failures at shutdown: "
                   f"{hb.failed().tolist()} (injected: {failed})")
+        finish_quality(args, quality, harvest, slo, obs.metrics)
         finish_obs(obs, args)
         for dep in deps.values():
             undeploy(arena, dep)

@@ -22,6 +22,7 @@ atomic version swap    :mod:`repro.lifecycle.version` — epoch-tagged index
                        last batch harvests
 =====================  ====================================================
 """
+from .drift import DriftMonitor
 from .ingest import (
     FreshSnapshot,
     LiveFreshState,

@@ -231,6 +231,8 @@ class RebuildScheduler:
         max_replicas: int = 4,
         policy: RebuildPolicy = RebuildPolicy(),
         clock=time.monotonic,
+        drift=None,
+        obs=None,
     ):
         self.name = name
         self.corpus = corpus
@@ -244,6 +246,8 @@ class RebuildScheduler:
         self.max_replicas = int(max_replicas)
         self.policy = policy
         self.clock = clock
+        self.drift = drift                 # DriftMonitor advisory source
+        self.obs = obs                     # lifecycle trace track target
         self.reports: list[RebuildReport] = []
         self.failures: list[str] = []
         self.rebuilding = threading.Event()
@@ -267,6 +271,13 @@ class RebuildScheduler:
             return "tombstones"
         if self.lane.stats.rejected_full > self._seen_rejected:
             return "insert_rejected"
+        if self.drift is not None:
+            # quality trigger: the insert stream drifted away from the
+            # epoch's centroids — rebuild before the capacity thresholds
+            # would have noticed anything
+            reason = self.drift.advisory()
+            if reason is not None:
+                return reason
         return None
 
     # -- the rebuild + swap flow ------------------------------------------
@@ -288,6 +299,7 @@ class RebuildScheduler:
             self._seen_rejected = self.lane.stats.rejected_full
 
     def _rebuild(self, rep: RebuildReport) -> RebuildReport:
+        t_start = self.clock()
         st = self.lane.state
         # -- snapshot: fold the delta prefix into the corpus ---------------
         with st.lock:
@@ -356,8 +368,47 @@ class RebuildScheduler:
         rep.carried_ops = int(f1 - f0)
         rep.eid_old, rep.eid_new = old_ep.eid, new_ep.eid
         rep.t_swapped = self.clock()
+        self._emit_rebuild_trace(rep, bstats, t_start)
+        if self.drift is not None:
+            # the advisory's evidence was just folded into the new epoch
+            self.drift.reset()
         self.reports.append(rep)
         return rep
+
+    def _emit_rebuild_trace(self, rep: RebuildReport, bstats: dict,
+                            t_start: float) -> None:
+        """Rebuild/swap on its own ``lifecycle`` trace track: sequential
+        snapshot / build / swap "X" spans, per-shard stage-2 stream
+        lifetimes as async pairs (double-buffered shards OVERLAP, so they
+        must not be "X" spans), and the epoch-swap instant tagged with the
+        serving tier the new epoch inherits."""
+        if self.obs is None or not self.obs.tracing:
+            return
+        tr = self.obs.trace
+        tr.span("snapshot", t_start, rep.t_snapshot, track="lifecycle",
+                args={"trigger": rep.trigger,
+                      "folded_inserts": rep.folded_inserts})
+        tr.span("build", rep.t_snapshot, rep.t_built, track="lifecycle",
+                args={"mode": rep.mode,
+                      "shards_streamed": rep.shards_streamed,
+                      "shards_reused": rep.shards_reused,
+                      "io_cut_x": round(rep.io_cut_x, 2)})
+        for stamp in bstats.get("shard_stamps", ()):
+            if stamp.get("resumed"):
+                continue            # checkpoint hit: nothing streamed
+            aid = f"rebuild{rep.eid_new}-shard{stamp['shard']}"
+            tr.abegin("shard_stream", aid, t=stamp["load_start"],
+                      track="lifecycle-shards",
+                      args={"shard": stamp["shard"],
+                            "rows": stamp["rows"],
+                            "bytes": stamp["bytes"]})
+            tr.aend("shard_stream", aid, t=stamp["assign_done"],
+                    track="lifecycle-shards")
+        tr.span("swap", rep.t_built, rep.t_swapped, track="lifecycle",
+                args={"carried_ops": rep.carried_ops})
+        tr.instant("epoch_swap", t=rep.t_swapped, track="lifecycle",
+                   args={"eid_old": rep.eid_old, "eid_new": rep.eid_new,
+                         "tier": rep.tier})
 
     # -- background poller -------------------------------------------------
     def start(self, poll_s: float = 0.05) -> None:

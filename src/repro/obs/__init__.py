@@ -23,12 +23,19 @@ from __future__ import annotations
 
 import time
 
+from .harvest import HarvestRing, load_npz
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .quality import QualityMonitor, recall_proxy, shadow_sampled
+from .slo import (BurnRule, SLOTracker, default_rules, health_snapshot,
+                  write_health)
 from .trace import TraceRecorder, check_well_nested
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "Observability", "TraceRecorder", "check_well_nested",
+    "BurnRule", "Counter", "Gauge", "HarvestRing", "Histogram",
+    "MetricsRegistry", "Observability", "QualityMonitor", "SLOTracker",
+    "TraceRecorder", "check_well_nested", "default_rules",
+    "health_snapshot", "load_npz", "recall_proxy", "shadow_sampled",
+    "write_health",
 ]
 
 

@@ -35,6 +35,10 @@ Event model -> ``trace_event`` mapping (https://perfetto.dev):
 ``abegin``/ "b"/"e" async pair matched by (cat, id) — task LIFETIMES
 ``aend``    (dispatch -> resolve), which overlap freely on a shard track
             while tasks queue, so they must not be "X" spans
+``flow_start``/ "s"/"f" flow pair matched by (cat, id) — SPAN LINKS: the
+``flow_finish`` Perfetto UI renders an arrow from the start event's
+            enclosing slice to the finish event's slice, so a request
+            span visually fans out to the shard tasks it spawned
 =========  ============================================================
 
 Tracks are logical (``"requests"``, ``"shard-3"``, ``"batch-5"``, …) and
@@ -143,6 +147,26 @@ class TraceRecorder:
         t = self.clock() if t is None else t
         self._buf().append(("e", name, 0, t, async_id, track, args))
 
+    def flow_start(self, name: str, flow_id, *, t: Optional[float] = None,
+                   trace_id: int = 0, track: Optional[str] = None,
+                   args: Optional[dict] = None) -> None:
+        """Open a flow arrow ("s") bound to :meth:`flow_finish` by flow_id.
+        Perfetto draws start -> finish as an arrow between the slices that
+        enclose the two events, which is how a request span links to the
+        shard tasks it fanned out to."""
+        if not self.enabled:
+            return
+        t = self.clock() if t is None else t
+        self._buf().append(("s", name, trace_id, t, flow_id, track, args))
+
+    def flow_finish(self, name: str, flow_id, *, t: Optional[float] = None,
+                    trace_id: int = 0, track: Optional[str] = None,
+                    args: Optional[dict] = None) -> None:
+        if not self.enabled:
+            return
+        t = self.clock() if t is None else t
+        self._buf().append(("f", name, trace_id, t, flow_id, track, args))
+
     # -- readout -----------------------------------------------------------
     def snapshot(self) -> list[tuple]:
         """All recorded events (every thread's buffer, registration order).
@@ -203,6 +227,11 @@ class TraceRecorder:
                     row["dur"] = max((tb - ta) * 1e6, 0.0)
                 elif kind == "i":
                     row["s"] = "t"
+                elif kind in ("s", "f"):   # flow arrow matched by (cat, id)
+                    row["cat"] = "flow"
+                    row["id"] = tb
+                    if kind == "f":
+                        row["bp"] = "e"    # bind to enclosing slice
                 else:                      # async b/e matched by (cat, id)
                     row["cat"] = "task"
                     row["id"] = tb
@@ -219,8 +248,11 @@ def check_well_nested(trace_events: list[dict],
                       eps_us: float = 0.01) -> list[str]:
     """Structural validation of an exported trace: "X" spans sharing a
     (pid, tid) must be properly nested (a span either contains or is
-    disjoint from every other span on its track) and every async "b" must
-    have a matching "e".  Returns human-readable violations (empty = valid).
+    disjoint from every other span on its track), every async "b" must
+    have a matching "e", and every flow arrow must have BOTH endpoints —
+    an "s" with no "f" (or vice versa) sharing its (cat, id) renders as a
+    dangling arrow in the Perfetto UI and is reported here.  Returns
+    human-readable violations (empty = valid).
     Used by the trace-integrity tests AND the bench drill gate — the export
     is checked, not trusted.
 
@@ -231,6 +263,8 @@ def check_well_nested(trace_events: list[dict],
     bad: list[str] = []
     by_track: dict[tuple, list] = {}
     opens: dict[tuple, int] = {}
+    flow_s: dict[tuple, int] = {}
+    flow_f: dict[tuple, int] = {}
     for ev in trace_events:
         ph = ev.get("ph")
         key = (ev.get("pid"), ev.get("tid"))
@@ -247,9 +281,21 @@ def check_well_nested(trace_events: list[dict],
                 bad.append(f"async end without begin: {ev.get('name')} {k}")
             else:
                 opens[k] -= 1
+        elif ph == "s":
+            k = (ev.get("cat"), ev.get("id"))
+            flow_s[k] = flow_s.get(k, 0) + 1
+        elif ph == "f":
+            k = (ev.get("cat"), ev.get("id"))
+            flow_f[k] = flow_f.get(k, 0) + 1
     for k, n in opens.items():
         if n > 0:
             bad.append(f"async begin without end: {k}")
+    for k in flow_s:
+        if k not in flow_f:
+            bad.append(f"flow start without finish: {k}")
+    for k in flow_f:
+        if k not in flow_s:
+            bad.append(f"flow finish without start: {k}")
     for key, spans in by_track.items():
         spans.sort(key=lambda s: (s[0], -s[1]))
         stack: list[tuple] = []

@@ -36,6 +36,7 @@ from .loadgen import (
     TenantSpec,
     UpdateArrival,
     bursty_trace,
+    drifting_trace,
     hot_cluster_trace,
     locality_skewed_trace,
     merge_timelines,

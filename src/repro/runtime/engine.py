@@ -94,6 +94,9 @@ class Completion:
     completed: float
     reason: str = ""                # why, for every non-"ok" status
     trace_id: int = 0
+    quality: float = -1.0           # per-query recall proxy (rerank
+                                    # agreement / fabric coverage);
+                                    # -1 = the path produced no proxy
 
     @property
     def latency(self) -> float:
@@ -236,7 +239,8 @@ class ServeEngine:
 
     def __init__(self, pipelines: dict, batcher, qp: Optional[QueuePair] = None,
                  clock=time.monotonic, update_lanes: Optional[dict] = None,
-                 depth: int = 1, obs: Optional[Observability] = None):
+                 depth: int = 1, obs: Optional[Observability] = None,
+                 quality=None):
         self.pipelines = dict(pipelines)
         self.batcher = batcher
         self.qp = qp or QueuePair()
@@ -257,6 +261,11 @@ class ServeEngine:
         self._h_rr_cands = m.histogram("engine.rerank_cands")
         self._h_rr_io = m.histogram("engine.rerank_io_s")
         self._m_rr_stop = m.counter("engine.rerank_stop")  # labeled by kind
+        self._h_rr_round_size = m.histogram("engine.rerank_round_size")
+        # quality observability (repro.obs.quality.QualityMonitor): fed one
+        # call per harvested batch from the completion funnel — recall-proxy
+        # streams, shadow audits, and the per-query telemetry harvest
+        self.quality = quality
         self._req_ids = iter(range(1 << 62))
         self._swap_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
@@ -429,6 +438,7 @@ class ServeEngine:
         comps = []
         partial = getattr(result, "partial", None)
         partial_reason = getattr(result, "partial_reason", "no_replica")
+        quality = getattr(result, "quality", None)
         for i, req in enumerate(mb.requests):
             status, reason = ("degraded", "deadline") if mb.degraded[i] \
                 else ("ok", "")
@@ -443,6 +453,7 @@ class ServeEngine:
                 nprobe=int(result.nprobe[i]),
                 submitted=req.arrival, completed=done,
                 reason=reason, trace_id=req.trace_id,
+                quality=float(quality[i]) if quality is not None else -1.0,
             ))
         self.stats.degraded += int(mb.degraded.sum())
         self.stats.completed += len(comps)
@@ -468,11 +479,18 @@ class ServeEngine:
             self._h_rr_io.observe(t.rerank_io_s)
             self._m_rr_stop.inc(
                 1, "stable" if t.rerank_stable_stop else "exhausted")
+            if t.rerank_round_size:
+                self._h_rr_round_size.observe(t.rerank_round_size)
         self.stats.service_s += service
         self._h_service.observe(service)
         self.batcher.observe(len(mb.requests), service)
         if self.obs.tracing:
             self._emit_batch_spans(t, mb)
+        if self.quality is not None:
+            self.quality.observe_batch(
+                mb.requests, comps,
+                shards=getattr(result, "shards", None),
+                rerank_rounds=t.rerank_rounds)
         self._complete(comps)
 
     def _emit_batch_spans(self, t, mb) -> None:

@@ -24,7 +24,11 @@ deterministic, seeded versions of both:
 * ``hot_cluster_trace`` — a hot subset of the query pool takes most of the
                          traffic (hot-cluster / celebrity-item skew): the
                          batch union is dominated by a few clusters that
-                         every batch re-gathers.
+                         every batch re-gathers;
+* ``drifting_trace``   — a sliding query-pool window migrates across the
+                         cluster space over the trace (distribution drift:
+                         what the centroid-drift monitor and recall-proxy
+                         histograms are built to catch).
 
 Traces are plain lists of :class:`Arrival` sorted by time — the engine tests
 replay them against a virtual clock, so every admission/shedding decision is
@@ -233,6 +237,40 @@ def shard_skewed_trace(
             qrow = int(hot_rows[int(rng.integers(0, hot_rows.size))])
         else:
             qrow = int(rng.integers(0, n_queries))
+        out.append(dataclasses.replace(a, qrow=qrow))
+    return out
+
+
+def drifting_trace(
+    rate_qps: float,
+    duration_s: float,
+    n_queries: int,
+    window_frac: float = 0.25,
+    seed: int = 0,
+    index: str = "default",
+    topk: tuple[int, int] = (10, 100),
+    deadline_s: Optional[float] = None,
+) -> list[Arrival]:
+    """Distribution-drift arrivals for the quality-observability drills: a
+    contiguous window of ``window_frac`` of the query pool slides from the
+    pool's start to its end over the trace duration, and every qrow is
+    drawn from the CURRENT window.  With a centroid-sorted pool the query
+    distribution therefore migrates across the cluster space — early
+    traffic probes the first clusters, late traffic the last — which is
+    the workload shape the centroid-drift monitor and the per-route
+    recall-proxy histograms exist to catch.  Pure function of ``seed``."""
+    if not 0.0 < window_frac <= 1.0:
+        raise ValueError(f"window_frac must be in (0, 1], got {window_frac}")
+    win = max(int(n_queries * window_frac), 1)
+    span = max(n_queries - win, 0)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 19]))
+    spec = TenantSpec(index, rate_qps, topk[0], topk[1], deadline_s,
+                      n_queries)
+    raw = _draw_arrivals(rng, spec, duration_s)
+    out = []
+    for a in raw:
+        lo = int(span * min(a.t / max(duration_s, 1e-9), 1.0))
+        qrow = lo + int(rng.integers(0, win))
         out.append(dataclasses.replace(a, qrow=qrow))
     return out
 

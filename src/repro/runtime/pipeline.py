@@ -77,6 +77,8 @@ class StageTimes:
     rerank_cands: int = 0          # candidates exact-scored before the stop
     rerank_stable_stop: bool = False  # True = top-k went stable before the
                                       # candidate list was exhausted
+    rerank_round_size: int = 0     # round width this batch actually used
+                                   # (== config unless auto_round adapted it)
 
     @property
     def total(self) -> float:
@@ -97,6 +99,14 @@ class BatchResult:
                                            # degraded mode); None = complete
     partial_reason: str = "no_replica"     # why the shard set was incomplete
                                            # ("no_replica" | "timeout")
+    quality: Optional[np.ndarray] = None   # (b,) float32 per-query recall
+                                           # proxy (rerank agreement on the
+                                           # q8 path, probed-cluster coverage
+                                           # on the fabric path); None = the
+                                           # serving path produces no proxy
+    shards: Optional[np.ndarray] = None    # (b,) int32 primary shard per
+                                           # query (fabric only) — lets the
+                                           # quality streams label per-shard
 
 
 @dataclasses.dataclass
@@ -138,10 +148,18 @@ class RerankConfig:
     ``stable_rounds`` consecutive rounds unchanged (per the whole batch —
     the TPU batch is the scheduling unit), further candidates are provably
     unlikely to displace it and the walk stops.  ``max_rounds`` caps the
-    walk (0 = only the candidate width bounds it)."""
+    walk (0 = only the candidate width bounds it).
+
+    ``auto_round`` derives the NEXT batch's round width from the stamped
+    per-slot flash I/O cost (EWMA over ``rerank_io_s``) so one round's
+    read burst targets a fraction of the measured scan window — wide
+    enough to amortize read setup, narrow enough that the adaptive stop
+    still saves I/O.  Off by default: with it off the configured
+    ``round_size`` is used verbatim (parity-tested)."""
     round_size: int = 64
     stable_rounds: int = 1
     max_rounds: int = 0
+    auto_round: bool = False
 
 
 def max_id_replicas(posting_ids) -> int:
@@ -283,7 +301,8 @@ class PrefetchPipeline:
                  dup_bound: Optional[int] = None,
                  fresh_source=None,
                  flash: Optional[FlashTier] = None,
-                 rerank: Optional[RerankConfig] = None):
+                 rerank: Optional[RerankConfig] = None,
+                 quality_proxy: bool = True):
         self.index = index
         self.llsp_params = llsp_params
         self.cfg = cfg
@@ -321,6 +340,15 @@ class PrefetchPipeline:
         self._reranker = (ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="rerank")
             if flash is not None else None)
+        # per-query recall proxy (quality observability): the overlap of the
+        # pre-rerank approximate top-k with the post-rerank exact top-k,
+        # stamped on BatchResult.quality.  Free signal on the q8 path — the
+        # candidates are already in host memory at harvest.
+        self.quality_proxy = bool(quality_proxy)
+        # auto_round state (RerankConfig.auto_round): EWMA of the measured
+        # per-slot flash read cost and the round width derived from it
+        self._io_per_slot: Optional[float] = None
+        self._auto_round: Optional[int] = None
 
     @property
     def _scan_cfg(self) -> SearchConfig:
@@ -503,11 +531,22 @@ class PrefetchPipeline:
         ids = np.asarray(infl.out_i)[: infl.size]
         dists = np.asarray(infl.out_d)[: infl.size]
         infl.times.scan_done = time.perf_counter()
+        quality = None
         if self.flash is not None and infl.size > 0:
+            # pre-rerank approximate top-k (candidates arrive ascending by
+            # q8 distance) — captured before rescoring reorders them, so the
+            # rerank-agreement proxy costs one (b, k) copy on the hot path
+            pre_top = ids[:, : self.cfg.k].copy() if self.quality_proxy \
+                else None
             dists, ids = self._rerank(
                 infl.queries_host[: infl.size], dists, ids, infl.times)
+            if pre_top is not None:
+                from repro.obs.quality import recall_proxy
+
+                quality = recall_proxy(pre_top, ids, self.cfg.k)
         return BatchResult(ids, dists, infl.nprobe[: infl.size].copy(),
-                           infl.times, fresh_seq=infl.fresh_seq)
+                           infl.times, fresh_seq=infl.fresh_seq,
+                           quality=quality)
 
     def _rerank(self, queries: np.ndarray, cand_d: np.ndarray,
                 cand_i: np.ndarray, t: StageTimes
@@ -528,6 +567,9 @@ class PrefetchPipeline:
         t.rerank_start = time.perf_counter()
         exact = np.array(cand_d, np.float32, copy=True)
         step = max(int(rc.round_size), 1)
+        if rc.auto_round and self._auto_round is not None:
+            step = self._auto_round
+        t.rerank_round_size = step
         n_rounds = -(-n // step)
         if rc.max_rounds > 0:
             n_rounds = min(n_rounds, int(rc.max_rounds))
@@ -588,6 +630,18 @@ class PrefetchPipeline:
         t.rerank_rounds = rounds
         t.rerank_cands = int(hi)
         t.rerank_end = time.perf_counter()
+        if rc.auto_round and hi > 0 and t.rerank_io_s > 0.0:
+            # learn the per-slot flash read cost from this batch's stamps
+            # and retarget the NEXT batch's round width so one round's read
+            # burst is ~1/4 of the measured scan window: rounds stay small
+            # enough for the adaptive stop to save I/O, wide enough to
+            # amortize per-read setup
+            per_slot = t.rerank_io_s / float(b * hi)
+            self._io_per_slot = per_slot if self._io_per_slot is None \
+                else 0.7 * self._io_per_slot + 0.3 * per_slot
+            scan_win = max(t.scan_done - t.scan_dispatch, 1e-5)
+            want = (scan_win / 4.0) / max(self._io_per_slot * b, 1e-12)
+            self._auto_round = int(np.clip(want, 16, max(n, 16)))
         return out_d, out_i
 
     def warmup(self, batch_sizes=(16, 32), max_rows: Optional[int] = None

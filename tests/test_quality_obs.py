@@ -1,0 +1,542 @@
+"""Quality-observability tests (PR 9): recall-proxy correctness and live
+calibration against shadow audits on the real q8 serving path, deterministic
+non-blocking shadow sampling, multi-window burn-rate alert fire/clear with
+hysteresis under a virtual clock, telemetry-harvest persistence round-trips,
+the centroid-drift rebuild advisory, rerank auto-round parity, fabric
+coverage stamping, and Perfetto flow-arrow export integrity."""
+import json
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.search import SearchConfig
+from repro.obs import (
+    BurnRule, HarvestRing, MetricsRegistry, Observability, QualityMonitor,
+    SLOTracker, TraceRecorder, check_well_nested, default_rules,
+    health_snapshot, load_npz, recall_proxy, shadow_sampled, write_health,
+)
+from repro.obs.quality import overlap_frac
+from repro.runtime import (
+    BatchPolicy, DynamicBatcher, RerankConfig, ServeEngine, drifting_trace,
+    make_quantized_pipeline,
+)
+
+
+# -------------------------------------------------------------------------
+# proxy primitives
+# -------------------------------------------------------------------------
+def test_recall_proxy_rowwise_overlap_and_padding():
+    pre = np.array([[1, 2, 3, 4], [5, 6, 7, 8], [-1, -1, 2, 3]])
+    post = np.array([[1, 2, 9, 9], [5, 6, 7, 8], [2, 3, -1, -1]])
+    p = recall_proxy(pre, post, k=4)
+    assert p.dtype == np.float32
+    assert p[0] == pytest.approx(0.5)          # {1,2} of 4
+    assert p[1] == pytest.approx(1.0)
+    assert p[2] == pytest.approx(0.5)          # padding (-1) never matches
+    # k slices both sides
+    assert recall_proxy(pre, post, k=2)[0] == pytest.approx(1.0)
+
+
+def test_overlap_frac_scalar_against_truth():
+    assert overlap_frac(np.array([3, 1, 2]), np.array([1, 2, 3]), 3) == 1.0
+    assert overlap_frac(np.array([3, -1, 9]), np.array([1, 2, 3]), 3) \
+        == pytest.approx(1 / 3)
+
+
+def test_shadow_sampling_deterministic_and_rate_shaped():
+    ids = range(4000)
+    assert not any(shadow_sampled(i, 0.0) for i in ids)
+    assert all(shadow_sampled(i, 1.0) for i in ids)
+    picked = [i for i in ids if shadow_sampled(i, 0.05)]
+    again = [i for i in ids if shadow_sampled(i, 0.05)]
+    assert picked == again                     # replayable
+    assert 0.02 <= len(picked) / 4000 <= 0.09  # rate actually applies
+    # monotone: raising the rate only ADDS audited ids
+    more = {i for i in ids if shadow_sampled(i, 0.2)}
+    assert set(picked) <= more
+
+
+# -------------------------------------------------------------------------
+# monitor streams on a stubbed completion funnel
+# -------------------------------------------------------------------------
+def _comp(q=1.0, status="ok", nprobe=4):
+    return types.SimpleNamespace(status=status, quality=q, nprobe=nprobe,
+                                 submitted=0.5, completed=1.0, reason="",
+                                 ids=np.arange(5))
+
+
+def _req(i, route=None):
+    return types.SimpleNamespace(req_id=i, index="s", trace_id=0,
+                                 route=route, query=np.zeros(4, np.float32),
+                                 topk=5)
+
+
+def test_observe_batch_streams_labels_low_counter_and_harvest():
+    m = MetricsRegistry()
+    h = HarvestRing()
+    qm = QualityMonitor(m, harvest=h, low_threshold=0.9)
+    reqs = [_req(0), _req(1), _req(2)]
+    comps = [_comp(1.0), _comp(0.5, status="partial"), _comp(-1.0)]
+    qm.observe_batch(reqs, comps, shards=np.array([0, 1, 0]),
+                     rerank_rounds=2)
+    assert qm.proxy_hist.n == 2                # -1 = no proxy, skipped
+    assert qm.low_proxy.value() == 1           # 0.5 < 0.9
+    assert m.histogram("quality.recall_proxy.shard:1").n == 1
+    assert m.histogram("quality.recall_proxy.status:partial").n == 1
+    assert m.counter("quality.not_ok").value("partial") == 1
+    recs = h.records()
+    assert len(recs) == 3 and h.appended == 3
+    assert recs[2]["quality"] == -1.0          # sentinel persisted verbatim
+    assert recs[1]["shard"] == 1
+    assert all(r["rerank_rounds"] == 2 for r in recs)
+    s = qm.summary()
+    assert s["queries"] == 3 and s["low_proxy"] == 1
+    assert s["proxy"]["n"] == 2
+
+
+def test_route_clusters_land_in_harvest():
+    m = MetricsRegistry()
+    h = HarvestRing()
+    qm = QualityMonitor(m, harvest=h)
+    route = types.SimpleNamespace(cids=np.array([7, 3, -1, -1]))
+    qm.observe_batch([_req(0, route=route)], [_comp(0.9)])
+    assert h.records()[0]["clusters"] == (7, 3)
+    assert h.records()[0]["route"] == "routed"
+
+
+# -------------------------------------------------------------------------
+# harvest ring persistence
+# -------------------------------------------------------------------------
+def _fill(h, n, base=0):
+    for i in range(n):
+        h.append(req_id=base + i, index="sift", trace_id=i * 7, t=1.5 + i,
+                 route="direct", nprobe=8, status="ok" if i % 3 else
+                 "partial", reason="" if i % 3 else "no_replica",
+                 latency_s=0.004 * i, rerank_rounds=i % 4,
+                 quality=float(np.float32(i / max(n - 1, 1))), shard=i % 3,
+                 clusters=tuple(range(i % 10)))
+
+
+def test_harvest_npz_roundtrip_is_exact(tmp_path):
+    h = HarvestRing()
+    _fill(h, 50)
+    p = str(tmp_path / "shard.npz")
+    h.flush_npz(p)
+    assert load_npz(p) == h.records()          # field-by-field identical
+
+
+def test_harvest_jsonl_roundtrip(tmp_path):
+    h = HarvestRing()
+    _fill(h, 20)
+    p = str(tmp_path / "shard.jsonl")
+    assert h.flush_jsonl(p) == 20
+    rows = [json.loads(ln) for ln in open(p)]
+    want = h.records()
+    assert len(rows) == 20
+    for got, exp in zip(rows, want):
+        exp = dict(exp)
+        exp["clusters"] = list(exp["clusters"])
+        assert got == exp
+
+
+def test_harvest_ring_bound_drops_oldest_and_counts():
+    h = HarvestRing(capacity=8)
+    _fill(h, 20)
+    assert len(h) == 8 and h.appended == 20 and h.dropped == 12
+    assert h.records()[0]["req_id"] == 12      # oldest evicted
+
+
+# -------------------------------------------------------------------------
+# live calibration: proxy vs shadow audit through the real q8 path
+# -------------------------------------------------------------------------
+def test_q8_proxy_calibrated_against_shadow_audits(small_index,
+                                                   small_corpus, tmp_path):
+    """ISSUE acceptance: on the quantized serving default every completion
+    carries a proxy in [0, 1], a 100% shadow-audit pass measures true
+    recall on the same answers, and |proxy - true| stays tiny at high
+    nprobe (both should sit at ~1.0 — miscalibration here means the proxy
+    is reading the wrong candidates)."""
+    x, q, _ = small_corpus
+    cfg = SearchConfig(k=10, nprobe_max=32, pruning="none",
+                       use_kernel=False, fused_topk=True)
+    pipe = make_quantized_pipeline(small_index, None, cfg, vectors=x,
+                                   name="q8",
+                                   flash_path=str(tmp_path / "flash.f32"))
+    obs = Observability.off()
+    harvest = HarvestRing()
+    qm = QualityMonitor(obs.metrics, vectors=x, shadow_rate=1.0,
+                        harvest=harvest)
+    eng = ServeEngine({"q8": pipe},
+                      DynamicBatcher(BatchPolicy(max_batch=16,
+                                                 max_wait_s=0.001),
+                                     ["q8"]),
+                      clock=lambda: 0.0, obs=obs, quality=qm)
+    n = 32
+    try:
+        for i in range(n):
+            eng.submit(q[i].astype(np.float32), cfg.k, index="q8")
+        comps = []
+        for _ in range(8):
+            eng.step(now=0.0)
+            comps += eng.qp.poll()
+            if len(comps) >= n:
+                break
+        assert len(comps) == n
+        # every q8 completion carries a live proxy
+        assert all(0.0 <= c.quality <= 1.0 for c in comps)
+        qm.drain(timeout_s=30.0)
+        qm.close()
+    finally:
+        pipe.flash.release()
+    s = qm.summary()
+    assert s["proxy"]["n"] == n
+    assert s["audits_done"] == n and s["audits_dropped"] == 0
+    assert s["calibration_err"]["mean"] <= 0.05, s["calibration_err"]
+    assert harvest.appended == n
+    assert all(r["quality"] >= 0.0 for r in harvest.records())
+
+
+def test_shadow_queue_bound_drops_audits_not_requests():
+    m = MetricsRegistry()
+    qm = QualityMonitor(m, vectors=np.zeros((64, 4), np.float32),
+                        shadow_rate=1.0, max_pending=0)
+    qm.observe_batch([_req(0)], [_comp(1.0)])
+    assert qm.audits.value("dropped") == 1     # bounded lane, counted
+    assert qm.proxy_hist.n == 1                # proxy stream unaffected
+    qm.close()
+
+
+# -------------------------------------------------------------------------
+# burn-rate alerting (virtual clock — fully deterministic)
+# -------------------------------------------------------------------------
+def _tracker():
+    vt = [0.0]
+    tot, bad = [0], [0]
+    slo = SLOTracker(metrics=MetricsRegistry(), clock=lambda: vt[0])
+    slo.add_rule(BurnRule(name="r", total_fn=lambda: tot[0],
+                          bad_fn=lambda: bad[0], budget=0.01,
+                          fast_s=10.0, slow_s=60.0))
+    return vt, tot, bad, slo
+
+
+def _run(slo, vt, tot, bad, seconds, per_tick_total, per_tick_bad,
+         step=5.0):
+    for _ in range(int(seconds / step)):
+        vt[0] += step
+        tot[0] += per_tick_total
+        bad[0] += per_tick_bad
+        slo.tick()
+
+
+def test_burn_alert_fires_on_burst_and_clears_with_hysteresis():
+    vt, tot, bad, slo = _tracker()
+    st = slo.alerts["r"]
+    _run(slo, vt, tot, bad, 60, 100, 0)        # healthy hour: quiet
+    assert st.state == "ok" and st.fires == 0
+    _run(slo, vt, tot, bad, 30, 100, 10)       # 10% bad >> 2x the 1% budget
+    assert st.state == "firing" and st.fires == 1
+    assert st.fast_burn >= 2.0 and st.slow_burn >= 2.0
+    # hovering between clear (1x) and fire (2x): NO flapping
+    _run(slo, vt, tot, bad, 60, 1000, 15)      # 1.5% bad -> burn 1.5
+    assert st.state == "firing" and st.fires == 1 and st.clears == 0
+    _run(slo, vt, tot, bad, 120, 100, 0)       # recovery
+    assert st.state == "ok" and st.clears == 1 and st.fires == 1
+    _run(slo, vt, tot, bad, 60, 100, 0)        # stays quiet
+    assert st.fires == 1 and st.clears == 1
+    assert slo.metrics.counter("slo.alerts").value("r:fire") == 1
+    assert slo.metrics.counter("slo.alerts").value("r:clear") == 1
+
+
+def test_burn_ignores_windows_below_min_events():
+    vt, tot, bad, slo = _tracker()
+    _run(slo, vt, tot, bad, 60, 0, 0)          # no traffic at all
+    st = slo.alerts["r"]
+    assert st.state == "ok" and st.fast_burn == 0.0 and st.slow_burn == 0.0
+
+
+def test_alert_transitions_emit_slo_trace_instants():
+    vt, tot, bad = [0.0], [0], [0]
+    tr = TraceRecorder()
+    slo = SLOTracker(trace=tr, clock=lambda: vt[0])
+    slo.add_rule(BurnRule(name="q", total_fn=lambda: tot[0],
+                          bad_fn=lambda: bad[0], budget=0.01,
+                          fast_s=10.0, slow_s=30.0))
+    _run(slo, vt, tot, bad, 30, 100, 50)
+    _run(slo, vt, tot, bad, 90, 1000, 0)
+    names = [e[1] for e in tr.snapshot()]
+    assert "alert_fire:q" in names and "alert_clear:q" in names
+
+
+def test_default_rules_wire_engine_and_quality_streams():
+    m = MetricsRegistry()
+    qm = QualityMonitor(m)
+    vt = [0.0]
+    slo = SLOTracker(metrics=m, clock=lambda: vt[0])
+    default_rules(slo, m, quality=qm, fast_s=5.0, slow_s=20.0)
+    assert set(slo.alerts) == {"deadline", "partial", "failed", "shed",
+                               "quality"}
+    comp = m.counter("engine.completions")
+    for t in range(8):
+        vt[0] += 5.0
+        comp.inc(10.0)
+        comp.inc(5.0, "partial")               # 33% partial, 1% budget
+        slo.tick()
+    assert slo.alerts["partial"].state == "firing"
+    assert slo.alerts["failed"].state == "ok"
+
+
+def test_health_snapshot_document_and_atomic_write(tmp_path):
+    m = MetricsRegistry()
+    qm = QualityMonitor(m)
+    qm.observe_batch([_req(0)], [_comp(0.7)])
+    vt = [0.0]
+    slo = SLOTracker(metrics=m, clock=lambda: vt[0])
+    default_rules(slo, m, quality=qm)
+    slo.tick()
+    doc = health_snapshot(slo=slo, quality=qm, registry=m,
+                          extra={"drill": {"victim": 1}}, t=123.0)
+    p = str(tmp_path / "health.json")
+    write_health(p, doc)
+    back = json.load(open(p))
+    assert back["t"] == 123.0
+    assert back["alerts"]["partial"]["state"] == "ok"
+    assert back["quality"]["proxy"]["n"] == 1
+    assert back["drill"]["victim"] == 1
+    assert "engine.completions" in back["metrics"] or back["metrics"]
+
+
+# -------------------------------------------------------------------------
+# centroid-drift rebuild advisory
+# -------------------------------------------------------------------------
+def _drift_monitor(trace=None, **kw):
+    from repro.lifecycle import DriftMonitor
+    cents = np.array([[0.0, 0.0], [10.0, 10.0]], np.float32)
+    return DriftMonitor(cents, metrics=MetricsRegistry(), trace=trace,
+                        shift_threshold=0.6, min_inserts=32, **kw)
+
+
+def test_isotropic_inserts_do_not_advise():
+    dm = _drift_monitor()
+    rng = np.random.default_rng(0)
+    v = rng.normal(0.0, 1.0, (200, 2)).astype(np.float32)
+    dm.observe(np.concatenate([v, -v]))        # symmetric around c0
+    assert dm.advisory() is None
+    assert dm.shifts().max() < 0.2
+    assert dm.summary()["clusters_drifted"] == 0
+
+
+def test_one_sided_pileup_advises_once_and_resets():
+    tr = TraceRecorder()
+    dm = _drift_monitor(trace=tr)
+    rng = np.random.default_rng(1)
+    # all inserts land on ONE side of centroid 0: shift -> ~1
+    v = (np.array([2.0, 0.0]) +
+         rng.normal(0, 0.05, (64, 2))).astype(np.float32)
+    dm.observe(v)
+    assert dm.shifts()[0] > 0.9
+    reason = dm.advisory()
+    assert reason is not None and reason.startswith("drift:")
+    dm.advisory()                              # latched: still advising...
+    names = [e[1] for e in tr.snapshot()]
+    assert names.count("rebuild_advisory") == 1   # ...but ONE instant
+    assert dm.advisories == 1
+    assert dm.summary()["top"][0]["cluster"] == 0
+    dm.reset()
+    assert dm.advisory() is None               # re-armed, no stale signal
+
+
+def test_nearest_centroid_fallback_matches_explicit_cids():
+    dm1, dm2 = _drift_monitor(), _drift_monitor()
+    v = (np.array([10.0, 10.0]) +
+         np.array([[1.0, 0.0]] * 40)).astype(np.float32)
+    dm1.observe(v)                             # assigns nearest (cluster 1)
+    dm2.observe(v, cids=np.ones(40, np.int64))
+    np.testing.assert_allclose(dm1.shifts(), dm2.shifts())
+    assert dm1.shifts()[1] > 0.9 and dm1.shifts()[0] == 0.0
+
+
+def test_scheduler_due_surfaces_drift_advisory():
+    from repro.lifecycle import RebuildScheduler
+    from repro.lifecycle.rebuild import RebuildPolicy
+    dm = _drift_monitor()
+    lane = types.SimpleNamespace(
+        state=types.SimpleNamespace(fill_frac=0.0, tombstone_frac=0.0),
+        stats=types.SimpleNamespace(rejected_full=0))
+    sched = RebuildScheduler(
+        name="t", corpus=None, centroids=dm.centroids, workdir="",
+        lane=lane, versions=None, make_pipeline=None, cluster_len=8,
+        policy=RebuildPolicy(min_interval_s=0.0), clock=lambda: 100.0,
+        drift=dm)
+    assert sched.due() is None                 # stationary stream
+    dm.observe((np.array([2.0, 0.0]) +
+                np.zeros((64, 2))).astype(np.float32))
+    assert sched.due() == "drift:1"
+    # capacity triggers still outrank the advisory
+    lane.state.fill_frac = 1.0
+    assert sched.due() == "delta_fill"
+
+
+def test_drifting_trace_window_migrates_and_validates():
+    tr = drifting_trace(200.0, 10.0, 1000, window_frac=0.2, seed=3)
+    assert len(tr) > 100
+    rows = np.array([a.qrow for a in tr])
+    assert rows.min() >= 0 and rows.max() < 1000
+    n10 = len(tr) // 10
+    assert rows[:n10].mean() + 300 < rows[-n10:].mean()  # window moved
+    assert rows[:n10].max() < 1000 * 0.2 + 80            # starts low
+    assert tr == drifting_trace(200.0, 10.0, 1000, window_frac=0.2, seed=3)
+    with pytest.raises(ValueError):
+        drifting_trace(10.0, 1.0, 100, window_frac=0.0)
+    with pytest.raises(ValueError):
+        drifting_trace(10.0, 1.0, 100, window_frac=1.5)
+
+
+# -------------------------------------------------------------------------
+# rerank auto-round: parity at off, adaptation at on
+# -------------------------------------------------------------------------
+def test_auto_round_first_batch_parity_and_adaptation(small_index,
+                                                      small_corpus,
+                                                      tmp_path):
+    x, q, _ = small_corpus
+    cfg = SearchConfig(k=10, nprobe_max=16, pruning="none",
+                       use_kernel=False, fused_topk=True)
+
+    def run(pipe, batch):
+        h = pipe.prefetch(pipe.plan(batch, cfg.k))
+        return pipe.harvest(pipe.dispatch(h))
+
+    off = make_quantized_pipeline(
+        small_index, None, cfg, vectors=x, name="off",
+        flash_path=str(tmp_path / "off.f32"),
+        rerank=RerankConfig(round_size=8, auto_round=False))
+    on = make_quantized_pipeline(
+        small_index, None, cfg, vectors=x, name="on",
+        flash_path=str(tmp_path / "on.f32"),
+        rerank=RerankConfig(round_size=8, auto_round=True))
+    try:
+        b = q[:16].astype(np.float32)
+        r_off, r_on = run(off, b), run(on, b)
+        # before any I/O stamps exist, auto mode runs the configured width
+        # verbatim — results bit-equal to the static config
+        assert r_on.times.rerank_round_size == 8
+        assert r_off.times.rerank_round_size == 8
+        np.testing.assert_array_equal(r_off.ids, r_on.ids)
+        np.testing.assert_array_equal(r_off.dists, r_on.dists)
+        # the stamped cost retargets the NEXT batch's round width
+        learned = on._auto_round
+        assert learned is not None and learned >= 16
+        assert off._auto_round is None         # off never adapts
+        r2 = run(on, b)
+        assert r2.times.rerank_round_size == learned != 8
+        r2_off = run(off, b)
+        assert r2_off.times.rerank_round_size == 8
+    finally:
+        off.flash.release()
+        on.flash.release()
+
+
+# -------------------------------------------------------------------------
+# fabric coverage proxy + flow-arrow export
+# -------------------------------------------------------------------------
+def test_fabric_coverage_and_primary_shard_stamps(small_index):
+    from repro.distributed import ShardedFabric
+    cfg = SearchConfig(k=5, nprobe_max=8, pruning="none", use_kernel=False,
+                       fused_topk=True)
+    fab = ShardedFabric(small_index, None, cfg, n_shards=4)
+    # plan.cids rows are RANK-ORDERED probe lists (-1 = padding)
+    pcids = np.array([[0, 1, 2, 3],
+                      [0, 2, -1, -1],
+                      [2, 3, -1, -1]], np.int64)
+    state = types.SimpleNamespace(
+        plan=types.SimpleNamespace(cids=pcids), lost=set())
+    # no losses: full coverage regardless of probe shape
+    np.testing.assert_allclose(fab._coverage(state, 3), [1.0, 1.0, 1.0])
+    # clusters 1 and 3 lost: coverage drops by the RANK weight 1/(1+j) of
+    # each lost probe — losing the rank-1 probe (row 0: cluster 1) costs
+    # more than losing the rank-3 probe (cluster 3), and a row that never
+    # probed a lost cluster (row 1) stays at 1.0
+    state.lost = {1, 3}
+    w = 1.0 / (1.0 + np.arange(4, dtype=np.float64))
+    exp0 = 1.0 - (w[1] + w[3]) / w.sum()            # lost ranks 1 and 3
+    exp2 = 1.0 - w[1] / (w[0] + w[1])               # lost rank 1 of 2
+    np.testing.assert_allclose(fab._coverage(state, 3),
+                               [exp0, 1.0, exp2], rtol=1e-6)
+    # the victim-vs-bystander separation the kill drill gates on: losing
+    # a query's rank-0 probe must cost more than losing its last probe
+    state_home = types.SimpleNamespace(
+        plan=types.SimpleNamespace(cids=pcids[:1]), lost={0})
+    state_tail = types.SimpleNamespace(
+        plan=types.SimpleNamespace(cids=pcids[:1]), lost={3})
+    assert fab._coverage(state_home, 1)[0] < fab._coverage(state_tail, 1)[0]
+    cids = np.array([[0, 1], [2, -1], [3, 0]], np.int64)
+    shards = fab._primary_shards(
+        types.SimpleNamespace(plan=types.SimpleNamespace(cids=cids)), 3)
+    np.testing.assert_array_equal(
+        shards, fab.striping.shard_of(np.array([0, 2, 3])))
+
+
+def test_flow_arrow_export_and_dangling_detection():
+    tr = TraceRecorder()
+    tr.span("request", 1.0, 2.0, trace_id=9, track="requests")
+    tr.flow_start("fanout", "flow-1", t=1.2, trace_id=9, track="requests",
+                  args={"shard": 2})
+    tr.flow_finish("fanout", "flow-1", t=1.2, trace_id=9, track="shard-2")
+    doc = tr.export()
+    te = doc["traceEvents"]
+    s = [e for e in te if e["ph"] == "s"]
+    f = [e for e in te if e["ph"] == "f"]
+    assert len(s) == len(f) == 1
+    assert s[0]["cat"] == f[0]["cat"] == "flow"
+    assert s[0]["id"] == f[0]["id"]
+    assert f[0]["bp"] == "e"                   # bind to enclosing slice
+    assert s[0]["args"]["shard"] == 2
+    assert check_well_nested(te) == []
+    # dangling endpoints are structural violations
+    tr2 = TraceRecorder()
+    tr2.flow_start("fanout", "flow-7", t=0.5, trace_id=1, track="requests")
+    v = check_well_nested(tr2.export()["traceEvents"])
+    assert any("without finish" in x for x in v)
+    tr3 = TraceRecorder()
+    tr3.flow_finish("fanout", "flow-8", t=0.5, track="shard-0")
+    v = check_well_nested(tr3.export()["traceEvents"])
+    assert any("without start" in x for x in v)
+
+
+def test_lifecycle_rebuild_trace_track(small_corpus):
+    """The scheduler's rebuild emits snapshot/build/swap spans plus the
+    epoch_swap instant on the 'lifecycle' track (satellite: rebuilds are
+    visible in the same flamegraph as the serving spans)."""
+    from repro.lifecycle import RebuildScheduler
+    tr = TraceRecorder()
+    obs = types.SimpleNamespace(trace=tr, tracing=True)
+    rep = types.SimpleNamespace(
+        trigger="drift:1", folded_inserts=4, mode="delta", eid_old=0,
+        eid_new=1, t_snapshot=1.0, t_built=2.0, t_swapped=3.0,
+        carried_ops=0, shards_streamed=2, shards_reused=6, io_cut_x=4.0,
+        tier="q8")
+    bstats = {"shard_stamps": [
+        {"shard": 0, "rows": 10, "bytes": 640, "load_start": 1.1,
+         "assign_done": 1.4, "resumed": False},
+        {"shard": 1, "rows": 10, "bytes": 640, "load_start": 1.2,
+         "assign_done": 1.5, "resumed": False},
+        {"shard": 2, "rows": 0, "bytes": 0, "load_start": 0.0,
+         "assign_done": 0.0, "resumed": True}]}
+    sched = object.__new__(RebuildScheduler)
+    sched.obs = obs
+    sched.name = "t"
+    sched._emit_rebuild_trace(rep, bstats, 0.5)
+    te = tr.export()["traceEvents"]
+    assert check_well_nested(te) == []
+    tracks = {e["tid"]: e["args"]["name"] for e in te if e["ph"] == "M"}
+    xs = {e["name"] for e in te if e["ph"] == "X"}
+    assert {"snapshot", "build", "swap"} <= xs
+    assert all(tracks[e["tid"]] == "lifecycle"
+               for e in te if e["ph"] == "X")
+    swaps = [e for e in te if e["ph"] == "i" and e["name"] == "epoch_swap"]
+    assert len(swaps) == 1 and swaps[0]["args"]["eid_new"] == 1
+    streams = [e for e in te if e["ph"] in ("b", "e")
+               and e["name"] == "shard_stream"]
+    assert len(streams) == 4                   # 2 streamed shards x (b, e)
+    assert not any("shard2" in str(e.get("id")) for e in streams)
