@@ -1,0 +1,26 @@
+"""repro.analysis — concurrency- and invariant-aware static analysis.
+
+The serving stack is a genuinely concurrent system: nine modules hold
+locks, with poller threads, shard workers, and audit executors.  PR 9
+paid for that the hard way (an ``add_done_callback``-inside-lock
+deadlock wedged the poller).  This package turns the repo's
+conventions — no blocking calls under locks, bounded buffers
+everywhere, seeded determinism, no host syncs inside jit — into
+machine-checked rules:
+
+* ``python -m repro.analysis.lint src/ tests/`` — the AST lint pass
+  (see :mod:`repro.analysis.lint`); exits non-zero on any finding not
+  waived inline or recorded in ``baseline.json``.
+* :mod:`repro.analysis.lockcheck` — the runtime companion: an
+  instrumented ``Lock``/``RLock`` wrapper that records the *actual*
+  acquisition order and held-across-submit events during tests and
+  asserts the lock graph is acyclic at teardown (the ``lockcheck``
+  conftest fixture).
+
+Rules, rationale, and waiver syntax are documented in
+``docs/invariants.md``.
+
+This package deliberately imports nothing heavyweight: the linter
+parses source, it never imports the code under analysis.
+"""
+from .core import Finding, collect_files, load_file  # noqa: F401

@@ -1,0 +1,100 @@
+"""Rule group 2 — bounded memory (``unbounded-growth``).
+
+PR 7 eradicated the grow-forever buffer class from the serving
+daemons (trace rings, metric reservoirs, harvest ring); this rule
+keeps it dead.  In hot-path modules (runtime / distributed / obs /
+lifecycle / storage), an ``.append`` / ``.extend`` / ``+=`` on an
+instance-attribute list with no visible bound is a finding.  A bound
+is visible when the attr is a ``deque(maxlen=...)``, the class trims
+it somewhere (``del self.x[:k]``, ``.pop/.popleft/.clear``, slice
+reassignment), or the growth site / init site carries a
+``# lint: bounded-by(reason)`` waiver asserting why it cannot grow
+without limit (e.g. "one entry per shard, shards are fixed at
+deploy").
+
+Chains one attribute deep are resolved through the class registry:
+``self.stats.failovers.append(...)`` is checked against
+``FabricStats.failovers`` when ``self.stats = FabricStats()``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Optional
+
+from .core import FileModel, Finding
+from .project import ClassInfo, Project, attr_chain
+
+RULE = "unbounded-growth"
+
+HOT_PARTS = {"runtime", "distributed", "obs", "lifecycle", "storage",
+             "fixtures"}
+
+
+def _is_hot(relpath: str) -> bool:
+    return bool(HOT_PARTS.intersection(
+        os.path.normpath(relpath).split(os.sep)))
+
+
+def _owner_attr(project: Project, ci: Optional[ClassInfo],
+                target: ast.AST, local_types: dict
+                ) -> Optional[tuple[ClassInfo, str]]:
+    """Resolve ``self.x`` / ``self.stats.failovers`` / ``st.log`` to
+    (owning ClassInfo, attr name)."""
+    if not isinstance(target, ast.Attribute):
+        return None
+    t = project.resolve_type(target.value, ci, local_types)
+    owner = project.classes.get(t) if t else None
+    if owner is None:
+        return None
+    return owner, target.attr
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for fm in project.files:
+        if not _is_hot(fm.relpath):
+            continue
+        for cls_node in ast.walk(fm.tree):
+            if not isinstance(cls_node, ast.ClassDef):
+                continue
+            ci = project.classes.get(cls_node.name)
+            if ci is None or ci.node is not cls_node:
+                continue
+            for mname, fn in ci.methods.items():
+                scope = f"{ci.name}.{mname}"
+                local_types = project.local_types(ci, fn)
+                for node in ast.walk(fn):
+                    f = _check_node(project, fm, ci, scope, node,
+                                    local_types)
+                    if f is not None:
+                        findings.append(f)
+    return findings
+
+
+def _check_node(project: Project, fm: FileModel, ci: ClassInfo, scope: str,
+                node: ast.AST, local_types: dict) -> Optional[Finding]:
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in ("append", "extend"):
+        owner_attr = _owner_attr(project, ci, node.func.value, local_types)
+    elif isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Add):
+        owner_attr = _owner_attr(project, ci, node.target, local_types)
+    else:
+        return None
+    if owner_attr is None:
+        return None
+    owner, attr = owner_attr
+    if attr not in owner.list_attrs:
+        return None                      # bounded, trimmed, or not a list
+    if not _is_hot(owner.file.relpath):
+        return None
+    if node.lineno in fm.bounded:
+        return None                      # growth-site bounded-by(...)
+    init_line = owner.list_attrs[attr]
+    if init_line in owner.file.bounded:
+        return None                      # init-site bounded-by(...)
+    return fm.finding(
+        RULE, node, scope,
+        f"{owner.name}.{attr} grows without bound (init at "
+        f"{owner.file.relpath}:{init_line}); use deque(maxlen=...), a "
+        f"ring trim, or '# lint: bounded-by(reason)'")

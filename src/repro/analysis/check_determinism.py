@@ -1,0 +1,146 @@
+"""Rule group 3 — determinism.
+
+Every stochastic component in this repo threads an explicit
+``np.random.default_rng(seed)`` / ``SeedSequence`` (loadgen, fault
+injection, synthetic corpora, k-means init): reproducing a reported
+recall/latency number requires it, and the shadow-audit math in
+``obs/quality.py`` assumes replayable sampling.  Three rules:
+
+* ``global-rng`` — sampling through module-global state
+  (``np.random.normal(...)``, ``np.random.seed``, bare
+  ``random.random()``): invisible cross-module coupling, order-
+  dependent results under threads.
+* ``unseeded-rng`` — ``default_rng()`` / ``RandomState()`` /
+  ``random.Random()`` with no seed: a fresh OS-entropy stream per
+  call, unreproducible by construction.
+* ``clock-seed`` — a seed derived from the clock
+  (``default_rng(time.time_ns())``): reproducible only within the
+  same nanosecond.  Allowed under ``benchmarks/`` (wall-clock runs
+  that WANT varied streams), banned elsewhere.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Optional
+
+from .core import FileModel, Finding
+from .project import Project, attr_chain
+
+RULE_GLOBAL = "global-rng"
+RULE_UNSEEDED = "unseeded-rng"
+RULE_CLOCK = "clock-seed"
+
+NP_GLOBAL_FNS = {
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "normal", "standard_normal", "uniform", "choice", "shuffle",
+    "permutation", "poisson", "exponential", "beta", "gamma", "binomial",
+    "bytes", "sample", "get_state", "set_state", "randint", "laplace",
+    "lognormal", "multivariate_normal", "geometric", "zipf",
+}
+PY_RANDOM_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "seed", "normalvariate", "betavariate",
+    "expovariate", "getrandbits", "triangular", "vonmisesvariate",
+}
+CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "datetime.now", "datetime.utcnow",
+}
+
+
+def _scope_of(fm: FileModel, node: ast.AST) -> str:
+    # cheap enclosing-scope lookup: nearest def/class whose span covers
+    # the node
+    best = "module"
+    best_span = None
+    for sub in ast.walk(fm.tree):
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            if sub.lineno <= node.lineno <= (sub.end_lineno or sub.lineno):
+                span = (sub.end_lineno or sub.lineno) - sub.lineno
+                if best_span is None or span < best_span:
+                    best, best_span = sub.name, span
+    return best
+
+
+CLOCK_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns", "now", "utcnow"}
+
+
+def _has_clock(expr: ast.AST) -> bool:
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call):
+            ch = attr_chain(sub.func)
+            if ch and (ch in CLOCK_CALLS
+                       or (ch.split(".")[-1] in CLOCK_FNS
+                           and ch.split(".")[0] in ("time", "datetime"))):
+                return True
+    return False
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for fm in project.files:
+        in_bench = "benchmarks" in os.path.normpath(
+            fm.relpath).split(os.sep)
+        for node in ast.walk(fm.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = _check_call(fm, node, in_bench)
+            if f is not None:
+                findings.append(f)
+    return findings
+
+
+def _check_call(fm: FileModel, call: ast.Call,
+                in_bench: bool) -> Optional[Finding]:
+    ch = attr_chain(call.func)
+    if ch is None:
+        return None
+    parts = ch.split(".")
+    scope = None
+
+    # np.random.<sampler>(...) via module-global state
+    if len(parts) >= 2 and parts[-2] == "random" \
+            and parts[0] in ("np", "numpy") and parts[-1] in NP_GLOBAL_FNS:
+        scope = _scope_of(fm, call)
+        return fm.finding(
+            RULE_GLOBAL, call, scope,
+            f"np.random.{parts[-1]} uses module-global RNG state; thread "
+            f"an explicit np.random.default_rng(seed) Generator instead")
+
+    # bare random.<fn>(...)
+    if len(parts) == 2 and parts[0] == "random" \
+            and parts[1] in PY_RANDOM_FNS:
+        scope = _scope_of(fm, call)
+        return fm.finding(
+            RULE_GLOBAL, call, scope,
+            f"random.{parts[1]} uses the process-global stdlib RNG; use a "
+            f"seeded np.random.default_rng or random.Random(seed)")
+
+    # default_rng() / RandomState() / Random() — seed policing
+    ctor = parts[-1]
+    if ctor in ("default_rng", "RandomState") or ch in ("random.Random",):
+        if not call.args and not call.keywords:
+            scope = _scope_of(fm, call)
+            return fm.finding(
+                RULE_UNSEEDED, call, scope,
+                f"{ctor}() with no seed draws fresh OS entropy — "
+                f"unreproducible; pass an explicit seed or SeedSequence")
+        if not in_bench and call.args and _has_clock(call.args[0]):
+            scope = _scope_of(fm, call)
+            return fm.finding(
+                RULE_CLOCK, call, scope,
+                f"{ctor}(<clock>) derives the seed from wall time — "
+                f"reproducible only within the same tick; thread a fixed "
+                f"seed (clock seeds are allowed only under benchmarks/)")
+    if ctor == "SeedSequence" and not in_bench and call.args \
+            and _has_clock(call.args[0]):
+        scope = _scope_of(fm, call)
+        return fm.finding(
+            RULE_CLOCK, call, scope,
+            "SeedSequence(<clock>) derives entropy from wall time; pass a "
+            "fixed seed outside benchmarks/")
+    return None

@@ -1,0 +1,240 @@
+"""Rule group 4 — jit hazards.
+
+Inside a function handed to ``jax.jit`` (or a Pallas kernel via
+``pl.pallas_call``), a traced value has no concrete contents: forcing
+one to host (``.item()``, ``float(x)``, ``np.asarray(x)``) inserts a
+device sync in the middle of the traced computation (the PR 5 hot-path
+stall class), and Python ``if``/``while`` on one either fails to trace
+or silently bakes in the warmup value.  Two rules:
+
+* ``jit-host-sync`` — ``.item()`` anywhere in a jitted function;
+  ``float()/int()/bool()`` or ``np.asarray/np.array`` applied to a
+  traced parameter.
+* ``jit-python-branch`` — an ``if``/``while`` test that references a
+  traced parameter directly.  Shape-derived tests (``x.shape``,
+  ``x.ndim``, ``x.dtype``, ``x.size``), ``is None`` checks, and
+  ``isinstance`` are static under trace and exempt.
+
+"Traced parameter" excludes names listed in ``static_argnames`` /
+``static_argnums`` on the jit decorator and arguments pre-bound by a
+``functools.partial`` (partial-bound values are Python constants at
+trace time).  Jitted functions are found three ways: decorator form
+(``@jax.jit`` / ``@functools.partial(jax.jit, ...)``), call-wrapping
+(``jax.jit(fn)`` / ``jax.jit(functools.partial(fn, ...))``), and the
+kernel argument of ``pl.pallas_call``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .core import FileModel, Finding
+from .project import Project, attr_chain
+
+RULE_SYNC = "jit-host-sync"
+RULE_BRANCH = "jit-python-branch"
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    ch = attr_chain(node)
+    return ch in ("jax.jit", "jit")
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    ch = attr_chain(node)
+    return ch is not None and ch.endswith("pallas_call")
+
+
+def _const_str_tuple(node: ast.AST) -> set[str]:
+    out: set[str] = set()
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        out.add(node.value)
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+    return out
+
+
+def _jit_call_static(call: ast.Call) -> tuple[set[str], set[int]]:
+    """static_argnames / static_argnums from a jax.jit(...) call or a
+    functools.partial(jax.jit, ...) decorator."""
+    names: set[str] = set()
+    nums: set[int] = set()
+    for k in call.keywords:
+        if k.arg == "static_argnames":
+            names |= _const_str_tuple(k.value)
+        elif k.arg == "static_argnums":
+            if isinstance(k.value, ast.Constant) \
+                    and isinstance(k.value.value, int):
+                nums.add(k.value.value)
+            elif isinstance(k.value, (ast.Tuple, ast.List)):
+                for e in k.value.elts:
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, int):
+                        nums.add(e.value)
+    return names, nums
+
+
+class _JittedFn:
+    def __init__(self, fn: ast.FunctionDef, static_names: set[str],
+                 static_nums: set[int], bound_pos: int,
+                 bound_kw: set[str], kind: str):
+        self.fn = fn
+        self.kind = kind
+        params = [a.arg for a in fn.args.args]
+        self.traced: set[str] = set()
+        for i, p in enumerate(params):
+            if p in static_names or i in static_nums:
+                continue
+            if i < bound_pos or p in bound_kw:
+                continue            # partial-bound -> trace-time constant
+            self.traced.add(p)
+        for a in fn.args.kwonlyargs:
+            if a.arg not in static_names and a.arg not in bound_kw:
+                self.traced.add(a.arg)
+
+
+def _find_jitted(fm: FileModel) -> list[_JittedFn]:
+    fns: dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(fm.tree):
+        if isinstance(node, ast.FunctionDef):
+            fns.setdefault(node.name, node)
+    out: list[_JittedFn] = []
+    seen: set[int] = set()
+
+    def add(fn: ast.FunctionDef, names: set[str], nums: set[int],
+            bound_pos: int = 0, bound_kw: Optional[set] = None,
+            kind: str = "jit") -> None:
+        if id(fn) in seen:
+            return
+        seen.add(id(fn))
+        out.append(_JittedFn(fn, names, nums, bound_pos,
+                             bound_kw or set(), kind))
+
+    # decorator forms
+    for node in ast.walk(fm.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for dec in node.decorator_list:
+            if _is_jit_expr(dec):
+                add(node, set(), set())
+            elif isinstance(dec, ast.Call):
+                if _is_jit_expr(dec.func):
+                    names, nums = _jit_call_static(dec)
+                    add(node, names, nums)
+                elif attr_chain(dec.func) in ("functools.partial",
+                                              "partial") \
+                        and dec.args and _is_jit_expr(dec.args[0]):
+                    names, nums = _jit_call_static(dec)
+                    add(node, names, nums)
+
+    # call-wrapping: jax.jit(fn) / jax.jit(functools.partial(fn, ...))
+    # and pl.pallas_call(kernel, ...)
+    for node in ast.walk(fm.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_jit_expr(node.func) and node.args:
+            target = node.args[0]
+            names, nums = _jit_call_static(node)
+            if isinstance(target, ast.Name) and target.id in fns:
+                add(fns[target.id], names, nums)
+            elif isinstance(target, ast.Call) \
+                    and attr_chain(target.func) in ("functools.partial",
+                                                    "partial") \
+                    and target.args \
+                    and isinstance(target.args[0], ast.Name) \
+                    and target.args[0].id in fns:
+                bound_kw = {k.arg for k in target.keywords if k.arg}
+                add(fns[target.args[0].id], names, nums,
+                    bound_pos=len(target.args) - 1, bound_kw=bound_kw)
+        elif _is_pallas_call(node.func) and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Name) and target.id in fns:
+                add(fns[target.id], set(), set(), kind="pallas")
+            elif isinstance(target, ast.Call) \
+                    and attr_chain(target.func) in ("functools.partial",
+                                                    "partial") \
+                    and target.args \
+                    and isinstance(target.args[0], ast.Name) \
+                    and target.args[0].id in fns:
+                bound_kw = {k.arg for k in target.keywords if k.arg}
+                add(fns[target.args[0].id], set(), set(),
+                    bound_pos=len(target.args) - 1, bound_kw=bound_kw,
+                    kind="pallas")
+    return out
+
+
+def _refs_traced(expr: ast.AST, traced: set[str]) -> Optional[str]:
+    """Name of a traced param referenced 'raw' in ``expr`` — ignoring
+    static projections (.shape/.ndim/.dtype/.size), `is None` tests,
+    and isinstance checks."""
+    skip: set[int] = set()
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Attribute) and sub.attr in STATIC_ATTRS:
+            for inner in ast.walk(sub.value):
+                skip.add(id(inner))
+        elif isinstance(sub, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in sub.ops):
+            for inner in ast.walk(sub):
+                skip.add(id(inner))
+        elif isinstance(sub, ast.Call):
+            fname = attr_chain(sub.func)
+            if fname in ("isinstance", "len", "getattr", "hasattr"):
+                for inner in ast.walk(sub):
+                    skip.add(id(inner))
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load) \
+                and sub.id in traced and id(sub) not in skip:
+            return sub.id
+    return None
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    for fm in project.files:
+        for jf in _find_jitted(fm):
+            findings.extend(_check_jitted(fm, jf))
+    return findings
+
+
+def _check_jitted(fm: FileModel, jf: _JittedFn) -> list[Finding]:
+    out: list[Finding] = []
+    fn = jf.fn
+    scope = fn.name
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item":
+                out.append(fm.finding(
+                    RULE_SYNC, node, scope,
+                    f".item() inside jitted `{fn.name}` forces a host "
+                    f"sync mid-trace"))
+                continue
+            ch = attr_chain(node.func)
+            if ch in ("float", "int", "bool") and node.args \
+                    and _refs_traced(node.args[0], jf.traced):
+                out.append(fm.finding(
+                    RULE_SYNC, node, scope,
+                    f"{ch}() on traced value "
+                    f"`{_refs_traced(node.args[0], jf.traced)}` inside "
+                    f"jitted `{fn.name}` forces a host sync"))
+            elif ch in ("np.asarray", "np.array", "numpy.asarray",
+                        "numpy.array", "np.ascontiguousarray") \
+                    and node.args \
+                    and _refs_traced(node.args[0], jf.traced):
+                out.append(fm.finding(
+                    RULE_SYNC, node, scope,
+                    f"{ch} on traced value inside jitted `{fn.name}` "
+                    f"pulls the array to host mid-trace; use jnp"))
+        elif isinstance(node, (ast.If, ast.While)):
+            name = _refs_traced(node.test, jf.traced)
+            if name:
+                out.append(fm.finding(
+                    RULE_BRANCH, node, scope,
+                    f"Python branch on traced value `{name}` inside "
+                    f"jitted `{fn.name}`; use lax.cond/select or hoist "
+                    f"the decision out of the traced function"))
+    return out

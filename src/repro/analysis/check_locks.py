@@ -1,0 +1,431 @@
+"""Rule group 1 — lock discipline.
+
+Three rules, all rooted in the PR 9 incident (an ``add_done_callback``
+registered inside ``QualityMonitor._lock`` ran inline on the
+submitting thread when the future was already finished, re-entered
+``_done``, and deadlocked the poller on a non-reentrant Lock):
+
+* ``lock-blocking-call`` — a call that can block indefinitely made
+  while a lock is held: ``time.sleep``, ``Future.result``,
+  ``Thread.join``, ``Queue.get/put(block=True)``, blocking
+  ``submit(block=True)``, ``executor.shutdown(wait=True)``, and
+  ``Condition/Event.wait`` on anything OTHER than the lock being held
+  (waiting on the condition backed by the held lock is the legal
+  pattern — the wait releases it).
+* ``lock-callback-under-lock`` — ``Future.add_done_callback`` while
+  holding a lock.  An already-finished future runs the callback
+  INLINE on the registering thread; if the callback needs the same
+  lock, that is a self-deadlock (the exact PR 9 class).
+* ``lock-order-cycle`` — the cross-module static lock graph (which
+  locks are acquired while which are held, including one level of
+  call resolution through the class registry) contains a cycle, or a
+  non-reentrant lock is re-acquired while already held.
+
+Held scopes come from ``with <lock>:`` blocks (including ``with
+<condition>:``, which acquires the condition's backing lock) and from
+linear ``.acquire()`` / ``.release()`` pairs — the raw-acquire region
+spans from the first acquire to the last release in the function,
+which over-approximates loops like ``UpdateLane.pump``'s
+lock-then-recheck but never under-approximates.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from .core import FileModel, Finding
+from .project import (
+    ClassInfo, LOCKISH_ATTR, Project, attr_chain, call_name,
+)
+
+RULE_BLOCKING = "lock-blocking-call"
+RULE_CALLBACK = "lock-callback-under-lock"
+RULE_CYCLE = "lock-order-cycle"
+
+
+@dataclasses.dataclass
+class LockRef:
+    node_id: str              # "Class.attr" or opaque "Class:chain"
+    kind: str                 # "lock" | "rlock"
+    resolved: bool
+
+
+@dataclasses.dataclass
+class Region:
+    lock: LockRef
+    start: int                # first line at which the lock is held
+    end: int                  # last line at which it may still be held
+    acq_line: int             # acquisition site (for graph edges)
+
+
+def resolve_lock_expr(project: Project, ci: Optional[ClassInfo],
+                      expr: ast.AST, local_types: dict
+                      ) -> Optional[LockRef]:
+    """Map a context/receiver expression to a lock identity.
+
+    ``self._lock`` -> Class._lock; ``self._doorbell`` (a Condition
+    built on ``self._lock``) -> Class._lock; ``st.lock`` resolves
+    through the registry; otherwise any ``*lock``-named attribute
+    becomes an opaque (conservatively reentrant) node."""
+    if not isinstance(expr, ast.Attribute):
+        return None
+    attr = expr.attr
+    base_t = project.resolve_type(expr.value, ci, local_types)
+    owner = project.classes.get(base_t) if base_t else None
+    if owner is not None:
+        if attr in owner.lock_attrs:
+            return LockRef(owner.lock_node(attr), owner.lock_attrs[attr],
+                           True)
+        if attr in owner.cond_attrs:
+            backing = owner.cond_attrs[attr]
+            if backing and backing in owner.lock_attrs:
+                return LockRef(owner.lock_node(backing),
+                               owner.lock_attrs[backing], True)
+            # Condition() with its own hidden lock
+            return LockRef(owner.lock_node(attr), "lock", True)
+    if LOCKISH_ATTR.match(attr):
+        chain = attr_chain(expr) or attr
+        scope = ci.name if ci else "module"
+        return LockRef(f"{scope}:{chain}", "rlock", False)
+    return None
+
+
+def _fn_regions(project: Project, ci: Optional[ClassInfo],
+                fn: ast.FunctionDef, local_types: dict) -> list[Region]:
+    regions: list[Region] = []
+    acquires: dict[str, list[tuple[int, LockRef]]] = {}
+    releases: dict[str, list[int]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                ref = resolve_lock_expr(project, ci, item.context_expr,
+                                        local_types)
+                if ref is not None:
+                    regions.append(Region(ref, node.lineno,
+                                          node.end_lineno or node.lineno,
+                                          node.lineno))
+        elif isinstance(node, ast.Call) and isinstance(node.func,
+                                                       ast.Attribute):
+            if node.func.attr == "acquire":
+                ref = resolve_lock_expr(project, ci, node.func.value,
+                                        local_types)
+                if ref is not None:
+                    acquires.setdefault(ref.node_id, []).append(
+                        (node.lineno, ref))
+            elif node.func.attr == "release":
+                ref = resolve_lock_expr(project, ci, node.func.value,
+                                        local_types)
+                if ref is not None:
+                    releases.setdefault(ref.node_id, []).append(node.lineno)
+    for node_id, acqs in acquires.items():
+        first_line, ref = min(acqs, key=lambda t: t[0])
+        rels = releases.get(node_id, [])
+        end = max(rels) if rels else (fn.end_lineno or first_line)
+        regions.append(Region(ref, first_line, end, first_line))
+    return regions
+
+
+def direct_lock_ids(project: Project, ci: ClassInfo,
+                    fn: ast.FunctionDef) -> set[str]:
+    """Resolved lock node ids this function acquires directly (used
+    for one-level call edges in the cross-class lock graph)."""
+    local_types = project.local_types(ci, fn)
+    return {r.lock.node_id
+            for r in _fn_regions(project, ci, fn, local_types)
+            if r.lock.resolved}
+
+
+def _held_at(regions: list[Region], line: int,
+             acq_line: Optional[int] = None) -> list[Region]:
+    return [r for r in regions
+            if r.start <= line <= r.end
+            and (acq_line is None or r.acq_line != acq_line
+                 or line != r.acq_line)]
+
+
+def _kwarg(call: ast.Call, name: str):
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _is_false(node) -> bool:
+    return isinstance(node, ast.Constant) and node.value is False
+
+
+class LockChecker:
+    """Runs the three lock rules over a Project; also exports the
+    static lock graph (`edges`) for tests and for the runtime
+    companion's agreement check."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: list[Finding] = []
+        # (src_node, dst_node) -> (relpath, line) of first sighting
+        self.edges: dict[tuple[str, str], tuple[str, int]] = {}
+        self.node_kinds: dict[str, str] = {}
+
+    def run(self) -> list[Finding]:
+        for fm in self.project.files:
+            self._check_file(fm)
+        self._check_cycles()
+        return self.findings
+
+    # -- per-function analysis --------------------------------------------
+    def _check_file(self, fm: FileModel) -> None:
+        for node in ast.walk(fm.tree):
+            if isinstance(node, ast.ClassDef):
+                ci = self.project.classes.get(node.name)
+                for stmt in node.body:
+                    if isinstance(stmt, ast.FunctionDef):
+                        self._check_fn(fm, ci, stmt,
+                                       f"{node.name}.{stmt.name}")
+        # module-level functions (incl. nested defs inside them)
+        for stmt in fm.tree.body:
+            if isinstance(stmt, ast.FunctionDef):
+                self._check_fn(fm, None, stmt, stmt.name)
+
+    def _check_fn(self, fm: FileModel, ci: Optional[ClassInfo],
+                  fn: ast.FunctionDef, scope: str) -> None:
+        project = self.project
+        local_types = project.local_types(ci, fn)
+        regions = _fn_regions(project, ci, fn, local_types)
+        for r in regions:
+            self.node_kinds.setdefault(r.lock.node_id, r.lock.kind)
+        if not regions:
+            return
+        # nested-acquisition edges (incl. same-lock re-entry)
+        for r2 in regions:
+            for r1 in _held_at(regions, r2.acq_line, acq_line=r2.acq_line):
+                if r1 is r2:
+                    continue
+                if r1.lock.node_id == r2.lock.node_id:
+                    if r1.lock.kind == "lock" and r1.lock.resolved:
+                        self.findings.append(fm.finding(
+                            RULE_CYCLE,
+                            _at(r2.acq_line),
+                            scope,
+                            f"non-reentrant lock {r1.lock.node_id} "
+                            f"re-acquired while already held "
+                            f"(self-deadlock)"))
+                    continue
+                self.edges.setdefault(
+                    (r1.lock.node_id, r2.lock.node_id),
+                    (fm.relpath, r2.acq_line))
+        # blocking / callback calls + one-level call edges
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            held = _held_at(regions, call.lineno)
+            if not held:
+                continue
+            self._classify_call(fm, ci, scope, call, held, local_types)
+
+    def _classify_call(self, fm: FileModel, ci: Optional[ClassInfo],
+                       scope: str, call: ast.Call, held: list[Region],
+                       local_types: dict) -> None:
+        project = self.project
+        held_ids = {r.lock.node_id for r in held}
+        held_desc = ", ".join(sorted(held_ids))
+        func = call.func
+        if isinstance(func, ast.Name):
+            if func.id == "sleep":
+                self.findings.append(fm.finding(
+                    RULE_BLOCKING, call, scope,
+                    f"sleep() while holding {held_desc}"))
+            return
+        if not isinstance(func, ast.Attribute):
+            return
+        attr = func.attr
+        recv = func.value
+        recv_t = project.resolve_type(recv, ci, local_types)
+        owner = project.classes.get(recv_t) if recv_t else None
+        recv_attr = recv.attr if isinstance(recv, ast.Attribute) else None
+
+        if attr == "sleep" and attr_chain(func) in ("time.sleep",):
+            self.findings.append(fm.finding(
+                RULE_BLOCKING, call, scope,
+                f"time.sleep while holding {held_desc}"))
+        elif attr == "result":
+            self.findings.append(fm.finding(
+                RULE_BLOCKING, call, scope,
+                f"Future.result() while holding {held_desc} — the worker "
+                f"that completes it may need the same lock"))
+        elif attr == "add_done_callback":
+            self.findings.append(fm.finding(
+                RULE_CALLBACK, call, scope,
+                f"add_done_callback while holding {held_desc}: a finished "
+                f"future runs the callback inline on this thread (PR 9 "
+                f"deadlock class) — register it after releasing"))
+        elif attr in ("wait", "wait_for"):
+            backing = None
+            base_t = project.resolve_type(recv, ci, local_types)
+            base_owner = project.classes.get(base_t) if base_t else None
+            if base_owner is None and isinstance(recv, ast.Attribute):
+                inner_t = project.resolve_type(recv.value, ci, local_types)
+                base_owner = project.classes.get(inner_t) if inner_t else None
+                if base_owner is not None \
+                        and recv.attr in base_owner.cond_attrs:
+                    b = base_owner.cond_attrs[recv.attr]
+                    if b:
+                        backing = base_owner.lock_node(b)
+            if backing is not None and backing in held_ids:
+                return          # Condition.wait on the held lock: legal
+            what = ("a condition backed by a DIFFERENT lock" if backing
+                    else "an event or foreign condition")
+            self.findings.append(fm.finding(
+                RULE_BLOCKING, call, scope,
+                f".{attr}() on {what} while holding {held_desc}"))
+        elif attr in ("get", "put"):
+            is_queue = (owner is None and isinstance(recv, ast.Attribute)
+                        and self._queue_attr(ci, recv, local_types))
+            if is_queue and not _is_false(_kwarg(call, "block")):
+                self.findings.append(fm.finding(
+                    RULE_BLOCKING, call, scope,
+                    f"blocking Queue.{attr} while holding {held_desc}"))
+        elif attr == "join":
+            if self._thread_recv(ci, recv, local_types):
+                self.findings.append(fm.finding(
+                    RULE_BLOCKING, call, scope,
+                    f"Thread.join while holding {held_desc}"))
+        elif attr == "shutdown":
+            if self._executor_recv(ci, recv, local_types) \
+                    and not _is_false(_kwarg(call, "wait")):
+                self.findings.append(fm.finding(
+                    RULE_BLOCKING, call, scope,
+                    f"executor.shutdown(wait=True) while holding "
+                    f"{held_desc}"))
+        elif attr == "submit":
+            blk = _kwarg(call, "block")
+            if blk is not None and not _is_false(blk):
+                self.findings.append(fm.finding(
+                    RULE_BLOCKING, call, scope,
+                    f"blocking submit while holding {held_desc} — "
+                    f"backpressure waits for a consumer that may need "
+                    f"the lock"))
+        elif attr in ("acquire", "release"):
+            return
+        # one-level call edges into other classes' direct locks
+        if owner is not None and attr in owner.direct_locks:
+            for lid in owner.direct_locks[attr]:
+                for r in held:
+                    if lid != r.lock.node_id:
+                        self.edges.setdefault(
+                            (r.lock.node_id, lid),
+                            (fm.relpath, call.lineno))
+
+    def _queue_attr(self, ci, recv: ast.Attribute, local_types) -> bool:
+        t = self.project.resolve_type(recv.value, ci, local_types)
+        owner = self.project.classes.get(t) if t else None
+        return owner is not None and recv.attr in owner.queue_attrs
+
+    def _thread_recv(self, ci, recv, local_types) -> bool:
+        if isinstance(recv, ast.Attribute):
+            t = self.project.resolve_type(recv.value, ci, local_types)
+            owner = self.project.classes.get(t) if t else None
+            if owner is not None and recv.attr in owner.thread_attrs:
+                return True
+        t = self.project.resolve_type(recv, ci, local_types)
+        return t == "Thread"
+
+    def _executor_recv(self, ci, recv, local_types) -> bool:
+        if isinstance(recv, ast.Attribute):
+            t = self.project.resolve_type(recv.value, ci, local_types)
+            owner = self.project.classes.get(t) if t else None
+            if owner is not None and recv.attr in owner.executor_attrs:
+                return True
+        t = self.project.resolve_type(recv, ci, local_types)
+        return t in ("ThreadPoolExecutor", "ProcessPoolExecutor")
+
+    # -- cross-module cycle detection -------------------------------------
+    def _check_cycles(self) -> None:
+        adj: dict[str, set[str]] = {}
+        for (src, dst) in self.edges:
+            adj.setdefault(src, set()).add(dst)
+            adj.setdefault(dst, set())
+        for scc in _tarjan(adj):
+            if len(scc) < 2:
+                continue
+            cyc = sorted(scc)
+            # anchor at the lexicographically largest in-SCC edge — the
+            # "back edge" closing the cycle — for a deterministic site
+            in_scc = [(s, d) for (s, d) in self.edges
+                      if s in scc and d in scc]
+            anchor = max(in_scc)
+            path, line = self.edges[anchor]
+            self.findings.append(Finding(
+                rule=RULE_CYCLE, path=path, line=line,
+                scope="lock-graph",
+                message=(f"lock-order cycle: {' -> '.join(cyc)} -> "
+                         f"{cyc[0]} (acquisition orders conflict across "
+                         f"call paths)"),
+                source=self._line_at(path, line)))
+
+    def _line_at(self, relpath: str, line: int) -> str:
+        for fm in self.project.files:
+            if fm.relpath == relpath:
+                return fm.line_text(line)
+        return ""
+
+
+def _at(lineno: int):
+    node = ast.Pass()
+    node.lineno = lineno
+    return node
+
+
+def _tarjan(adj: dict[str, set[str]]) -> list[set[str]]:
+    index: dict[str, int] = {}
+    low: dict[str, int] = {}
+    on_stack: set[str] = set()
+    stack: list[str] = []
+    sccs: list[set[str]] = []
+    counter = [0]
+
+    def strongconnect(v: str) -> None:
+        work = [(v, iter(sorted(adj.get(v, ()))))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(sorted(adj.get(w, ())))))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                scc: set[str] = set()
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    scc.add(w)
+                    if w == node:
+                        break
+                sccs.append(scc)
+
+    for v in sorted(adj):
+        if v not in index:
+            strongconnect(v)
+    return sccs
+
+
+def check(project: Project) -> tuple[list[Finding], LockChecker]:
+    lc = LockChecker(project)
+    return lc.run(), lc

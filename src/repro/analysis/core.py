@@ -1,0 +1,154 @@
+"""Shared lint plumbing: findings, inline waivers, and the baseline.
+
+A :class:`Finding` is keyed by ``rule | relpath | scope | normalized
+source line`` — deliberately NOT by line number, so the baseline
+survives unrelated edits above a finding.  Two suppression mechanisms:
+
+* inline waiver — ``# lint: waive[rule-id] reason`` on the offending
+  line (or alone on the line above); ``waive[*]`` waives every rule.
+  ``# lint: bounded-by(reason)`` is the bounded-memory rule's waiver:
+  it asserts the buffer is bounded by construction and says why.
+* baseline — ``analysis/baseline.json`` holds keys of known findings;
+  the CI gate is zero NEW findings, so the baseline ships empty or
+  near-empty and anything in it is a documented debt, not a dumping
+  ground.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Optional
+
+WAIVE_RE = re.compile(r"#\s*lint:\s*waive\[([*\w\-, ]+)\]\s*(.*)")
+BOUNDED_RE = re.compile(r"#\s*lint:\s*bounded-by\(([^)]*)\)")
+EXPECT_RE = re.compile(r"#\s*expect:\s*([\w\-, ]+)")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str                 # repo-relative path
+    line: int
+    scope: str                # "Class.method" / "module" / function name
+    message: str
+    source: str = ""          # stripped offending source line
+
+    @property
+    def key(self) -> str:
+        norm = " ".join(self.source.split())
+        return f"{self.rule}|{self.path}|{self.scope}|{norm}"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+                + (f"\n    {self.source.strip()}" if self.source else ""))
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FileModel:
+    """One parsed source file plus its comment-level lint directives."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # line -> set of waived rule ids ('*' = all)
+        self.waivers: dict[int, set[str]] = {}
+        # line -> bounded-by reason (bounded-memory waiver)
+        self.bounded: dict[int, str] = {}
+        # line -> expected rule ids (fixture corpus self-test)
+        self.expects: dict[int, set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = WAIVE_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                target = i
+                if text.lstrip().startswith("#"):
+                    target = i + 1      # comment-only line waives the next
+                self.waivers.setdefault(target, set()).update(rules)
+            m = BOUNDED_RE.search(text)
+            if m:
+                target = i
+                if text.lstrip().startswith("#"):
+                    target = i + 1
+                self.bounded[target] = m.group(1).strip()
+            m = EXPECT_RE.search(text)
+            if m:
+                self.expects[i] = {r.strip() for r in m.group(1).split(",")
+                                   if r.strip()}
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def waived(self, finding: Finding) -> bool:
+        rules = self.waivers.get(finding.line, ())
+        return "*" in rules or finding.rule in rules
+
+    def finding(self, rule: str, node: ast.AST, scope: str,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        return Finding(rule=rule, path=self.relpath, line=line, scope=scope,
+                       message=message, source=self.line_text(line))
+
+
+def collect_files(paths: list[str], *, root: str = ".",
+                  include_fixtures: bool = False) -> list[str]:
+    """Expand files/dirs into a sorted list of ``.py`` paths.  The
+    known-bad fixture corpus is excluded unless explicitly requested
+    (``--self-test`` turns it back on)."""
+    out: list[str] = []
+    for p in paths:
+        p = os.path.join(root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    if not include_fixtures:
+        out = [p for p in out
+               if "fixtures" not in os.path.normpath(p).split(os.sep)]
+    seen: set[str] = set()
+    uniq = []
+    for p in out:
+        rp = os.path.realpath(p)
+        if rp not in seen:
+            seen.add(rp)
+            uniq.append(p)
+    return uniq
+
+
+def load_file(path: str, *, root: str = ".") -> Optional[FileModel]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = os.path.relpath(path, root)
+    try:
+        return FileModel(path, rel, source)
+    except SyntaxError:
+        return None
+
+
+def load_baseline(path: str) -> set[str]:
+    if not os.path.exists(path):
+        return set()
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    return set(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: list[Finding]) -> None:
+    keys = sorted({f.key for f in findings})
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump({"version": 1, "findings": keys}, f, indent=2)
+        f.write("\n")

@@ -1,0 +1,15 @@
+"""Known-bad fixture corpus for the analyzer's self-test.
+
+Each module reproduces one defect class the linter exists to catch —
+``bad_callback_under_lock`` is the PR 9 poller deadlock, verbatim in
+shape.  Offending lines carry ``expect: <rule-id>`` comment annotations;
+``python -m repro.analysis.lint --self-test`` requires the produced
+findings to match them exactly (both directions), and
+``tests/test_analysis.py`` additionally runs the lock fixtures under
+the runtime :mod:`~repro.analysis.lockcheck` to prove static findings
+and runtime evidence agree.
+
+These files are EXCLUDED from normal lint scans (any path containing
+a ``fixtures`` component is skipped) and are never imported by
+serving code.
+"""

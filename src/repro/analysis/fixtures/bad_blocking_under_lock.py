@@ -1,0 +1,24 @@
+"""Blocking calls inside a lock's critical section: the sleep stalls
+every thread contending for the lock, the queue get can wait on a
+producer that needs the same lock, and the event wait parks the
+holder until a setter that may be behind the lock runs."""
+import queue
+import threading
+import time
+
+
+class BlockingUnderLock:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._q = queue.Queue()
+        self._ready = threading.Event()
+
+    def drain_one(self):
+        with self._lock:
+            time.sleep(0.01)  # expect: lock-blocking-call
+            item = self._q.get(timeout=1.0)  # expect: lock-blocking-call
+        return item
+
+    def sync(self):
+        with self._lock:
+            self._ready.wait(1.0)  # expect: lock-blocking-call

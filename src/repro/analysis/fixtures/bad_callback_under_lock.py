@@ -1,0 +1,37 @@
+"""The PR 9 deadlock, reproduced: a future's completion callback is
+registered while the submitting thread holds the lock the callback
+itself needs.  ``concurrent.futures`` runs the callback INLINE on the
+registering thread when the future is already finished — with a
+non-reentrant Lock held, ``_done``'s ``with self._lock:`` never
+returns and the poller wedges on one core.
+
+The fix shape lives in ``obs/quality.py`` (and the ``good_clean``
+fixture): submit and bookkeep under the lock, register the callback
+after releasing.
+"""
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+
+class ShadowAuditor:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._exec = ThreadPoolExecutor(max_workers=1)
+        self._futures = set()
+
+    def submit_audit(self, fn, *args):
+        with self._lock:
+            fut = self._exec.submit(fn, *args)
+            self._futures.add(fut)
+            fut.add_done_callback(self._done)  # expect: lock-callback-under-lock
+        return fut
+
+    def wait_all(self):
+        with self._lock:
+            for fut in list(self._futures):
+                fut.result()  # expect: lock-blocking-call
+            self._futures.clear()
+
+    def _done(self, fut):
+        with self._lock:
+            self._futures.discard(fut)

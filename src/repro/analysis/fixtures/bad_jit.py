@@ -1,0 +1,30 @@
+"""jit hazards: host syncs and Python branches on traced values
+inside a jitted function and a Pallas kernel.  Never imported — the
+linter parses, it does not execute."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_host_sync(scores, k):
+    if scores.ndim > 2:  # static shape projection: fine
+        scores = jnp.reshape(scores, (-1, scores.shape[-1]))
+    peak = jnp.max(scores).item()  # expect: jit-host-sync
+    scale = float(scores[0, 0])  # expect: jit-host-sync
+    host = np.asarray(scores)  # expect: jit-host-sync
+    if scores > 0:  # expect: jit-python-branch
+        host = host + scale
+    return jnp.argsort(scores)[..., :k], peak, host
+
+
+def _bad_kernel(x_ref, o_ref):
+    if x_ref:  # expect: jit-python-branch
+        o_ref[...] = x_ref[...] * 2.0
+
+
+def launch(x):
+    import jax.experimental.pallas as pl
+    return pl.pallas_call(_bad_kernel, out_shape=x)(x)

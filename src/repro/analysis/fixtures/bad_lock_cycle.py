@@ -1,0 +1,29 @@
+"""Conflicting acquisition orders: ``forward`` takes A then B,
+``backward`` takes B then A.  Two threads each half-way through is a
+deadlock; the static lock graph has the cycle A -> B -> A whether or
+not any test ever hits the interleaving.  ``double`` re-enters a
+non-reentrant Lock on the same thread — a guaranteed self-deadlock.
+"""
+import threading
+
+
+class LockCycle:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.hits = 0
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                self.hits += 1
+
+    def backward(self):
+        with self._b:
+            with self._a:  # expect: lock-order-cycle
+                self.hits -= 1
+
+    def double(self):
+        with self._a:
+            with self._a:  # expect: lock-order-cycle
+                return self.hits

@@ -1,0 +1,14 @@
+"""The grow-forever buffer class PR 7 eradicated: a serving-daemon
+object that accretes one entry per request with no ring trim, no
+``deque(maxlen)``, and no ``bounded-by`` justification — memory scales
+with uptime."""
+
+
+class GrowForever:
+    def __init__(self):
+        self.log = []
+        self.seen = 0
+
+    def record(self, item):
+        self.seen += 1
+        self.log.append(item)  # expect: unbounded-growth

@@ -1,0 +1,23 @@
+"""Determinism violations: module-global RNG state (np + stdlib), an
+unseeded generator, and a clock-derived seed — each makes a reported
+recall/latency number unreproducible."""
+import random
+import time
+
+import numpy as np
+
+
+def sample_noise(n):
+    return np.random.normal(size=n)  # expect: global-rng
+
+
+def fresh_stream():
+    return np.random.default_rng()  # expect: unseeded-rng
+
+
+def clock_stream():
+    return np.random.default_rng(time.time_ns())  # expect: clock-seed
+
+
+def pick(items):
+    return random.choice(items)  # expect: global-rng

@@ -1,0 +1,38 @@
+"""The legal twins of every bad fixture — zero findings expected.
+Submit-under-lock with the callback registered AFTER release (the PR 9
+fix shape from ``obs/quality.py``), ``Condition.wait_for`` on the lock
+it is backed by, a ``deque(maxlen)`` buffer, and a seeded generator.
+"""
+import collections
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+
+class CleanAuditor:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._exec = ThreadPoolExecutor(max_workers=1)
+        self._pending = collections.deque(maxlen=64)
+        self._rng = np.random.default_rng(7)
+
+    def submit_audit(self, fn):
+        with self._lock:
+            fut = self._exec.submit(fn)
+            self._pending.append(fut)
+        fut.add_done_callback(self._done)  # outside the lock: legal
+        return fut
+
+    def _done(self, fut):
+        with self._lock:
+            self._cv.notify_all()
+
+    def wait_done(self, timeout=1.0):
+        with self._cv:
+            # waiting on the condition backed by the held lock: legal
+            return self._cv.wait_for(lambda: not self._pending, timeout)
+
+    def sample(self, n):
+        return self._rng.normal(size=n)

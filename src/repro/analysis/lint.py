@@ -1,0 +1,162 @@
+"""CLI: ``python -m repro.analysis.lint src/ tests/``.
+
+Exit status is the CI gate: 0 when every finding is either waived
+inline or present in the checked-in baseline, 1 otherwise.  Modes:
+
+* default — scan the given paths (fixtures excluded), print new
+  findings, exit non-zero if any.
+* ``--json PATH`` — also dump the full findings report (new, waived,
+  and baselined, each tagged) for the CI artifact.
+* ``--write-baseline`` — rewrite the baseline from the current scan
+  (for intentional debt; keep it near-empty).
+* ``--self-test`` — scan ONLY the known-bad fixture corpus and
+  require the produced findings to match the ``# expect: rule-id``
+  annotations exactly, both directions (a missed expectation or an
+  unexpected finding fails).  This pins the analyzer's behavior: the
+  fixtures are the regression corpus for the PR 9 deadlock class and
+  friends.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from . import check_bounded, check_determinism, check_jit, check_locks
+from .core import (
+    Finding, collect_files, load_baseline, load_file, save_baseline,
+)
+from .project import Project
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+FIXTURES_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def run_checkers(files: list) -> list[Finding]:
+    project = Project(files)
+    findings: list[Finding] = []
+    lock_findings, _ = check_locks.check(project)
+    findings.extend(lock_findings)
+    findings.extend(check_bounded.check(project))
+    findings.extend(check_determinism.check(project))
+    findings.extend(check_jit.check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def scan(paths: list[str], *, root: str = ".",
+         include_fixtures: bool = False):
+    """-> (all findings, file models) for ``paths``."""
+    models = []
+    for p in collect_files(paths, root=root,
+                           include_fixtures=include_fixtures):
+        fm = load_file(p, root=root)
+        if fm is not None:
+            models.append(fm)
+    return run_checkers(models), models
+
+
+def split_findings(findings: list[Finding], models: list,
+                   baseline: set[str]):
+    by_path = {fm.relpath: fm for fm in models}
+    new, waived, baselined = [], [], []
+    for f in findings:
+        fm = by_path.get(f.path)
+        if fm is not None and fm.waived(f):
+            waived.append(f)
+        elif f.key in baseline:
+            baselined.append(f)
+        else:
+            new.append(f)
+    return new, waived, baselined
+
+
+def self_test() -> int:
+    """Fixture-corpus agreement check (see module doc)."""
+    findings, models = scan([FIXTURES_DIR], include_fixtures=True)
+    got: dict[tuple[str, int], set[str]] = {}
+    for f in findings:
+        got.setdefault((f.path, f.line), set()).add(f.rule)
+    want: dict[tuple[str, int], set[str]] = {}
+    for fm in models:
+        for line, rules in fm.expects.items():
+            want[(fm.relpath, line)] = set(rules)
+    ok = True
+    for key in sorted(set(want) | set(got)):
+        w, g = want.get(key, set()), got.get(key, set())
+        if w != g:
+            ok = False
+            path, line = key
+            print(f"SELF-TEST MISMATCH {path}:{line}: "
+                  f"expected {sorted(w) or '[]'}, got {sorted(g) or '[]'}")
+    n_expected = sum(len(v) for v in want.values())
+    if ok:
+        print(f"self-test OK: {len(models)} fixture files, "
+              f"{n_expected} expected findings, all matched exactly")
+        return 0
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro static analysis: lock discipline, bounded "
+                    "memory, determinism, jit hazards "
+                    "(rules: docs/invariants.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/dirs to scan (default: src tests)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: analysis/baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report ALL unwaived)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from this scan's unwaived "
+                         "findings")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the full findings report to this path")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the known-bad fixture corpus produces "
+                         "exactly its annotated findings")
+    ap.add_argument("--fixtures", action="store_true",
+                    help="include the known-bad fixture corpus in the scan "
+                         "(excluded by default)")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+
+    paths = args.paths or ["src", "tests"]
+    findings, models = scan(paths, include_fixtures=args.fixtures)
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    new, waived, baselined = split_findings(findings, models, baseline)
+
+    if args.write_baseline:
+        save_baseline(args.baseline, new + baselined)
+        print(f"baseline written: {len(new) + len(baselined)} findings "
+              f"-> {args.baseline}")
+        return 0
+
+    if args.json_out:
+        report = {
+            "paths": paths,
+            "counts": {"new": len(new), "waived": len(waived),
+                       "baselined": len(baselined)},
+            "new": [f.asdict() for f in new],
+            "waived": [f.asdict() for f in waived],
+            "baselined": [f.asdict() for f in baselined],
+        }
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+
+    for f in new:
+        print(f.render())
+    n_files = len(models)
+    print(f"[lint] {n_files} files: {len(new)} new, {len(waived)} waived, "
+          f"{len(baselined)} baselined")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

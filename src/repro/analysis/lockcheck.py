@@ -1,0 +1,299 @@
+"""Runtime lock-order checker — the dynamic half of the lock rules.
+
+The static pass (:mod:`check_locks`) over-approximates: it sees every
+path the source spells.  This module under-approximates: it records
+what actually happened.  The two must agree on the known-bad fixture
+corpus (the PR 9 ``add_done_callback``-under-lock deadlock is flagged
+statically AND caught here in the same test run), and the concurrency
+suites run under it to certify the REAL interleavings stayed clean.
+
+While installed (see the ``lockcheck`` conftest fixture):
+
+* ``threading.Lock`` / ``threading.RLock`` constructed from ``repro.*``
+  code return instrumented wrappers named after their creation site
+  (``repro.runtime.engine:113``) — one node per construction site, so
+  every instance of a class shares a node and the graph expresses
+  class-level lock ORDER, which is what deadlock-freedom is about.
+* each thread keeps a held-stack; acquiring B with A on top records
+  the edge A -> B.  :meth:`LockCheck.assert_acyclic` (called at
+  fixture teardown) fails the test if the recorded order graph has a
+  cycle — two threads that each saw half of a conflicting order are
+  enough, no actual deadlock required.
+* ``ThreadPoolExecutor.submit`` and ``Future.add_done_callback``
+  called from ``repro.*`` with any lock held are recorded as
+  held-across events (``submit`` is risk evidence; ``add_done_callback``
+  is the PR 9 self-deadlock class and fails teardown by default).
+
+Locks created BEFORE ``install()`` are invisible — build the objects
+under test inside the instrumented window.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import sys
+import threading
+from typing import Optional
+
+
+def _caller_module(depth: int = 2) -> str:
+    try:
+        frame = sys._getframe(depth)
+    except ValueError:
+        return ""
+    return frame.f_globals.get("__name__", "") or ""
+
+
+def _caller_site(depth: int = 2) -> str:
+    try:
+        frame = sys._getframe(depth)
+    except ValueError:
+        return "?:0"
+    mod = frame.f_globals.get("__name__", "?")
+    return f"{mod}:{frame.f_lineno}"
+
+
+class CheckedLock:
+    """Wraps a real lock; reports acquisition order to the registry.
+
+    Drop-in for Lock/RLock including use as a Condition's backing lock
+    (Condition's ``_is_owned`` fallback of ``acquire(0)``/``release``
+    round-trips through us consistently)."""
+
+    def __init__(self, check: "LockCheck", name: str, inner,
+                 reentrant: bool):
+        self._check = check
+        self._name = name
+        self._inner = inner
+        self._reentrant = reentrant
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._check._note_acquire(self._name, self._reentrant)
+        return got
+
+    def release(self):
+        self._check._note_release(self._name)
+        self._inner.release()
+
+    def locked(self):
+        return self._inner.locked()
+
+    # Condition-backing compatibility: threading.Condition grabs these
+    # off its lock when present; delegating keeps RLock recursion
+    # counts correct across wait() while still reporting to the check.
+    def _is_owned(self):
+        if hasattr(self._inner, "_is_owned"):
+            return self._inner._is_owned()
+        if self._inner.acquire(False):
+            self._inner.release()
+            return False
+        return True
+
+    def _release_save(self):
+        self._check._note_release(self._name)
+        if hasattr(self._inner, "_release_save"):
+            return self._inner._release_save()
+        self._inner.release()
+        return None
+
+    def _acquire_restore(self, state):
+        if hasattr(self._inner, "_acquire_restore"):
+            self._inner._acquire_restore(state)
+        else:
+            self._inner.acquire()
+        self._check._note_acquire(self._name, self._reentrant)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def __repr__(self):
+        return f"<CheckedLock {self._name} wrapping {self._inner!r}>"
+
+
+class LockCheck:
+    """Recorder + installer.  One instance per instrumented window."""
+
+    def __init__(self):
+        self._mu = threading.Lock()     # guards the shared records
+        self._tls = threading.local()
+        # (src_name, dst_name) -> first-sighting description
+        self.edges: dict[tuple[str, str], str] = {}
+        self.reentrant: set[str] = set()
+        self.acquisitions = 0
+        # (kind, held lock names, call site, thread name)
+        self.held_across: list[tuple[str, tuple[str, ...], str, str]] = []
+        self.wrapped = 0
+        self._installed = False
+        self._orig: dict = {}
+
+    # -- per-thread stack --------------------------------------------------
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def held(self) -> tuple:
+        return tuple(self._stack())
+
+    def _note_acquire(self, name: str, reentrant: bool) -> None:
+        stack = self._stack()
+        top = stack[-1] if stack else None
+        stack.append(name)
+        with self._mu:
+            self.acquisitions += 1
+            if reentrant:
+                self.reentrant.add(name)
+            if top is not None and top != name:
+                self.edges.setdefault(
+                    (top, name),
+                    f"{threading.current_thread().name}")
+
+    def _note_release(self, name: str) -> None:
+        stack = self._stack()
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == name:
+                del stack[i]
+                return
+
+    def _note_event(self, kind: str) -> None:
+        stack = self._stack()
+        if not stack:
+            return
+        if not _caller_module(3).startswith(("repro.", "tests",
+                                             "test_")):
+            return
+        with self._mu:
+            self.held_across.append(
+                (kind, tuple(stack), _caller_site(3),
+                 threading.current_thread().name))
+
+    # -- install / uninstall ----------------------------------------------
+    def install(self) -> "LockCheck":
+        assert not self._installed, "LockCheck already installed"
+        self._installed = True
+        check = self
+        orig_lock = threading.Lock
+        orig_rlock = threading.RLock
+        orig_submit = concurrent.futures.ThreadPoolExecutor.submit
+        orig_adc = concurrent.futures.Future.add_done_callback
+        self._orig = {"Lock": orig_lock, "RLock": orig_rlock,
+                      "submit": orig_submit, "add_done_callback": orig_adc}
+
+        def make_lock(*a, **k):
+            inner = orig_lock(*a, **k)
+            if _caller_module(2).startswith("repro."):
+                check.wrapped += 1
+                return CheckedLock(check, _caller_site(2), inner,
+                                   reentrant=False)
+            return inner
+
+        def make_rlock(*a, **k):
+            inner = orig_rlock(*a, **k)
+            if _caller_module(2).startswith("repro."):
+                check.wrapped += 1
+                return CheckedLock(check, _caller_site(2), inner,
+                                   reentrant=True)
+            return inner
+
+        def submit(executor, fn, /, *a, **k):
+            check._note_event("submit")
+            return orig_submit(executor, fn, *a, **k)
+
+        def add_done_callback(future, cb):
+            check._note_event("add_done_callback")
+            return orig_adc(future, cb)
+
+        threading.Lock = make_lock
+        threading.RLock = make_rlock
+        concurrent.futures.ThreadPoolExecutor.submit = submit
+        concurrent.futures.Future.add_done_callback = add_done_callback
+        return self
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        self._installed = False
+        threading.Lock = self._orig["Lock"]
+        threading.RLock = self._orig["RLock"]
+        concurrent.futures.ThreadPoolExecutor.submit = self._orig["submit"]
+        concurrent.futures.Future.add_done_callback = \
+            self._orig["add_done_callback"]
+
+    def __enter__(self):
+        return self.install()
+
+    def __exit__(self, *exc):
+        self.uninstall()
+        return False
+
+    # -- verdicts ----------------------------------------------------------
+    def find_cycle(self) -> Optional[list[str]]:
+        """A lock-order cycle in the recorded graph, or None."""
+        adj: dict[str, set[str]] = {}
+        for (src, dst) in self.edges:
+            adj.setdefault(src, set()).add(dst)
+            adj.setdefault(dst, set())
+        WHITE, GREY, BLACK = 0, 1, 2
+        color = {v: WHITE for v in adj}
+        parent: dict[str, Optional[str]] = {}
+
+        for root in sorted(adj):
+            if color[root] != WHITE:
+                continue
+            stack = [(root, iter(sorted(adj[root])))]
+            color[root] = GREY
+            parent[root] = None
+            while stack:
+                v, it = stack[-1]
+                for w in it:
+                    if color[w] == WHITE:
+                        color[w] = GREY
+                        parent[w] = v
+                        stack.append((w, iter(sorted(adj[w]))))
+                        break
+                    if color[w] == GREY:
+                        cyc = [w]
+                        node = v
+                        while node is not None and node != w:
+                            cyc.append(node)
+                            node = parent[node]
+                        cyc.reverse()
+                        return cyc
+                else:
+                    color[v] = BLACK
+                    stack.pop()
+        return None
+
+    def callbacks_under_lock(self) -> list:
+        return [e for e in self.held_across if e[0] == "add_done_callback"]
+
+    def submits_under_lock(self) -> list:
+        return [e for e in self.held_across if e[0] == "submit"]
+
+    def assert_acyclic(self) -> None:
+        cyc = self.find_cycle()
+        assert cyc is None, (
+            f"lock-order cycle observed at runtime: {' -> '.join(cyc)} -> "
+            f"{cyc[0]} (edges: {sorted(self.edges)})")
+
+    def verify(self, *, allow_submit_under_lock: bool = True) -> None:
+        """Teardown verdict: acyclic order graph, and no callback
+        registered with a lock held (the PR 9 class).  Submit-under-
+        lock is risk evidence, not a deadlock by itself — opt in to
+        strictness via ``allow_submit_under_lock=False``."""
+        self.assert_acyclic()
+        bad = self.callbacks_under_lock()
+        assert not bad, (
+            f"add_done_callback with lock(s) held — a finished future "
+            f"runs the callback inline on the registering thread "
+            f"(PR 9 deadlock class): {bad}")
+        if not allow_submit_under_lock:
+            subs = self.submits_under_lock()
+            assert not subs, f"executor.submit with lock(s) held: {subs}"

@@ -1,0 +1,289 @@
+"""Cross-module project model for the concurrency checkers.
+
+The lock checker needs more than one file's AST: ``RebuildScheduler``
+holds ``LiveFreshState.lock`` while calling into ``VersionManager``,
+and whether THAT is safe depends on what ``VersionManager.swap``
+acquires.  This module builds a registry of every class in the scanned
+fileset — which attributes are locks / conditions / events / queues /
+executors / threads / unbounded lists, and (via ``__init__`` parameter
+annotations and ``self.x = ClassName(...)`` assignments) which
+attributes hold instances of which other classes — so checkers can
+resolve ``st.lock`` through ``st = self.lane.state`` to
+``LiveFreshState.lock`` and build the static lock graph across
+modules.
+
+Resolution is deliberately conservative: an attribute chain that does
+not resolve becomes an opaque per-class node, which can only MISS
+edges, never invent a false cycle between real locks.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Optional
+
+from .core import FileModel
+
+LOCKISH_ATTR = re.compile(r"^_?\w*lock$")
+QUEUE_TYPES = {"Queue", "SimpleQueue", "LifoQueue", "PriorityQueue"}
+EXECUTOR_TYPES = {"ThreadPoolExecutor", "ProcessPoolExecutor"}
+
+
+def call_name(node: ast.AST) -> Optional[str]:
+    """Terminal name of a Call's func: ``threading.RLock`` -> RLock."""
+    if isinstance(node, ast.Call):
+        node = node.func
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """``self._lane.state.lock`` -> "self._lane.state.lock" (dotted
+    Name/Attribute chains only; anything else is None)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def annotation_name(node: Optional[ast.AST]) -> Optional[str]:
+    """Terminal class name of a simple annotation (handles Optional[X]
+    / "X" string forms shallowly)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value.split("[")[-1].rstrip("]").split(".")[-1] or None
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Subscript):  # Optional[X] -> X
+        sl = node.slice
+        if isinstance(sl, ast.Tuple) and sl.elts:
+            return annotation_name(sl.elts[0])
+        return annotation_name(sl)
+    return None
+
+
+class ClassInfo:
+    def __init__(self, name: str, fm: FileModel, node: ast.ClassDef):
+        self.name = name
+        self.file = fm
+        self.node = node
+        self.lock_attrs: dict[str, str] = {}      # attr -> "lock"|"rlock"
+        self.cond_attrs: dict[str, Optional[str]] = {}  # attr -> backing
+        self.event_attrs: set[str] = set()
+        self.queue_attrs: set[str] = set()
+        self.executor_attrs: set[str] = set()
+        self.thread_attrs: set[str] = set()
+        self.attr_types: dict[str, str] = {}      # attr -> class name
+        self.list_attrs: dict[str, int] = {}      # attr -> init lineno
+        self.bounded_attrs: set[str] = set()
+        self.trimmed_attrs: set[str] = set()
+        self.methods: dict[str, ast.FunctionDef] = {}
+        # method -> set of lock node ids it acquires directly
+        self.direct_locks: dict[str, set[str]] = {}
+
+    def lock_node(self, attr: str) -> str:
+        return f"{self.name}.{attr}"
+
+
+class Project:
+    """Registry of every class across the scanned files."""
+
+    def __init__(self, files: list[FileModel]):
+        self.files = files
+        self.classes: dict[str, ClassInfo] = {}   # by class name
+        for fm in files:
+            for node in ast.walk(fm.tree):
+                if isinstance(node, ast.ClassDef):
+                    self._collect(fm, node)
+        for ci in self.classes.values():
+            self._collect_direct_locks(ci)
+
+    # -- class harvesting --------------------------------------------------
+    def _collect(self, fm: FileModel, node: ast.ClassDef) -> None:
+        ci = ClassInfo(node.name, fm, node)
+        # first collector wins on name collisions (names are unique in
+        # this repo; a collision would only blur cross-class resolution)
+        self.classes.setdefault(node.name, ci)
+        is_dataclass = any("dataclass" in (ast.unparse(d) if d else "")
+                           for d in node.decorator_list)
+        for stmt in node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                ci.methods[stmt.name] = stmt
+            elif is_dataclass and isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                self._classify_attr(ci, stmt.target.id, stmt.value,
+                                    stmt.lineno, param_ann=None)
+        for mname, fn in ci.methods.items():
+            ann = {a.arg: annotation_name(a.annotation)
+                   for a in fn.args.args + fn.args.kwonlyargs}
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                    tgt = sub.targets[0]
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        self._classify_attr(ci, tgt.attr, sub.value,
+                                            sub.lineno, param_ann=ann)
+                elif isinstance(sub, ast.AnnAssign) and sub.value is not None:
+                    tgt = sub.target
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        self._classify_attr(ci, tgt.attr, sub.value,
+                                            sub.lineno, param_ann=ann)
+            self._collect_trims(ci, fn)
+        # an attr both init'd unbounded and visibly trimmed is bounded
+        for attr in list(ci.list_attrs):
+            if attr in ci.trimmed_attrs or attr in ci.bounded_attrs:
+                ci.list_attrs.pop(attr, None)
+                ci.bounded_attrs.add(attr)
+
+    def _classify_attr(self, ci: ClassInfo, attr: str, value: ast.AST,
+                       lineno: int, param_ann: Optional[dict]) -> None:
+        if value is None:
+            return
+        bounded_here = lineno in ci.file.bounded
+        if isinstance(value, ast.List) and not value.elts:
+            if bounded_here:
+                ci.bounded_attrs.add(attr)
+            else:
+                ci.list_attrs[attr] = lineno
+            return
+        if isinstance(value, ast.Name) and param_ann:
+            t = param_ann.get(value.id)
+            if t:
+                ci.attr_types.setdefault(attr, t)
+            return
+        if not isinstance(value, ast.Call):
+            return
+        name = call_name(value)
+        kwargs = {k.arg for k in value.keywords}
+        if name in ("Lock", "RLock") and self._is_threading(value.func):
+            ci.lock_attrs[attr] = "rlock" if name == "RLock" else "lock"
+        elif name == "Condition":
+            backing = None
+            if value.args:
+                ch = attr_chain(value.args[0])
+                if ch and ch.startswith("self."):
+                    backing = ch.split(".", 1)[1]
+            ci.cond_attrs[attr] = backing
+        elif name == "Event":
+            ci.event_attrs.add(attr)
+        elif name in QUEUE_TYPES:
+            ci.queue_attrs.add(attr)
+        elif name in EXECUTOR_TYPES:
+            ci.executor_attrs.add(attr)
+        elif name == "Thread":
+            ci.thread_attrs.add(attr)
+        elif name in ("list",) and not value.args:
+            if bounded_here:
+                ci.bounded_attrs.add(attr)
+            else:
+                ci.list_attrs[attr] = lineno
+        elif name == "deque":
+            if "maxlen" in kwargs or bounded_here:
+                ci.bounded_attrs.add(attr)
+            else:
+                ci.list_attrs[attr] = lineno
+        elif name == "field":
+            factory = next((k.value for k in value.keywords
+                            if k.arg == "default_factory"), None)
+            fname = call_name(factory) if factory is not None else None
+            if isinstance(factory, ast.Name):
+                fname = factory.id
+            if fname == "list":
+                if bounded_here:
+                    ci.bounded_attrs.add(attr)
+                else:
+                    ci.list_attrs[attr] = lineno
+        elif name and name[0].isupper():
+            ci.attr_types.setdefault(attr, name)
+
+    @staticmethod
+    def _is_threading(func: ast.AST) -> bool:
+        ch = attr_chain(func)
+        return ch in ("threading.Lock", "threading.RLock", "Lock", "RLock",
+                      "_thread.allocate_lock")
+
+    def _collect_trims(self, ci: ClassInfo, fn: ast.FunctionDef) -> None:
+        """A class that visibly shrinks ``self.x`` anywhere bounds it:
+        ``del self.x[...]``, ``.pop/.popleft/.clear/.remove``, slice
+        reassignment (``self.x = self.x[-k:]`` / ``self.x[:] = ...``)."""
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Delete):
+                for t in sub.targets:
+                    if isinstance(t, ast.Subscript):
+                        ch = attr_chain(t.value)
+                        if ch and ch.startswith("self."):
+                            ci.trimmed_attrs.add(ch.split(".", 1)[1])
+            elif isinstance(sub, ast.Call):
+                if isinstance(sub.func, ast.Attribute) and sub.func.attr in (
+                        "pop", "popleft", "clear", "remove"):
+                    ch = attr_chain(sub.func.value)
+                    if ch and ch.startswith("self."):
+                        ci.trimmed_attrs.add(ch.split(".", 1)[1])
+            elif isinstance(sub, ast.Assign):
+                for t in sub.targets:
+                    ch = attr_chain(t) if not isinstance(t, ast.Subscript) \
+                        else attr_chain(t.value)
+                    if not (ch and ch.startswith("self.")):
+                        continue
+                    attr = ch.split(".", 1)[1]
+                    if isinstance(t, ast.Subscript):
+                        ci.trimmed_attrs.add(attr)     # self.x[:] = ...
+                    elif isinstance(sub.value, ast.Subscript):
+                        ci.trimmed_attrs.add(attr)     # self.x = self.x[-k:]
+
+    # -- lock acquisition model -------------------------------------------
+    def _collect_direct_locks(self, ci: ClassInfo) -> None:
+        from .check_locks import direct_lock_ids  # circular-free late import
+        for mname, fn in ci.methods.items():
+            ci.direct_locks[mname] = direct_lock_ids(self, ci, fn)
+
+    # -- type resolution ---------------------------------------------------
+    def resolve_type(self, expr: ast.AST, ci: Optional[ClassInfo],
+                     local_types: dict) -> Optional[str]:
+        """Class name of ``expr``'s value, or None.  Handles ``self``,
+        annotated locals, and attribute chains through the registry
+        (``self.lane.state`` -> UpdateLane -> LiveFreshState)."""
+        if isinstance(expr, ast.Name):
+            if expr.id == "self" and ci is not None:
+                return ci.name
+            return local_types.get(expr.id)
+        if isinstance(expr, ast.Attribute):
+            base = self.resolve_type(expr.value, ci, local_types)
+            if base and base in self.classes:
+                return self.classes[base].attr_types.get(expr.attr)
+            return None
+        if isinstance(expr, ast.Call):
+            name = call_name(expr)
+            if name and name in self.classes:
+                return name
+        return None
+
+    def local_types(self, ci: Optional[ClassInfo],
+                    fn: ast.FunctionDef) -> dict:
+        """Best-effort local-variable class map from parameter
+        annotations and simple ``x = <resolvable>`` assignments."""
+        out: dict[str, str] = {}
+        for a in fn.args.args + fn.args.kwonlyargs:
+            t = annotation_name(a.annotation)
+            if t:
+                out[a.arg] = t
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1 \
+                    and isinstance(sub.targets[0], ast.Name):
+                t = self.resolve_type(sub.value, ci, out)
+                if t:
+                    out[sub.targets[0].id] = t
+        return out

@@ -288,6 +288,7 @@ class _FabricBatch:
         self.deadline = deadline
         self.pending: set = set(int(c) for c in wanted)
         self.lost: set = set()
+        # lint: bounded-by(per-request accumulator, one entry per shard)
         self.cand: list = []                 # [(cand_d, cand_i)]
         self.dispatched_at = 0.0
 
@@ -325,6 +326,7 @@ class FabricStats:
     requeued_tasks: int = 0
     timeouts: int = 0
     partial_queries: int = 0
+    # lint: bounded-by(one entry per shard; _declare_failed de-dups)
     failovers: list = dataclasses.field(default_factory=list)
     # per-shard accumulators (measured on the worker, summed by the router)
     busy_s: Optional[np.ndarray] = None      # (S,) scan seconds per shard
@@ -410,7 +412,9 @@ class ShardedFabric:
         self._reply_event = threading.Event()
         self.stats = FabricStats()
         self.stats.init(self.n_shards)
+        # lint: bounded-by(one node/epoch per shard, fixed at deploy)
         self.nodes = []
+        # lint: bounded-by(one node/epoch per shard, fixed at deploy)
         self.epochs = []
         for s in range(self.n_shards):
             owned = np.nonzero((self.rmap0.replicas == s).any(axis=1))[0]

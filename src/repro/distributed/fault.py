@@ -53,7 +53,9 @@ class FaultInjector:
 
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(np.random.SeedSequence([seed, 23]))
+        # lint: bounded-by(drill schedule, fixed when the test configures it)
         self.events: list[FaultEvent] = []
+        # lint: bounded-by(at most one entry per scheduled event)
         self.log: list[tuple[float, str, int]] = []   # (rel time, kind, shard)
         self._t0: Optional[float] = None
 

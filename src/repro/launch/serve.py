@@ -263,9 +263,21 @@ def finish_quality(args, quality, harvest, slo, registry) -> None:
     quality.close()
 
 
+FABRIC_TIER_ERROR = (
+    "--tier q8 is not supported in fabric mode (--shards > 0): the fabric "
+    "shards f32 postings and has no quantized tier; drop --tier q8 (fabric "
+    "serves f32) or use the single-node pipeline (--shards 0)")
+
+
 def run_fabric(args) -> None:
     """Fabric drill mode (``--shards > 0``): one index served behind the
-    sharded, replicated fabric; optional seeded kill mid-trace."""
+    sharded, replicated fabric; optional seeded kill mid-trace.
+
+    Rejects an explicit ``--tier q8`` outright: silently overriding the
+    operator's tier choice made a drill look like a quantized-serving
+    test when it never was (PR 8 follow-up)."""
+    if getattr(args, "tier", None) == "q8":
+        raise ValueError(FABRIC_TIER_ERROR)
     scfg = SearchConfig(k=10, nprobe_max=16, pruning="llsp", n_ratio=8,
                         use_kernel=not args.no_kernel, fused_topk=True)
     arena = ChunkArena(n_devices=12, device_bytes=1 << 30,
@@ -274,9 +286,6 @@ def run_fabric(args) -> None:
     name = list(PAPER_DATASETS)[0]
     with tempfile.TemporaryDirectory() as root:
         spec = dataclasses.replace(PAPER_DATASETS[name], n=args.n, dim=32)
-        if args.tier == "q8":
-            print("[fabric] note: the fabric shards f32 postings; "
-                  "--tier q8 applies to the single-node pipeline only")
         dep = deploy(arena, name, spec, os.path.join(root, name),
                      args.shards, scfg, tier="f32")
         inj = None
@@ -512,6 +521,19 @@ operator runbook — quality observability (both modes):
     # quality.calibration_err out of the final health snapshot
     serve --indexes 1 --duration 8 --shadow-rate 0.1 \\
           --health-out /tmp/health.json
+
+operator runbook — concurrency & determinism invariants:
+
+  The serving path is one poller thread crossing several locks; the
+  rules that keep it deadlock-free, bounded-memory, and replayable are
+  enforced by the static analysis gate and its runtime lock-order
+  checker:
+
+    PYTHONPATH=src python -m repro.analysis.lint src tests
+
+  Rule catalog, motivating incidents (including the PR 9
+  callback-under-lock deadlock), and the waiver syntax are documented
+  in docs/invariants.md.
 """
 
 
@@ -542,10 +564,12 @@ def main() -> None:
     ap.add_argument("--no-kernel", action="store_true",
                     help="packed-domain jnp oracle instead of the Pallas "
                          "kernel (interpret-mode on CPU)")
-    ap.add_argument("--tier", choices=("q8", "f32"), default="q8",
+    ap.add_argument("--tier", choices=("q8", "f32"), default=None,
                     help="first-pass posting payload: int8-residual hot "
-                         "tier + flash f32 re-rank (default) or the "
-                         "all-f32-resident baseline (see runbook)")
+                         "tier + flash f32 re-rank (single-node default) "
+                         "or the all-f32-resident baseline (see runbook). "
+                         "Fabric mode (--shards > 0) serves f32 and "
+                         "REJECTS an explicit q8")
     ap.add_argument("--no-rerank", action="store_true",
                     help="q8 tier only: skip the flash-tier exact re-rank "
                          "and serve raw quantized distances")
@@ -606,6 +630,8 @@ def main() -> None:
         run_fabric(args)
         return
 
+    if args.tier is None:
+        args.tier = "q8"               # quantized single-node default
     n_shards = 8
     arena = ChunkArena(n_devices=12, device_bytes=1 << 30, chunk_bytes=1 << 20)
     hb = HeartbeatMonitor(n_shards)

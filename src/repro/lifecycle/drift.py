@@ -108,6 +108,30 @@ class DriftMonitor:
             out[live] = mean_norm / np.maximum(scale, 1e-12)
         return out
 
+    def severity(self) -> np.ndarray:
+        """(C,) rebuild-priority score: assign-mass x shift.
+
+        Shift alone mis-ranks: a 0.9 shift on a cluster absorbing 2%
+        of the insert stream matters less than a 0.7 shift on one
+        absorbing half of it.  Weighting by the cluster's share of
+        observed inserts makes the ranking reflect how much of the
+        delta a rebuild would actually re-home — and makes the order
+        deterministic for equal shifts (mass breaks the tie; cluster
+        id breaks exact severity ties, see :meth:`_rank`)."""
+        s = self.shifts()
+        with self._lock:
+            cnt = self._count.copy()
+        total = max(int(cnt.sum()), 1)
+        return s * (cnt.astype(np.float64) / total)
+
+    @staticmethod
+    def _rank(sev: np.ndarray, top: int = 8) -> np.ndarray:
+        """Descending severity; ascending cluster id on exact ties —
+        the same inputs always rank the same way (np.argsort alone is
+        not stable across tied float scores)."""
+        order = np.lexsort((np.arange(sev.shape[0]), -sev))
+        return order[:top]
+
     def advisory(self) -> Optional[str]:
         """Rebuild-advisory reason when drifted clusters exceed the
         policy, else None.  Emits one ``rebuild_advisory`` trace instant
@@ -125,18 +149,24 @@ class DriftMonitor:
                 self._advisory_live = True
                 self.advisories += 1
                 if self.trace is not None:
+                    sev = self.severity()
+                    top = int(self._rank(sev, top=1)[0])
                     self.trace.instant(
                         "rebuild_advisory", track="lifecycle",
                         args={"clusters_drifted": drifted,
-                              "max_shift": round(mx, 4)})
+                              "max_shift": round(mx, 4),
+                              "top_cluster": top,
+                              "top_severity": round(float(sev[top]), 4)})
             return f"drift:{drifted}"
         self._advisory_live = False
         return None
 
     def summary(self) -> dict:
-        """JSON-able rollup for health snapshots."""
+        """JSON-able rollup for health snapshots; ``top`` is ranked by
+        severity (assign-mass x shift), deterministically."""
         s = self.shifts()
-        order = np.argsort(s)[::-1][:8]
+        sev = self.severity()
+        order = self._rank(sev, top=8)
         with self._lock:
             total = int(self._count.sum())
         return {
@@ -147,6 +177,7 @@ class DriftMonitor:
             "threshold": self.shift_threshold,
             "advisories": self.advisories,
             "top": [{"cluster": int(c), "shift": float(s[c]),
+                     "severity": float(sev[c]),
                      "inserts": int(self._count[c])}
                     for c in order if s[c] > 0.0],
         }

@@ -45,6 +45,7 @@ from repro.build.stream import (
 from repro.core.ivf import IVFIndex, build_postings
 
 from .ingest import LiveFreshState, UpdateLane
+from .version import VersionManager
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +217,12 @@ class RebuildScheduler:
     protocol, and the swap ordering.
     """
 
+    # retained report/failure windows: the scheduler is a long-lived
+    # daemon (one rebuild per nightly fold adds up); the full record
+    # lands on the lifecycle trace track, these are the recent window
+    MAX_REPORTS = 64
+    MAX_FAILURES = 64
+
     def __init__(
         self,
         *,
@@ -224,7 +231,7 @@ class RebuildScheduler:
         centroids: np.ndarray,
         workdir: str,
         lane: UpdateLane,
-        versions,
+        versions: "VersionManager",
         make_pipeline: Callable,
         cluster_len: int,
         closure_eps: float = 0.2,
@@ -373,6 +380,7 @@ class RebuildScheduler:
             # the advisory's evidence was just folded into the new epoch
             self.drift.reset()
         self.reports.append(rep)
+        del self.reports[: -self.MAX_REPORTS]
         return rep
 
     def _emit_rebuild_trace(self, rep: RebuildReport, bstats: dict,
@@ -429,6 +437,7 @@ class RebuildScheduler:
                         # would silently stop all future rebuilds while the
                         # delta fills and inserts start bouncing
                         self.failures.append(repr(e))
+                        del self.failures[: -self.MAX_FAILURES]
                         print(f"[rebuild-sched] attempt failed, will retry: "
                               f"{e!r}")
                 self._stop.wait(poll_s)

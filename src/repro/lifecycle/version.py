@@ -104,6 +104,11 @@ class VersionManager:
     else — deploy, swap, retirement — happens here.
     """
 
+    # retained epoch records: a serving daemon swaps epochs for as long
+    # as it lives, so the history is a recent window, not the full run
+    # (the epoch_swap trace instants are the durable record)
+    MAX_HISTORY = 256
+
     def __init__(self, clock=time.monotonic):
         self.clock = clock
         self._epochs: dict[str, Epoch] = {}
@@ -111,6 +116,11 @@ class VersionManager:
         self._eids = itertools.count(1)
         self.history: list[EpochRecord] = []
         self.engine = None
+
+    def _remember(self, record: EpochRecord) -> None:
+        # call with self._lock held
+        self.history.append(record)
+        del self.history[: -self.MAX_HISTORY]
 
     def bind(self, engine) -> "VersionManager":
         """Attach to a ServeEngine: its poller routes through this manager
@@ -134,7 +144,7 @@ class VersionManager:
         with self._lock:
             assert name not in self._epochs, f"{name!r} already deployed"
             self._epochs[name] = ep
-            self.history.append(ep.record)
+            self._remember(ep.record)
         if self.engine is not None:
             self.engine.swap_pipeline(name, pipeline)
         return ep
@@ -161,7 +171,7 @@ class VersionManager:
             old = self._epochs[name]
             self._epochs[name] = new
             new.record.activated_at = self.clock()
-            self.history.append(new.record)
+            self._remember(new.record)
         if self.engine is not None:
             self.engine.swap_pipeline(name, pipeline)
         old.retire()

@@ -72,6 +72,7 @@ class SLOTracker:
         self.metrics = metrics
         self.trace = trace
         self.clock = clock
+        # lint: bounded-by(config-time rule registration, not a hot path)
         self._rules: list[BurnRule] = []
         self._samples: dict[str, deque] = {}
         self.alerts: dict[str, AlertState] = {}

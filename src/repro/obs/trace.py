@@ -77,6 +77,7 @@ class TraceRecorder:
         self.clock = clock
         self._tls = threading.local()
         self._lock = threading.Lock()       # buffer registry + id mint only
+        # lint: bounded-by(one entry per thread; buffers are ring-trimmed)
         self._buffers: list[tuple[str, list, list]] = []  # (thread, buf, drops)
         self._next_id = 1
 

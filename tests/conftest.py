@@ -10,6 +10,28 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def lockcheck():
+    """Runtime lock-order checker for the concurrency suites.
+
+    Locks/RLocks constructed by ``repro.*`` code inside the test body
+    are instrumented; at teardown the recorded acquisition-order graph
+    must be acyclic and no ``add_done_callback`` may have been
+    registered with a lock held (the PR 9 deadlock class) — a
+    violation fails the test even if the run got lucky.  Construct the
+    objects under test INSIDE the test: pre-existing locks (session
+    fixtures) are not visible.
+    """
+    from repro.analysis.lockcheck import LockCheck
+    lc = LockCheck()
+    lc.install()
+    try:
+        yield lc
+    finally:
+        lc.uninstall()
+    lc.verify()
+
+
 @pytest.fixture(scope="session")
 def small_corpus(rng):
     """Clustered vectors + queries shared by the ANNS tests."""

@@ -1,0 +1,585 @@
+"""Static-analysis suite + runtime lock-order checker tests.
+
+Three layers, mirroring the suite's own trust chain:
+
+* rule units — each checker exercised on inline snippets (flag the bad
+  shape, stay quiet on the legal twin);
+* the repo gate — ``src/`` and ``tests/`` must lint clean against the
+  checked-in baseline, the fixture corpus must self-test exactly, and
+  the static lock graph must stay acyclic while still seeing the one
+  real cross-module edge;
+* static/runtime agreement — the PR 9 ``add_done_callback``-under-lock
+  deadlock class is flagged by the AST checker AND caught by the
+  instrumented ``LockCheck`` on the same fixture in the same run, and
+  a seeded multithreaded stress drill (live traffic, update lane,
+  mid-flight rebuild+swap, ``stop(drain=True)``) verifies acyclic.
+"""
+import textwrap
+import threading
+import types
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import check_locks
+from repro.analysis import lint as lint_mod
+from repro.analysis.core import FileModel, load_baseline
+from repro.analysis.lockcheck import LockCheck
+from repro.analysis.project import Project
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _findings(source, relpath="src/repro/runtime/snippet.py"):
+    fm = FileModel(relpath, relpath, textwrap.dedent(source))
+    return lint_mod.run_checkers([fm]), fm
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# -------------------------------------------------------------------------
+# the repo gate: lint-clean, self-test, lock graph
+# -------------------------------------------------------------------------
+def test_repo_lints_clean_against_baseline():
+    findings, models = lint_mod.scan(["src", "tests"], root=str(ROOT))
+    baseline = load_baseline(lint_mod.DEFAULT_BASELINE)
+    new, _, _ = lint_mod.split_findings(findings, models, baseline)
+    assert not new, "new lint findings:\n" + "\n".join(
+        f.render() for f in new)
+
+
+def test_fixture_corpus_self_test_matches_exactly(capsys):
+    assert lint_mod.self_test() == 0
+    out = capsys.readouterr().out
+    assert "self-test OK" in out
+
+
+def test_lint_cli_gates_on_fixtures_and_reports_json(tmp_path):
+    # the known-bad corpus must FAIL the gate when scanned explicitly...
+    bad = str(ROOT / "src" / "repro" / "analysis" / "fixtures" /
+              "bad_unbounded.py")
+    out = tmp_path / "findings.json"
+    rc = lint_mod.main([bad, "--fixtures", "--no-baseline",
+                        "--json", str(out)])
+    assert rc == 1
+    import json
+    payload = json.loads(out.read_text())
+    assert payload["counts"]["new"] == 1
+    assert any(f["rule"] == "unbounded-growth" for f in payload["new"])
+    # ...and the clean twin must pass
+    good = str(ROOT / "src" / "repro" / "analysis" / "fixtures" /
+               "good_clean.py")
+    assert lint_mod.main([good, "--fixtures", "--no-baseline"]) == 0
+
+
+def test_static_lock_graph_acyclic_with_real_cross_module_edge():
+    """The rebuild swap path (LiveFreshState.lock -> VersionManager._lock)
+    is the one real cross-module edge; the graph must see it and must
+    stay acyclic."""
+    _, models = lint_mod.scan(["src"], root=str(ROOT))
+    project = Project(models)
+    lock_findings, checker = check_locks.check(project)
+    assert not [f for f in lock_findings if f.rule == "lock-order-cycle"], \
+        [f.render() for f in lock_findings]
+    assert ("LiveFreshState.lock", "VersionManager._lock") in checker.edges
+
+
+# -------------------------------------------------------------------------
+# rule units: lock discipline
+# -------------------------------------------------------------------------
+def test_lock_rule_flags_sleep_under_lock_not_after():
+    findings, _ = _findings("""
+        import threading
+        import time
+
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def bad(self):
+                with self._lock:
+                    time.sleep(0.1)
+
+            def good(self):
+                with self._lock:
+                    x = 1
+                time.sleep(0.1)
+                return x
+    """)
+    assert _rules(findings) == ["lock-blocking-call"]
+    assert findings[0].scope.endswith("C.bad")
+
+
+def test_lock_rule_flags_callback_registration_under_lock():
+    findings, _ = _findings("""
+        import threading
+        from concurrent.futures import ThreadPoolExecutor
+
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._exec = ThreadPoolExecutor(1)
+
+            def bad(self, fn, cb):
+                with self._lock:
+                    fut = self._exec.submit(fn)
+                    fut.add_done_callback(cb)
+                return fut
+
+            def good(self, fn, cb):
+                with self._lock:
+                    fut = self._exec.submit(fn)
+                fut.add_done_callback(cb)
+                return fut
+    """)
+    assert _rules(findings) == ["lock-callback-under-lock"]
+    assert "add_done_callback" in findings[0].message
+
+
+def test_lock_rule_allows_condition_wait_on_backing_lock_only():
+    findings, _ = _findings("""
+        import threading
+
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition(self._lock)
+                self._evt = threading.Event()
+
+            def ok(self):
+                with self._cv:
+                    self._cv.wait_for(lambda: True, 0.1)
+
+            def bad(self):
+                with self._lock:
+                    self._evt.wait(0.1)
+    """)
+    assert _rules(findings) == ["lock-blocking-call"]
+    assert findings[0].scope.endswith("C.bad")
+
+
+def test_lock_rule_detects_order_cycle_and_reentry():
+    findings, _ = _findings("""
+        import threading
+
+
+        class C:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def fwd(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def bwd(self):
+                with self._b:
+                    with self._a:
+                        pass
+
+            def again(self):
+                with self._a:
+                    with self._a:
+                        pass
+    """)
+    assert _rules(findings) == ["lock-order-cycle", "lock-order-cycle"]
+
+
+def test_lock_rule_consistent_order_and_rlock_reentry_are_clean():
+    findings, _ = _findings("""
+        import threading
+
+
+        class C:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+                self._r = threading.RLock()
+
+            def fwd(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def fwd2(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def again(self):
+                with self._r:
+                    with self._r:
+                        pass
+    """)
+    assert findings == []
+
+
+# -------------------------------------------------------------------------
+# rule units: bounded memory
+# -------------------------------------------------------------------------
+BOUNDED_TMPL = """
+    import collections
+
+
+    class Hot:
+        def __init__(self):
+            self.buf = {init}
+
+        def step(self, item):
+            {grow}
+"""
+
+
+def test_bounded_rule_flags_hot_path_append():
+    findings, _ = _findings(BOUNDED_TMPL.format(
+        init="[]", grow="self.buf.append(item)"))
+    assert _rules(findings) == ["unbounded-growth"]
+
+
+def test_bounded_rule_accepts_deque_maxlen_and_trims():
+    findings, _ = _findings(BOUNDED_TMPL.format(
+        init="collections.deque(maxlen=64)",
+        grow="self.buf.append(item)"))
+    assert findings == []
+    findings, _ = _findings("""
+        class Hot:
+            def __init__(self):
+                self.buf = []
+
+            def step(self, item):
+                self.buf.append(item)
+                del self.buf[:-64]
+    """)
+    assert findings == []
+
+
+def test_bounded_rule_honors_bounded_by_annotation():
+    findings, _ = _findings("""
+        class Hot:
+            def __init__(self):
+                # lint: bounded-by(one entry per shard, fixed at deploy)
+                self.buf = []
+
+            def step(self, item):
+                self.buf.append(item)
+    """)
+    assert findings == []
+
+
+def test_bounded_rule_ignores_cold_paths():
+    findings, _ = _findings(
+        BOUNDED_TMPL.format(init="[]", grow="self.buf.append(item)"),
+        relpath="src/repro/build/snippet.py")
+    assert findings == []
+
+
+# -------------------------------------------------------------------------
+# rule units: determinism
+# -------------------------------------------------------------------------
+def test_determinism_rules_flag_global_unseeded_and_clock_rngs():
+    findings, _ = _findings("""
+        import random
+        import time
+
+        import numpy as np
+
+
+        def noisy():
+            a = np.random.normal(size=3)
+            g = np.random.default_rng()
+            h = np.random.default_rng(time.time_ns())
+            b = random.random()
+            return a, g, h, b
+    """)
+    assert _rules(findings) == ["clock-seed", "global-rng", "global-rng",
+                                "unseeded-rng"]
+
+
+def test_determinism_rules_accept_seeded_generators():
+    findings, _ = _findings("""
+        import numpy as np
+
+
+        def clean(seed):
+            g = np.random.default_rng(seed)
+            h = np.random.default_rng(np.random.SeedSequence(7))
+            return g.normal(size=3) + h.normal(size=3)
+    """)
+    assert findings == []
+
+
+# -------------------------------------------------------------------------
+# rule units: jit hazards
+# -------------------------------------------------------------------------
+def test_jit_rules_flag_host_sync_and_traced_branch():
+    findings, _ = _findings("""
+        import jax
+        import numpy as np
+
+
+        @jax.jit
+        def bad(x):
+            if x > 0:
+                return float(x)
+            return np.asarray(x)
+
+
+        @jax.jit
+        def shape_ok(x):
+            if x.ndim > 2:
+                return x.sum()
+            return x
+    """)
+    assert _rules(findings) == ["jit-host-sync", "jit-host-sync",
+                                "jit-python-branch"]
+
+
+def test_jit_rules_treat_static_argnames_as_python_values():
+    findings, _ = _findings("""
+        import functools
+
+        import jax
+
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def topk_pad(x, k):
+            if k > 8:
+                k = 8
+            return x[:k]
+    """)
+    assert findings == []
+
+
+# -------------------------------------------------------------------------
+# waivers and baseline
+# -------------------------------------------------------------------------
+def test_inline_waiver_moves_finding_out_of_new():
+    findings, fm = _findings("""
+        import threading
+        import time
+
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def bad(self):
+                with self._lock:
+                    # lint: waive[lock-blocking-call] test-only pause
+                    time.sleep(0.001)
+    """)
+    assert _rules(findings) == ["lock-blocking-call"]
+    new, waived, baselined = lint_mod.split_findings(findings, [fm], set())
+    assert new == [] and len(waived) == 1 and baselined == []
+
+
+def test_baseline_key_survives_line_drift():
+    findings, fm = _findings(BOUNDED_TMPL.format(
+        init="[]", grow="self.buf.append(item)"))
+    baseline = {f.key for f in findings}
+    # same file with a comment pushed in above: line numbers move, the
+    # (rule, path, scope, normalized source) key does not
+    shifted, fm2 = _findings(
+        "# a leading comment\n# another\n" + textwrap.dedent(
+            BOUNDED_TMPL.format(init="[]", grow="self.buf.append(item)")))
+    assert [f.line for f in shifted] != [f.line for f in findings]
+    new, _, baselined = lint_mod.split_findings(shifted, [fm2], baseline)
+    assert new == [] and len(baselined) == 1
+
+
+# -------------------------------------------------------------------------
+# runtime lockcheck: the instrumented companion
+# -------------------------------------------------------------------------
+def test_lockcheck_records_runtime_lock_order_cycle():
+    from repro.analysis.fixtures.bad_lock_cycle import LockCycle
+    with LockCheck() as lc:
+        c = LockCycle()
+        c.forward()
+        c.backward()     # single-threaded, so no deadlock — but the
+    #                      conflicting order is recorded either way
+    assert lc.wrapped >= 2
+    cyc = lc.find_cycle()
+    assert cyc is not None and len(cyc) == 2
+    with pytest.raises(AssertionError, match="lock-order cycle"):
+        lc.assert_acyclic()
+
+
+def test_lockcheck_passes_the_clean_twin():
+    from repro.analysis.fixtures.good_clean import CleanAuditor
+    with LockCheck() as lc:
+        aud = CleanAuditor()
+        fut = aud.submit_audit(lambda: 41)
+        assert fut.result(timeout=10.0) == 41
+        aud.wait_done(timeout=0.05)    # Condition.wait_for on CheckedLock
+        aud._exec.shutdown(wait=True)
+    assert lc.acquisitions > 0
+    assert lc.submits_under_lock()        # evidence recorded...
+    assert not lc.callbacks_under_lock()  # ...but no PR 9 event
+    lc.verify()                           # default policy: clean
+
+
+def test_pr9_deadlock_class_static_and_runtime_agree():
+    """ISSUE acceptance: the PR 9 fixture is flagged by the static
+    checker AND caught by the runtime lockcheck in the same test run."""
+    fixtures = str(ROOT / "src" / "repro" / "analysis" / "fixtures")
+    findings, _ = lint_mod.scan([fixtures], include_fixtures=True)
+    static_hits = [f for f in findings
+                   if f.rule == "lock-callback-under-lock"
+                   and f.path.endswith("bad_callback_under_lock.py")]
+    assert static_hits and static_hits[0].scope.endswith("submit_audit")
+
+    from repro.analysis.fixtures.bad_callback_under_lock import ShadowAuditor
+    gate = threading.Event()
+    with LockCheck() as lc:
+        aud = ShadowAuditor()
+        # the audit fn blocks on the gate, so the future is still pending
+        # when add_done_callback registers — the registration is recorded
+        # without actually tripping the inline-callback deadlock
+        fut = aud.submit_audit(gate.wait, 30)
+    gate.set()
+    assert fut.result(timeout=10.0)
+    aud._exec.shutdown(wait=True)
+
+    events = lc.callbacks_under_lock()
+    assert events, "runtime checker missed the registration-under-lock"
+    kind, held, site, _ = events[0]
+    assert kind == "add_done_callback" and held
+    assert "bad_callback_under_lock" in site
+    with pytest.raises(AssertionError, match="PR 9 deadlock class"):
+        lc.verify()
+
+
+# -------------------------------------------------------------------------
+# satellite (b): fabric mode rejects an explicit q8 tier
+# -------------------------------------------------------------------------
+def test_fabric_rejects_explicit_q8_tier():
+    from repro.launch import serve
+    args = types.SimpleNamespace(tier="q8", shards=4)
+    with pytest.raises(ValueError) as ei:
+        serve.run_fabric(args)
+    msg = str(ei.value)
+    assert msg == serve.FABRIC_TIER_ERROR
+    assert "--tier q8 is not supported in fabric mode" in msg
+    assert "--shards 0" in msg
+
+
+# -------------------------------------------------------------------------
+# satellite (c): seeded multithreaded stress drill under lockcheck
+# -------------------------------------------------------------------------
+def test_stress_drain_races_updates_and_swap_under_lockcheck(
+        lockcheck, small_corpus, tmp_path):
+    """Live searchers + an update lane + a mid-flight rebuild/swap, then
+    ``stop(drain=True)`` racing a just-queued update batch — all with
+    every repro-constructed lock instrumented.  The ``lockcheck``
+    fixture re-verifies at teardown; the strict contract (acyclic, no
+    callback-under-lock, no submit-under-lock) is asserted here too so
+    a violation prints its evidence."""
+    import time
+
+    from repro.build.kmeans import balanced_hierarchical_kmeans
+    from repro.core.search import SearchConfig
+    from repro.lifecycle import (CorpusStore, LiveFreshState, RebuildPolicy,
+                                 RebuildScheduler, UpdateLane, VersionManager,
+                                 delta_build)
+    from repro.runtime import (BatchPolicy, DynamicBatcher, PrefetchPipeline,
+                               ServeEngine)
+    from repro.storage import TieredPostings
+
+    x, q, _ = small_corpus
+    cfg = SearchConfig(k=5, nprobe_max=8, pruning="none", use_kernel=False,
+                       fused_topk=True)
+    wd = str(tmp_path)
+    cents, _ = balanced_hierarchical_kmeans(x, max_cluster_size=48, iters=8)
+    corpus = CorpusStore(x)
+    index, _ = delta_build(corpus.view(), cents, wd, cluster_len=64,
+                           eps=0.2, max_replicas=4, per_task=1000)
+    # everything lock-bearing is constructed HERE, inside the
+    # instrumented window (see the lockcheck fixture docstring)
+    st = LiveFreshState(dim=x.shape[1], capacity=64, n_main=corpus.n)
+    lane = UpdateLane(st)
+
+    def mk(index, state):
+        tier = TieredPostings(np.asarray(index.postings),
+                              np.asarray(index.posting_ids))
+        p = PrefetchPipeline(index, None, cfg, tier=tier, pad_batch=8,
+                             row_bucket=32, fresh_source=state.snapshot)
+        p.warmup(batch_sizes=(8,))
+        return p
+
+    pipe = mk(index, st)
+    vm = VersionManager()
+    ep0 = vm.deploy("idx", pipe, fresh=st)
+    batcher = DynamicBatcher(
+        BatchPolicy(max_batch=16, max_wait_s=0.002, pad=8,
+                    update_quantum=4), ["idx"])
+    eng = ServeEngine({"idx": pipe}, batcher, update_lanes={"idx": lane})
+    vm.bind(eng)
+    sched = RebuildScheduler(
+        name="idx", corpus=corpus, centroids=cents, workdir=wd, lane=lane,
+        versions=vm, make_pipeline=mk, cluster_len=64,
+        policy=RebuildPolicy(delta_fill_frac=0.9, per_task=1000))
+
+    stop_updates = threading.Event()
+    errs = []
+
+    def searcher(seed):
+        r = np.random.default_rng(seed)
+        try:
+            for _ in range(48):
+                eng.submit(q[int(r.integers(0, q.shape[0]))], 5, index="idx")
+                time.sleep(float(r.uniform(0.0, 0.002)))
+        except Exception as e:                      # pragma: no cover
+            errs.append(repr(e))
+
+    def updater(seed):
+        r = np.random.default_rng(seed)
+        try:
+            for _ in range(8):
+                if stop_updates.is_set():
+                    break
+                vecs = r.normal(loc=6.0,
+                                size=(3, x.shape[1])).astype(np.float32)
+                lane.submit_insert(vecs, block=False)
+                lane.submit_delete(
+                    np.asarray([int(r.integers(0, x.shape[0]))]),
+                    block=False)
+                time.sleep(float(r.uniform(0.0, 0.003)))
+        except Exception as e:                      # pragma: no cover
+            errs.append(repr(e))
+
+    threads = [threading.Thread(target=searcher, args=(101,), name="s0"),
+               threading.Thread(target=searcher, args=(202,), name="s1"),
+               threading.Thread(target=updater, args=(303,), name="u0")]
+    eng.start()
+    try:
+        for t in threads:
+            t.start()
+        time.sleep(0.02)          # traffic + updates genuinely in the air
+        rep = sched.rebuild_and_swap(trigger="stress")
+        assert rep is not None
+        stop_updates.set()
+        for t in threads:
+            t.join(timeout=30)
+        assert not any(t.is_alive() for t in threads)
+        # one final update batch queued right before the drain: stop()
+        # must race the lane and still retire everything admitted
+        lane.submit_insert(np.full((2, x.shape[1]), 5.5, np.float32),
+                           block=False)
+    finally:
+        stop_updates.set()
+        eng.stop(drain=True)
+    assert ep0.finalized.wait(5)
+    assert not errs, errs
+    s = eng.stats
+    assert s.completed == s.submitted       # zero dropped across the drill
+    assert lockcheck.wrapped > 0 and lockcheck.acquisitions > 0
+    assert lockcheck.find_cycle() is None, sorted(lockcheck.edges)
+    assert lockcheck.callbacks_under_lock() == []
+    assert lockcheck.submits_under_lock() == []

@@ -357,6 +357,37 @@ def test_nearest_centroid_fallback_matches_explicit_cids():
     assert dm1.shifts()[1] > 0.9 and dm1.shifts()[0] == 0.0
 
 
+def test_drift_severity_weighs_shift_by_assign_mass():
+    """Advisory ranking: a fully-shifted cluster absorbing 3x the insert
+    mass outranks an equally-shifted low-mass one, deterministically."""
+    dm = _drift_monitor()
+    v0 = (np.array([2.0, 0.0]) + np.zeros((40, 2))).astype(np.float32)
+    v1 = (np.array([10.0, 12.0]) + np.zeros((120, 2))).astype(np.float32)
+    dm.observe(v0)
+    dm.observe(v1)
+    s, sev = dm.shifts(), dm.severity()
+    assert s[0] > 0.9 and s[1] > 0.9           # both fully one-sided...
+    np.testing.assert_allclose(sev, s * np.array([40, 120]) / 160.0)
+    assert sev[1] > sev[0]                     # ...mass breaks the tie
+    top = dm.summary()["top"]
+    assert top[0]["cluster"] == 1
+    assert top[0]["severity"] == pytest.approx(float(sev[1]))
+    assert [t["cluster"] for t in top] == [1, 0]
+    # identical streams rank identically (lexsort, not bare argsort)
+    dm2 = _drift_monitor()
+    dm2.observe(v0)
+    dm2.observe(v1)
+    assert [t["cluster"] for t in dm2.summary()["top"]] == [1, 0]
+    # exact severity tie: ascending cluster id decides
+    dm3 = _drift_monitor()
+    dm3.observe((np.array([2.0, 0.0]) + np.zeros((64, 2))).astype(np.float32))
+    dm3.observe((np.array([10.0, 12.0]) +
+                 np.zeros((64, 2))).astype(np.float32))
+    sev3 = dm3.severity()
+    assert sev3[0] == sev3[1]
+    assert [t["cluster"] for t in dm3.summary()["top"]] == [0, 1]
+
+
 def test_scheduler_due_surfaces_drift_advisory():
     from repro.lifecycle import RebuildScheduler
     from repro.lifecycle.rebuild import RebuildPolicy
